@@ -1,0 +1,84 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline markdown tables from
+artifacts/dryrun/*.json (regenerate after any sweep)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load():
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACTS, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "—"
+    return f"{b/2**30:.2f}"
+
+
+def dryrun_table(rows):
+    out = ["| arch | shape | mesh | compile(s) | peak GiB/dev | HLO flops/dev | coll bytes/dev | #coll |",
+           "|---|---|---|---:|---:|---:|---:|---:|"]
+    for r in rows:
+        if r.get("opts", "base") != "base" or r["status"] != "ok":
+            continue
+        rf = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['compile_s']:.1f} "
+            f"| {fmt_bytes(r['memory'].get('peak_bytes'))} "
+            f"| {rf['flops']:.2e} | {rf['collective_bytes']:.2e} "
+            f"| {rf['n_collectives']} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows, mesh="16x16"):
+    out = [("| arch | shape | t_compute(s) | t_memory(s) | t_collective(s) | "
+            "bound | frac | useful | next move |"),
+           "|---|---|---:|---:|---:|---|---:|---:|---|"]
+    moves = {
+        ("compute",): "raise arithmetic intensity / cut redundant compute",
+        ("memory",): "bigger flash blocks; Pallas kernel keeps acc in VMEM",
+        ("collective",): "fewer/batched exchanges (fabric), compression",
+    }
+    for r in rows:
+        if r.get("opts", "base") != "base" or r["status"] != "ok" \
+                or r["mesh"] != mesh:
+            continue
+        rf = r["roofline"]
+        t = (rf["t_compute_s"], rf["t_memory_s"], rf["t_collective_s"])
+        s = sum(t)
+        frac = max(t) / s if s else 0
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {t[0]:.3f} | {t[1]:.3f} "
+            f"| {t[2]:.3f} | {rf['bottleneck']} | {frac:.2f} "
+            f"| {r.get('useful_flops_ratio') or 0:.3f} "
+            f"| {moves[(rf['bottleneck'],)]} |")
+    return "\n".join(out)
+
+
+def skips():
+    out = []
+    from repro.configs import all_cells
+    for arch, shape, ok, why in all_cells():
+        if not ok:
+            out.append(f"- `{arch}` × `{shape.name}`: {why}")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    rows = load()
+    print("## Dry-run table\n")
+    print(dryrun_table(rows))
+    print("\n## Roofline (single-pod)\n")
+    print(roofline_table(rows, "16x16"))
+    print("\n## Roofline (multi-pod)\n")
+    print(roofline_table(rows, "2x16x16"))
+    print("\n## Skips\n")
+    print(skips())

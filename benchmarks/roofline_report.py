@@ -1,0 +1,65 @@
+"""Roofline report: aggregates artifacts/dryrun/*.json into the per-cell
+three-term table (EXPERIMENTS.md §Roofline).
+
+Run the dry-run first:  PYTHONPATH=src python -m repro.launch.dryrun --both-meshes
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load(mesh: str = None) -> List[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACTS, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("status") != "ok":
+            continue
+        if mesh and r["mesh"] != mesh:
+            continue
+        rows.append(r)
+    return rows
+
+
+def fmt_row(r: dict) -> str:
+    rf = r["roofline"]
+    t = (rf["t_compute_s"], rf["t_memory_s"], rf["t_collective_s"])
+    tb = max(t)
+    frac = tb / sum(t) if sum(t) else 0
+    useful = r.get("useful_flops_ratio") or 0
+    peak = (r["memory"].get("peak_bytes") or 0) / 2 ** 30
+    tag = r.get("opts", "base")
+    return (f"{r['arch']:<24}{r['shape']:<13}{r['mesh']:<9}{tag:<30}"
+            f"{t[0]:>10.3f} {t[1]:>10.3f} {t[2]:>10.3f}  "
+            f"{rf['bottleneck']:<11}{frac:>5.2f} {useful:>7.3f} {peak:>7.2f}")
+
+
+def main():
+    rows = load()
+    if not rows:
+        print("no artifacts — run the dry-run first")
+        return
+    hdr = (f"{'arch':<24}{'shape':<13}{'mesh':<9}{'opts':<30}"
+           f"{'t_comp(s)':>10} {'t_mem(s)':>10} {'t_coll(s)':>10}  "
+           f"{'bound':<11}{'frac':>5} {'useful':>7} {'GiB/dev':>7}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in sorted(rows, key=lambda r: (r["mesh"], r["arch"], r["shape"])):
+        print(fmt_row(r))
+    print()
+    print("bench,case,us_per_call,derived")
+    for r in rows:
+        rf = r["roofline"]
+        tb = max(rf["t_compute_s"], rf["t_memory_s"], rf["t_collective_s"])
+        tag = r.get("opts", "base")
+        print(f"roofline,{r['arch']}__{r['shape']}__{r['mesh']}__{tag},"
+              f"{tb*1e6:.1f},{rf['bottleneck']}")
+
+
+if __name__ == "__main__":
+    main()

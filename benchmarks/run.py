@@ -1,0 +1,39 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness entry point.
+
+  table1/fig1-3  — benchmarks/ipc_wordcount.py: the paper's word-count IPC
+                   comparison across the five transports + claim validation
+  tableX         — benchmarks/kernel_bench.py: guarded copy vs plain copy
+                   (the "security rides the copy" comparative analysis §VIII-A)
+                   + attention / SSD kernel twins
+  roofline       — benchmarks/roofline_report.py: per-cell roofline terms
+                   from the dry-run artifacts (if present)
+
+``python -m benchmarks.run [--full]``
+"""
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="word-count sweep to 1e8 words (paper endpoint)")
+    ap.add_argument("--skip-ipc", action="store_true")
+    args = ap.parse_args()
+
+    print("# === ipc_wordcount (paper Figs 1-3, Table I) ===")
+    if not args.skip_ipc:
+        from benchmarks import ipc_wordcount
+        ipc_wordcount.main(full=args.full)
+    print()
+    print("# === kernel_bench (paper §VIII-A comparative analysis) ===")
+    from benchmarks import kernel_bench
+    kernel_bench.main()
+    print()
+    print("# === roofline (dry-run artifacts) ===")
+    from benchmarks import roofline_report
+    roofline_report.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""End-to-end training driver: a smollm-family model trained for a few
+hundred steps with the full production loop — microbatched steps, cosine
+schedule, async checkpointing, an injected mid-run failure with automatic
+restart, and straggler telemetry.
+
+Model size scales with --width (CPU default ≈ 2M params so 300 steps finish
+in minutes on one core; --width 960 --layers 32 is the real smollm-360m,
+which is what the 512-device dry-run lowers).
+
+PYTHONPATH=src python examples/train_e2e.py --steps 300
+"""
+import argparse
+import tempfile
+
+import numpy as np
+
+from repro.configs import OptimizerConfig, TrainConfig
+from repro.configs.base import ModelConfig
+from repro.models.transformer import Impl
+from repro.runtime import FailureInjector, Trainer
+
+
+def build_config(width: int, layers: int) -> ModelConfig:
+    heads = max(2, width // 64)
+    return ModelConfig(
+        name=f"smollm-e2e-{width}x{layers}",
+        family="dense",
+        num_layers=layers,
+        d_model=width,
+        num_heads=heads,
+        num_kv_heads=max(1, heads // 3),
+        head_dim=width // heads,
+        d_ff=width * 8 // 3 // 16 * 16 or 64,
+        vocab_size=2048,
+        tie_embeddings=True,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--width", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--fail-at", type=int, default=0,
+                    help="inject a worker failure at this step (0 = off)")
+    args = ap.parse_args()
+
+    cfg = build_config(args.width, args.layers)
+    n_params = cfg.param_count()
+    print(f"model: {cfg.name}  ({n_params/1e6:.1f}M params)")
+
+    tcfg = TrainConfig(
+        microbatch_size=max(1, args.batch // 2),
+        dtype="float32",
+        optimizer=OptimizerConfig(lr=3e-3, warmup_steps=20,
+                                  total_steps=args.steps, weight_decay=0.01),
+        log_every=10, checkpoint_every=50, keep_checkpoints=2)
+
+    injector = FailureInjector(
+        {args.fail_at: ["host1"]} if args.fail_at else {})
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        trainer = Trainer(cfg, tcfg, global_batch=args.batch, seq_len=args.seq,
+                          checkpoint_dir=ckpt_dir,
+                          impl=Impl(attention="chunked", q_chunk=64,
+                                    kv_chunk=64, remat=False),
+                          workers=[f"host{i}" for i in range(4)],
+                          injector=injector)
+        report = trainer.run(args.steps)
+
+    first = np.mean(report.losses[:10])
+    last = np.mean(report.losses[-10:])
+    print(f"\nsteps run          : {report.steps_run}")
+    print(f"restarts           : {report.restarts}")
+    print(f"stragglers flagged : {report.stragglers}")
+    print(f"loss               : {first:.4f} → {last:.4f} "
+          f"({'IMPROVED' if last < first else 'NO IMPROVEMENT'})")
+    for e in report.events:
+        print("event:", e)
+    assert last < first, "training failed to reduce loss"
+    print("train_e2e OK")
+
+
+if __name__ == "__main__":
+    main()

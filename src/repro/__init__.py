@@ -1,0 +1,7 @@
+"""MPKLink-TPU: protected shared-buffer communication for JAX training &
+serving — a production-grade reproduction + TPU adaptation of
+"Optimizing Intra-Container Communication with Memory Protection Keys"
+(CS.DC 2025). See DESIGN.md for the architecture and EXPERIMENTS.md for
+the measured results."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,21 @@
+# MPKLink — the paper's primary contribution: protected shared-buffer
+# communication for co-located peers. domains.py = software pkey/PKRU,
+# framing/signature/ca = message auth + identity, transports.py = the
+# measurable CPU reproduction of the paper's IPC zoo, fabric.py = the
+# distributed (mesh) incarnation used by the training/serving stack.
+from repro.core import ca, domains, framing, signature, transports, wordcount
+from repro.core.domains import (AccessViolation, DomainKey, KeyRegistry,
+                                ProtectionDomain, READ, RW, WRITE, mac_seed)
+
+TRANSPORTS = {
+    "pipe": transports.PipeTransport,
+    "uds": transports.UDSTransport,
+    "shm": transports.ShmTransport,
+    "grpc_sim": transports.GrpcSimTransport,
+    "mpklink": transports.MPKLinkTransport,
+    "mpklink_opt": transports.MPKLinkOptTransport,
+}
+
+__all__ = ["ca", "domains", "framing", "signature", "transports", "wordcount",
+           "AccessViolation", "DomainKey", "KeyRegistry", "ProtectionDomain",
+           "READ", "RW", "WRITE", "mac_seed", "TRANSPORTS"]

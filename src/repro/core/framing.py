@@ -1,0 +1,106 @@
+"""Message framing for MPKLink channels.
+
+A frame is a uint32 matrix of 128 lanes (the TPU-native layout the guard
+kernel consumes):
+
+  row 0   — header: [MAGIC, seed, seq, nbytes, dtype_code, ndim,
+                     shape[0..3], mac, 0...]
+  rows 1+ — payload: raw bytes viewed as little-endian uint32, zero-padded
+            to a whole number of 128-lane rows.
+
+The MAC in the header is the Horner hash of the payload rows seeded with
+``seed = domain.tag ⊕ epoch-mix ⊕ session`` (see domains.mac_seed and
+ca.session_seed) — so a frame is only verifiable by a peer holding the same
+domain key *and* session identity, at the current epoch. That single uint32
+check is where MPK access control and the paper's per-message signature
+collapse into one fused operation on-device.
+
+Works on both numpy (host transports) and jnp (device fabric) arrays.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import numpy as np
+
+MAGIC = 0x4D504B4C            # "MPKL"
+LANES = 128
+
+_DTYPES = {0: np.float32, 1: np.int32, 2: np.uint32, 3: np.uint8,
+           4: np.dtype("<f8"), 5: np.int64, 6: np.uint16}
+_DTYPE_CODES = {np.dtype(v): k for k, v in _DTYPES.items()}
+
+
+class FrameError(ValueError):
+    pass
+
+
+def _mac_np(payload_u32: np.ndarray, seed: int) -> int:
+    """Host twin of kernels.ref.mac_ref (same constants, same fold)."""
+    from repro.kernels.ref import MAC_PRIME, MAC_INIT, _FOLD_POWERS
+    h = np.full(LANES, MAC_INIT, np.uint64)
+    h = (h + np.uint64(seed & 0xFFFFFFFF)) & 0xFFFFFFFF
+    for row in payload_u32:
+        h = (h * MAC_PRIME + row.astype(np.uint64)) & 0xFFFFFFFF
+    return int((h * _FOLD_POWERS.astype(np.uint64)).sum() & 0xFFFFFFFF)
+
+
+def pack_payload(arr: np.ndarray) -> Tuple[np.ndarray, dict]:
+    """array → ((rows, 128) uint32, meta). Zero-pads to lane multiples."""
+    arr = np.ascontiguousarray(arr)
+    if arr.dtype not in _DTYPE_CODES:
+        raise FrameError(f"unsupported dtype {arr.dtype}")
+    raw = arr.view(np.uint8).reshape(-1)
+    pad = (-raw.size) % (LANES * 4)
+    if pad:
+        raw = np.concatenate([raw, np.zeros(pad, np.uint8)])
+    u32 = raw.view("<u4").reshape(-1, LANES)
+    meta = {"dtype_code": _DTYPE_CODES[arr.dtype], "nbytes": arr.nbytes,
+            "shape": tuple(arr.shape)}
+    return u32, meta
+
+
+def unpack_payload(payload_u32: np.ndarray, meta: dict) -> np.ndarray:
+    raw = np.ascontiguousarray(payload_u32).view(np.uint8).reshape(-1)
+    raw = raw[: meta["nbytes"]]
+    return raw.view(_DTYPES[meta["dtype_code"]]).reshape(meta["shape"])
+
+
+def build_frame(arr: np.ndarray, *, seed: int, seq: int, mac_impl=None) -> np.ndarray:
+    """array → full frame (header row + payload rows) uint32."""
+    payload, meta = pack_payload(arr)
+    shape = list(meta["shape"])[:4] + [0] * (4 - min(4, len(meta["shape"])))
+    if len(meta["shape"]) > 4:
+        raise FrameError("rank > 4 payloads unsupported by frame header")
+    mac = (mac_impl or _mac_np)(payload, seed)
+    header = np.zeros(LANES, np.uint32)
+    header[:10] = [MAGIC, seed & 0xFFFFFFFF, seq & 0xFFFFFFFF,
+                   meta["nbytes"] & 0xFFFFFFFF, meta["dtype_code"],
+                   len(meta["shape"]), *[s & 0xFFFFFFFF for s in shape]]
+    header[11] = mac
+    return np.concatenate([header[None], payload], axis=0)
+
+
+def parse_frame(frame: np.ndarray, *, seed: int, expect_seq=None, mac_impl=None) -> np.ndarray:
+    """Verify magic, seed, seq, MAC; return the payload array.
+    Raises FrameError on any mismatch — this is the receive-side guard."""
+    header, payload = frame[0], frame[1:]
+    if int(header[0]) != MAGIC:
+        raise FrameError("bad magic — not an MPKLink frame")
+    if int(header[1]) != (seed & 0xFFFFFFFF):
+        raise FrameError("seed mismatch — wrong domain key, session or epoch")
+    if expect_seq is not None and int(header[2]) != (expect_seq & 0xFFFFFFFF):
+        raise FrameError(f"sequence mismatch (got {int(header[2])}, want {expect_seq})")
+    mac = (mac_impl or _mac_np)(payload, seed)
+    if mac != int(header[11]):
+        raise FrameError("MAC mismatch — payload tampered or truncated")
+    ndim = int(header[5])
+    meta = {"dtype_code": int(header[4]), "nbytes": int(header[3]),
+            "shape": tuple(int(s) for s in header[6:6 + ndim])}
+    return unpack_payload(payload, meta)
+
+
+def frame_rows(nbytes: int) -> int:
+    """Total frame rows (header + payload) for an nbytes message."""
+    return 1 + (nbytes + LANES * 4 - 1) // (LANES * 4)

@@ -1,0 +1,511 @@
+"""The paper's IPC transport zoo, reproduced measurably on CPU (§VI).
+
+Two "microservices" run as threads of one master process (exactly the
+paper's final design — their separate-process attempt segfaulted, §VI) and
+exchange a request/response through one of:
+
+  pipe        two unidirectional OS pipes (the named-pipe setup of §VI;
+              anonymous pipes share the same kernel FIFO path, minus the
+              filesystem name)
+  uds         one bidirectional AF_UNIX stream socket pair
+  shm         two raw shared-memory regions (req/resp) with metadata
+              signalling and a FIXED capacity — faithfully fails for large
+              payloads like the paper's baseline (incapable ≥100k words)
+  grpc_sim    the REST/gRPC stand-in: msgpack serialization (protobuf
+              analogue) + HTTP/2-style 9-byte frame headers per 16 KiB DATA
+              frame + a 64 KiB flow-control window with WINDOW_UPDATE acks
+  mpklink     shared memory region + MPK emulation: per-chunk PKRU
+              synchronization ping-pong between the threads (the paper's
+              key-sync overhead — the large-payload cliff), domain-seeded
+              MAC over the message, CA-verified endpoints
+  mpklink_opt beyond-paper: ONE key sync per message (batched epoch),
+              vectorized MAC — the cliff removed (EXPERIMENTS.md §Perf)
+
+Adaptation notes (single-core container):
+  * the paper polls shared metadata; busy-spin on one core inverts results,
+    so signalling uses threading.Event — the *count* of synchronization
+    round-trips per message is preserved exactly, which is what produces
+    the paper's scaling behaviour;
+  * thread-based + anonymous buffers mirrors the paper's single-process
+    mmap design.
+"""
+from __future__ import annotations
+
+import os
+import socket
+import struct
+import threading
+import time
+from typing import Callable, Optional
+
+import msgpack
+import numpy as np
+
+from repro.core import framing
+from repro.core.ca import CertificateAuthority, enroll
+from repro.core.domains import KeyRegistry, READ, WRITE, RW, mac_seed
+from repro.kernels.ref import MAC_PRIME, MAC_INIT, _FOLD_POWERS
+
+Handler = Callable[[np.ndarray], np.ndarray]
+
+
+class TransportError(RuntimeError):
+    pass
+
+
+class CapacityError(TransportError):
+    """Raised when a fixed-capacity transport cannot hold the payload."""
+
+
+# ---------------------------------------------------------------------------
+# fast MAC (vectorized twin of framing._mac_np — bit-identical)
+# ---------------------------------------------------------------------------
+
+def fast_mac(payload_u32: np.ndarray, seed: int, block_rows: int = 65536) -> int:
+    """Horner hash over rows, vectorized: h_n = INIT·P^n + Σ row_r·P^(n-1-r).
+    uint64 wraparound keeps the low 32 bits exact (2^32 | 2^64).
+    Bit-identical to framing._mac_np (tests/test_framing.py asserts it)."""
+    n = payload_u32.shape[0]
+    h = (np.full(framing.LANES, MAC_INIT, np.uint64) + np.uint64(seed & 0xFFFFFFFF))
+    with np.errstate(over="ignore"):
+        for s in range(0, n, block_rows):
+            blk = payload_u32[s:s + block_rows].astype(np.uint64)
+            m = blk.shape[0]
+            # pw = [P^(m-1), ..., P, 1]
+            pw = np.full(m, MAC_PRIME, np.uint64)
+            pw[0] = 1
+            pw = np.cumprod(pw)[::-1]
+            p_m = np.uint64((int(pw[0]) * MAC_PRIME) & 0xFFFFFFFFFFFFFFFF)  # P^m
+            h = (h * p_m + (blk * pw[:, None]).sum(axis=0, dtype=np.uint64)) \
+                & np.uint64(0xFFFFFFFF)
+    return int((h * _FOLD_POWERS.astype(np.uint64)).sum(dtype=np.uint64)
+               & np.uint64(0xFFFFFFFF))
+
+
+# ---------------------------------------------------------------------------
+# base: request/response over a byte stream
+# ---------------------------------------------------------------------------
+
+_LEN = struct.Struct("<Q")
+
+
+def _write_fd(fd: int, data: memoryview):
+    while data:
+        n = os.write(fd, data[: 1 << 20])
+        data = data[n:]
+
+
+def _read_fd(fd: int, n: int) -> bytearray:
+    buf = bytearray(n)
+    view = memoryview(buf)
+    got = 0
+    while got < n:
+        chunk = os.read(fd, min(n - got, 1 << 20))
+        if not chunk:
+            raise TransportError("pipe closed")
+        view[got:got + len(chunk)] = chunk
+        got += len(chunk)
+    return buf
+
+
+class _ThreadServer:
+    """Runs handler requests on a dedicated 'microservice' thread."""
+
+    def __init__(self, handler: Handler):
+        self.handler = handler
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+
+    def start(self):
+        self._thread = threading.Thread(target=self._serve, daemon=True)
+        self._thread.start()
+
+    def close(self):
+        self._stop.set()
+        self._wake()
+        if self._thread:
+            self._thread.join(timeout=5)
+
+    def _wake(self):
+        pass
+
+    def _serve(self):
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# 1. OS pipes (two unidirectional)
+# ---------------------------------------------------------------------------
+
+class PipeTransport(_ThreadServer):
+    name = "pipe"
+
+    def __init__(self, handler: Handler):
+        super().__init__(handler)
+        self._c2s = os.pipe()
+        self._s2c = os.pipe()
+
+    def _serve(self):
+        while not self._stop.is_set():
+            try:
+                n = _LEN.unpack(bytes(_read_fd(self._c2s[0], 8)))[0]
+            except TransportError:
+                return
+            if n == 0:
+                return
+            req = np.frombuffer(_read_fd(self._c2s[0], n), np.uint8)
+            resp = self.handler(req)
+            raw = resp.view(np.uint8).reshape(-1)
+            _write_fd(self._s2c[1], memoryview(_LEN.pack(raw.nbytes)))
+            _write_fd(self._s2c[1], memoryview(raw))
+
+    def _wake(self):
+        try:
+            os.write(self._c2s[1], _LEN.pack(0))
+        except OSError:
+            pass
+
+    def request(self, payload: np.ndarray) -> np.ndarray:
+        raw = payload.view(np.uint8).reshape(-1)
+        _write_fd(self._c2s[1], memoryview(_LEN.pack(raw.nbytes)))
+        _write_fd(self._c2s[1], memoryview(raw))
+        n = _LEN.unpack(bytes(_read_fd(self._s2c[0], 8)))[0]
+        return np.frombuffer(_read_fd(self._s2c[0], n), np.uint8)
+
+    def close(self):
+        super().close()
+        for fd in (*self._c2s, *self._s2c):
+            try:
+                os.close(fd)
+            except OSError:
+                pass
+
+
+# ---------------------------------------------------------------------------
+# 2. Unix domain sockets (one bidirectional)
+# ---------------------------------------------------------------------------
+
+class UDSTransport(_ThreadServer):
+    name = "uds"
+
+    def __init__(self, handler: Handler):
+        super().__init__(handler)
+        self._client, self._server = socket.socketpair(socket.AF_UNIX, socket.SOCK_STREAM)
+
+    @staticmethod
+    def _recv_exact(sock: socket.socket, n: int) -> bytearray:
+        buf = bytearray(n)
+        view = memoryview(buf)
+        got = 0
+        while got < n:
+            r = sock.recv_into(view[got:], n - got)
+            if r == 0:
+                raise TransportError("socket closed")
+            got += r
+        return buf
+
+    def _serve(self):
+        while not self._stop.is_set():
+            try:
+                n = _LEN.unpack(bytes(self._recv_exact(self._server, 8)))[0]
+            except (TransportError, OSError):
+                return
+            if n == 0:
+                return
+            req = np.frombuffer(self._recv_exact(self._server, n), np.uint8)
+            resp = self.handler(req).view(np.uint8).reshape(-1)
+            self._server.sendall(_LEN.pack(resp.nbytes))
+            self._server.sendall(resp)
+
+    def _wake(self):
+        try:
+            self._client.sendall(_LEN.pack(0))
+        except OSError:
+            pass
+
+    def request(self, payload: np.ndarray) -> np.ndarray:
+        raw = payload.view(np.uint8).reshape(-1)
+        self._client.sendall(_LEN.pack(raw.nbytes))
+        self._client.sendall(raw)
+        n = _LEN.unpack(bytes(self._recv_exact(self._client, 8)))[0]
+        return np.frombuffer(self._recv_exact(self._client, n), np.uint8)
+
+    def close(self):
+        super().close()
+        self._client.close()
+        self._server.close()
+
+
+# ---------------------------------------------------------------------------
+# 3. raw shared memory, fixed capacity (the paper's failing baseline)
+# ---------------------------------------------------------------------------
+
+class ShmTransport(_ThreadServer):
+    """Two regions (req/resp) + length words + ready events. Capacity is fixed
+    at construction — ≥capacity payloads raise CapacityError, reproducing the
+    paper's observation that baseline shm "is incapable of handling requests
+    involving 100,000 words or more"."""
+
+    name = "shm"
+    DEFAULT_CAPACITY = 512 * 1024      # ≈70k words of ~7 chars — fails at 100k
+
+    def __init__(self, handler: Handler, capacity: int = DEFAULT_CAPACITY):
+        super().__init__(handler)
+        self.capacity = capacity
+        self._req = np.zeros(capacity, np.uint8)
+        self._resp = np.zeros(capacity, np.uint8)
+        self._req_len = 0
+        self._resp_len = 0
+        self._req_ready = threading.Event()
+        self._resp_ready = threading.Event()
+
+    def _serve(self):
+        while not self._stop.is_set():
+            if not self._req_ready.wait(timeout=0.5):
+                continue
+            self._req_ready.clear()
+            if self._stop.is_set():
+                return
+            req = self._req[: self._req_len]
+            resp = self.handler(req).view(np.uint8).reshape(-1)
+            self._resp[: resp.nbytes] = resp
+            self._resp_len = resp.nbytes
+            self._resp_ready.set()
+
+    def _wake(self):
+        self._req_ready.set()
+
+    def request(self, payload: np.ndarray) -> np.ndarray:
+        raw = payload.view(np.uint8).reshape(-1)
+        if raw.nbytes > self.capacity:
+            raise CapacityError(
+                f"shm region ({self.capacity}B) cannot hold {raw.nbytes}B payload")
+        self._req[: raw.nbytes] = raw
+        self._req_len = raw.nbytes
+        self._req_ready.set()
+        self._resp_ready.wait()
+        self._resp_ready.clear()
+        return self._resp[: self._resp_len].copy()
+
+
+# ---------------------------------------------------------------------------
+# 4. gRPC simulation (serialization + HTTP/2 framing + flow control)
+# ---------------------------------------------------------------------------
+
+class GrpcSimTransport(_ThreadServer):
+    """msgpack body + 9-byte frame header per 16 KiB DATA frame + 64 KiB
+    flow-control window with WINDOW_UPDATE acks — the protocol overhead the
+    paper attributes to network-style IPC for co-located services."""
+
+    name = "grpc_sim"
+    FRAME = 16 * 1024
+    WINDOW = 64 * 1024
+    _HDR = struct.Struct("<IBI")       # length, type, stream_id
+
+    def __init__(self, handler: Handler):
+        super().__init__(handler)
+        self._client, self._server = socket.socketpair(socket.AF_UNIX, socket.SOCK_STREAM)
+        for s in (self._client, self._server):
+            s.setsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF, 1 << 20)
+
+    def _send_msg(self, sock: socket.socket, obj):
+        body = msgpack.packb(obj, use_bin_type=True)
+        sent = 0
+        credit = self.WINDOW
+        while sent < len(body):
+            if credit <= 0:                      # wait for WINDOW_UPDATE
+                hdr = UDSTransport._recv_exact(sock, self._HDR.size)
+                ln, typ, _ = self._HDR.unpack(bytes(hdr))
+                assert typ == 8, "expected WINDOW_UPDATE"
+                credit += ln
+            n = min(self.FRAME, len(body) - sent, credit)
+            sock.sendall(self._HDR.pack(n, 0, 1))
+            sock.sendall(body[sent:sent + n])
+            sent += n
+            credit -= n
+        sock.sendall(self._HDR.pack(0, 1, 1))    # END_STREAM
+
+    def _recv_msg(self, sock: socket.socket):
+        chunks = []
+        consumed = 0
+        while True:
+            hdr = UDSTransport._recv_exact(sock, self._HDR.size)
+            ln, typ, _ = self._HDR.unpack(bytes(hdr))
+            if typ == 1:
+                break
+            if typ == 8:
+                continue                          # WINDOW_UPDATE for our own
+                                                  # sends — headers only
+            chunks.append(bytes(UDSTransport._recv_exact(sock, ln)))
+            consumed += ln
+            if consumed >= self.WINDOW // 2:     # grant more window
+                sock.sendall(self._HDR.pack(consumed, 8, 1))
+                consumed = 0
+        return msgpack.unpackb(b"".join(chunks), raw=False)
+
+    def _serve(self):
+        while not self._stop.is_set():
+            try:
+                msg = self._recv_msg(self._server)
+            except (TransportError, OSError, AssertionError):
+                return
+            if msg.get("op") == "stop":
+                return
+            req = np.frombuffer(msg["data"], np.uint8)
+            resp = self.handler(req).view(np.uint8).reshape(-1)
+            self._send_msg(self._server, {"status": 0, "data": resp.tobytes()})
+
+    def _wake(self):
+        try:
+            self._send_msg(self._client, {"op": "stop"})
+        except OSError:
+            pass
+
+    def request(self, payload: np.ndarray) -> np.ndarray:
+        raw = payload.view(np.uint8).reshape(-1)
+        self._send_msg(self._client, {"op": "count", "data": raw.tobytes()})
+        resp = self._recv_msg(self._client)
+        return np.frombuffer(resp["data"], np.uint8)
+
+    def close(self):
+        super().close()
+        self._client.close()
+        self._server.close()
+
+
+# ---------------------------------------------------------------------------
+# 5. MPKLink (paper-faithful) and 6. MPKLink-opt (beyond paper)
+# ---------------------------------------------------------------------------
+
+class MPKLinkTransport(_ThreadServer):
+    """Shared region + MPK emulation (paper-faithful).
+
+    Establishment (once): both services enroll with the CA (key pairs +
+    proof-of-possession), the CA verifies certificates and grants a channel
+    domain; data-plane MAC seed = domain tag ⊕ epoch-mix ⊕ DH session key.
+
+    Per message: the payload is framed (framing.build_frame — header + MAC)
+    and moved through the region in CHUNK-sized pieces; every chunk performs
+    one PKRU synchronization round trip (writer updates the shared PKRU
+    word, reader acknowledges) — the paper's per-chunk key sync. The
+    receiver re-derives the MAC and rejects tampered/foreign frames.
+
+    ``syncs_per_message ≈ ceil(frame_bytes / chunk)`` is what produces the
+    paper's large-payload cliff; MPKLinkOptTransport batches it to 1
+    (the beyond-paper fix, EXPERIMENTS.md §Perf).
+    """
+
+    name = "mpklink"
+    CHUNK = 64 * 1024
+
+    def __init__(self, handler: Handler, chunk: Optional[int] = None,
+                 mac_impl: Callable = fast_mac):
+        super().__init__(handler)
+        self.chunk = chunk or self.CHUNK
+        self._mac = mac_impl
+        # --- control plane: CA handshake -----------------------------------
+        self.registry = KeyRegistry(seed=7)
+        self.ca = CertificateAuthority(self.registry)
+        self._kp_client, _ = enroll(self.ca, "svc-client")
+        self._kp_server, _ = enroll(self.ca, "svc-server")
+        self.domain, self.key_client, self.key_server = \
+            self.ca.grant_channel("svc-client", "svc-server", RW)
+        sess = self.ca.session_seed(self._kp_client.private, "svc-server")
+        self.seed = mac_seed(self.domain, self.registry.epoch(self.domain)) ^ sess
+        # --- data plane: shared regions + PKRU "register file" ---------------
+        self._region_req = np.zeros((0, framing.LANES), np.uint32)
+        self._region_resp = np.zeros((0, framing.LANES), np.uint32)
+        self._pkru = np.zeros(2, np.uint64)        # [pkru_word, epoch]
+        self._chunk_ready = threading.Event()
+        self._chunk_ack = threading.Event()
+        self._resp_ready = threading.Event()
+        self._final = False                        # last chunk of a request?
+        self._req_rows = 0
+        self._resp_rows = 0
+        self._seq = 0
+        self.sync_count = 0                        # measured key syncs (telemetry)
+
+    # -- one PKRU synchronization round trip (writer side) ---------------------
+    def _sync_key(self, key, rights):
+        self.registry.check(key, rights)           # staging-time capability check
+        self._pkru[0] = self.registry.pkru_word((key,))
+        self._pkru[1] = self.registry.epoch(self.domain)
+        self.sync_count += 1
+        self._chunk_ready.set()
+        self._chunk_ack.wait()
+        self._chunk_ack.clear()
+
+    def _serve(self):
+        while not self._stop.is_set():
+            if not self._chunk_ready.wait(timeout=0.5):
+                continue
+            self._chunk_ready.clear()
+            if self._stop.is_set():
+                self._chunk_ack.set()
+                return
+            final = self._final                    # read before acking
+            self._chunk_ack.set()                  # reader loads PKRU word
+            if not final:
+                continue
+            # full frame visible → verify + handle + respond
+            self.registry.check(self.key_server, READ)
+            try:
+                req = framing.parse_frame(self._region_req[: self._req_rows],
+                                          seed=self.seed, expect_seq=self._seq,
+                                          mac_impl=self._mac)
+            except framing.FrameError:
+                self._resp_rows = 0
+                self._resp_ready.set()
+                continue
+            self.registry.check(self.key_server, WRITE)
+            resp = self.handler(req).view(np.uint8).reshape(-1)
+            rframe = framing.build_frame(resp, seed=self.seed, seq=self._seq,
+                                         mac_impl=self._mac)
+            rows = rframe.shape[0]
+            if self._region_resp.shape[0] < rows:
+                self._region_resp = np.zeros((rows, framing.LANES), np.uint32)
+            self._region_resp[:rows] = rframe
+            self._resp_rows = rows
+            self.sync_count += 1                   # response-side key sync
+            self._resp_ready.set()
+
+    def _wake(self):
+        self._final = False
+        self._chunk_ready.set()
+        self._chunk_ack.set()
+
+    def request(self, payload: np.ndarray) -> np.ndarray:
+        frame = framing.build_frame(payload, seed=self.seed, seq=self._seq,
+                                    mac_impl=self._mac)
+        rows = frame.shape[0]
+        if self._region_req.shape[0] < rows:
+            self._region_req = np.zeros((rows, framing.LANES), np.uint32)
+        chunk_rows = max(1, self.chunk // (framing.LANES * 4))
+        for s in range(0, rows, chunk_rows):
+            e = min(rows, s + chunk_rows)
+            self._region_req[s:e] = frame[s:e]
+            self._req_rows = rows
+            self._final = e >= rows
+            self._sync_key(self.key_client, WRITE)
+        self._resp_ready.wait()
+        self._resp_ready.clear()
+        if self._resp_rows == 0:
+            raise TransportError("server rejected frame (guard failure)")
+        self.registry.check(self.key_client, READ)
+        out = framing.parse_frame(self._region_resp[: self._resp_rows],
+                                  seed=self.seed, expect_seq=self._seq,
+                                  mac_impl=self._mac)
+        self._seq += 1
+        return out
+
+
+class MPKLinkOptTransport(MPKLinkTransport):
+    """Beyond-paper MPKLink: ONE key synchronization per message (batched
+    epoch grant over the whole frame) instead of one per chunk. The MAC and
+    capability checks are unchanged — same security envelope, the cliff
+    comes out of the sync schedule, not the protection."""
+
+    name = "mpklink_opt"
+
+    def __init__(self, handler: Handler, mac_impl: Callable = fast_mac):
+        super().__init__(handler, chunk=1 << 62, mac_impl=mac_impl)

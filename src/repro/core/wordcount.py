@@ -1,0 +1,52 @@
+"""The paper's benchmark workload (§VI): a distributed word count.
+
+Service 1 (client) reads text, serializes a request, sends it to Service 2
+(server); the server deserializes, counts words, and returns the count.
+Text generation is deterministic (seeded) and vectorized; counting is the
+classic transition count (space→non-space), vectorized so the handler cost
+doesn't drown the IPC cost being measured.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_WORD_MIN, _WORD_MAX = 3, 8          # word lengths, single-space separated
+
+
+def make_text(n_words: int, seed: int = 0) -> np.ndarray:
+    """Deterministic ASCII text with exactly ``n_words`` words, as uint8."""
+    rng = np.random.default_rng(seed)
+    lengths = rng.integers(_WORD_MIN, _WORD_MAX + 1, size=n_words)
+    total = int(lengths.sum()) + max(0, n_words - 1)
+    out = np.full(total, ord(" "), np.uint8)
+    # word start offsets: cumulative lengths + separators
+    starts = np.zeros(n_words, np.int64)
+    starts[1:] = np.cumsum(lengths[:-1] + 1)
+    letters = rng.integers(ord("a"), ord("z") + 1, size=int(lengths.sum()),
+                           dtype=np.uint8)
+    # scatter letters into non-space slots
+    idx = np.arange(total)
+    is_space = np.ones(total, bool)
+    for off in range(_WORD_MAX):
+        sel = starts + off
+        ok = off < lengths
+        is_space[sel[ok]] = False
+    out[~is_space] = letters
+    return out
+
+
+def count_words(text_u8: np.ndarray) -> np.ndarray:
+    """uint8 text → (1,) uint64 word count (space→non-space transitions)."""
+    if text_u8.size == 0:
+        return np.zeros(1, np.uint64)
+    nonspace = text_u8 != ord(" ")
+    starts = np.count_nonzero(nonspace[1:] & ~nonspace[:-1]) + int(nonspace[0])
+    return np.asarray([starts], np.uint64)
+
+
+def wordcount_handler(req: np.ndarray) -> np.ndarray:
+    return count_words(np.frombuffer(req.tobytes(), np.uint8))
+
+
+def parse_count(resp: np.ndarray) -> int:
+    return int(np.frombuffer(resp.tobytes(), np.uint64)[0])

@@ -1,0 +1,4 @@
+from repro.data.pipeline import Prefetcher
+from repro.data.synthetic import SyntheticDataset
+
+__all__ = ["Prefetcher", "SyntheticDataset"]

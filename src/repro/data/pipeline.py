@@ -1,0 +1,67 @@
+"""Host data pipeline: background prefetch + device placement.
+
+A loader thread stays ``prefetch`` steps ahead of the training loop (compute
+and host data prep overlap — on a real pod the per-host loader builds only
+its local shard via ``jax.make_array_from_process_local_data``; on this
+single-process container that call degenerates to a device_put with the
+global sharding, same code path).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.data.synthetic import SyntheticDataset
+
+
+class Prefetcher:
+    def __init__(self, dataset: SyntheticDataset, global_batch: int,
+                 start_step: int = 0, prefetch: int = 2,
+                 sharding: Optional[jax.sharding.Sharding] = None):
+        self.dataset = dataset
+        self.global_batch = global_batch
+        self.sharding = sharding
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._step = start_step
+        self._thread = threading.Thread(target=self._fill, daemon=True)
+        self._thread.start()
+
+    def _place(self, batch):
+        if self.sharding is None:
+            return batch
+        out = {}
+        for k, v in batch.items():
+            out[k] = jax.device_put(v, self.sharding) if v.ndim <= 1 else \
+                jax.device_put(v, self.sharding)
+        return out
+
+    def _fill(self):
+        step = self._step
+        while not self._stop.is_set():
+            batch = self.dataset.batch(step, self.global_batch)
+            try:
+                self._q.put((step, batch), timeout=0.5)
+                step += 1
+            except queue.Full:
+                continue
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        step, batch = self._q.get()
+        return step, self._place(batch)
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=5)

@@ -1,0 +1,10 @@
+# Pallas TPU kernels for the compute hot-spots this system optimizes:
+#   flash_attention.py   — blockwise online-softmax attention (causal/SWA/GQA)
+#   decode_attention.py  — single-token cache attention (serving decode path)
+#   ssd_scan.py          — Mamba2 SSD chunked scan (state carried in VMEM)
+#   mpk_guard.py         — MPKLink protected copy (tag check + MAC + copy fused)
+# ops.py = jit'd public wrappers with impl selection; ref.py = pure-jnp oracles.
+from repro.kernels import ops, ref
+from repro.kernels.ops import attention, ssd, ssd_decode_step, guard_copy, mac
+
+__all__ = ["ops", "ref", "attention", "ssd", "ssd_decode_step", "guard_copy", "mac"]

@@ -1,0 +1,102 @@
+"""Single-token decode attention as a Pallas TPU kernel.
+
+The serving hot spot: one new query per sequence attending over a long KV
+cache. Memory-bound by design — the cache is read exactly once per step —
+so the kernel's job is to stream (S_cache, Dh) tiles through VMEM with the
+online-softmax state in scratch and never materialize the (B, H, S) score
+tensor in HBM (the jnp decode path writes it, visible in the decode cells'
+memory terms).
+
+Grid (B, H, nk), kv innermost; q (one row per (b,h)) stays resident.
+Handles GQA via the k/v index_map (h → h//g) and masked cache slots /
+SWA windows via the position vector (works for ring buffers, where
+slot_pos carries absolute positions).
+
+Validated in interpret mode against ref.attention_ref
+(tests/test_kernels_decode.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import NEG_INF
+
+
+def _decode_kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref, out_ref,
+                   m_ref, l_ref, acc_ref, *, causal, window, out_dtype):
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qp = qpos_ref[0, 0]                                    # scalar position
+    kp = kpos_ref[0, :]                                    # (kc,)
+    mask = kp >= 0
+    if causal:
+        mask = mask & (kp <= qp)
+    if window is not None:
+        mask = mask & ((qp - kp) < window)
+
+    @pl.when(jnp.any(mask))
+    def _compute():
+        q = q_ref[0, 0, 0, :].astype(jnp.float32)          # (Dh,)
+        kb = k_ref[0, :, 0, :].astype(jnp.float32)         # (kc, Dh)
+        vb = v_ref[0, :, 0, :].astype(jnp.float32)
+        scale = q.shape[-1] ** -0.5
+        s = kb @ q * scale                                 # (kc,)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[0, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        l_ref[0, 0] = l_ref[0, 0] * corr + jnp.sum(p)
+        acc_ref[0, :] = acc_ref[0, :] * corr + p @ vb
+        m_ref[0, 0] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        out = acc_ref[0, :] / jnp.maximum(l_ref[0, 0], 1e-30)
+        out_ref[0, 0, 0, :] = out.astype(out_dtype)
+
+
+def decode_attention_pallas(q, k, v, q_pos, kv_pos, *, causal=True,
+                            window=None, kv_chunk=512, interpret=True):
+    """q (B, 1, H, Dh); k/v (B, S, Hkv, Dh); q_pos (B, 1); kv_pos (B, S).
+    Requires S % kv_chunk == 0 (ops.py pads). → (B, 1, H, Dh)."""
+    B, one, H, Dh = q.shape
+    assert one == 1
+    S, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    kc = kv_chunk
+    assert S % kc == 0, (S, kc)
+    grid = (B, H, S // kc)
+    kernel = functools.partial(_decode_kernel, causal=causal, window=window,
+                               out_dtype=q.dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, ik: (b, 0)),            # q_pos
+            pl.BlockSpec((1, kc), lambda b, h, ik: (b, ik)),          # kv_pos
+            pl.BlockSpec((1, 1, 1, Dh), lambda b, h, ik: (b, 0, h, 0)),
+            pl.BlockSpec((1, kc, 1, Dh), lambda b, h, ik: (b, ik, h // g, 0)),
+            pl.BlockSpec((1, kc, 1, Dh), lambda b, h, ik: (b, ik, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, Dh), lambda b, h, ik: (b, 0, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 1, H, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),      # m
+            pltpu.VMEM((1, 1), jnp.float32),      # l
+            pltpu.VMEM((1, Dh), jnp.float32),     # acc
+        ],
+        interpret=interpret,
+    )(q_pos.astype(jnp.int32), kv_pos.astype(jnp.int32), q, k, v)

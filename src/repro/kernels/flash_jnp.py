@@ -1,0 +1,208 @@
+"""Blockwise online-softmax attention in pure jnp — the differentiable twin
+of the Pallas flash kernel.
+
+Same algorithm, same O(Sq·Dh) live memory profile (no Sq×Skv score tensor in
+the checkpointed state): forward is a scan over q-blocks with an inner scan
+over kv-blocks carrying (m, l, acc); backward (custom_vjp) recomputes scores
+blockwise and accumulates dq/dk/dv, so training at 32k context never
+materializes the full attention matrix. This is what `train`/`prefill`
+dry-runs lower, so cost_analysis reflects the flash memory profile.
+
+Numerics: NEG_INF is a large *finite* negative so fully-masked rows give
+m - m = 0 (not nan); masked rows produce exactly 0 output, matching ref.py.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import NEG_INF
+from repro.utils import match_vma
+
+
+def _valid(qp, kp, causal, window):
+    """qp (B, q), kp (B, k) → (B, 1, 1, q, k) bool."""
+    v = (kp >= 0)[:, None, None, None, :]
+    if causal:
+        v = v & (kp[:, None, None, None, :] <= qp[:, None, None, :, None])
+    if window is not None:
+        v = v & ((qp[:, None, None, :, None] - kp[:, None, None, None, :]) < window)
+    return v
+
+
+def _expand_kv(k, g):
+    """repeat_kv: expand (B,S,Hkv,Dh) → (B,S,H,Dh). Under GSPMD this keeps
+    the head dim shardable over the TP axis; the (Hkv, g) reshape view used
+    previously splits the sharded H dim into two dims XLA cannot co-shard,
+    which silently REPLICATED every attention block over the model axis
+    (measured 16× attention flops/bytes on mixtral before this). The Pallas
+    kernel needs no expansion — its k index_map (h → h//g) is the
+    zero-copy equivalent."""
+    if g == 1:
+        return k
+    return jnp.repeat(k, g, axis=2)
+
+
+def _fwd_core(q, k, v, qpos, kpos, causal, window, qc, kc):
+    """Divisible shapes only. Returns (out f32, lse f32)."""
+    B, Sq, H, Dh = q.shape
+    k = _expand_kv(k, H // k.shape[2])
+    v = _expand_kv(v, H // v.shape[2])
+    Hkv = k.shape[2]
+    g = H // Hkv
+    Skv = k.shape[1]
+    nq, nk = Sq // qc, Skv // kc
+    scale = Dh ** -0.5
+
+    qf = q.astype(jnp.float32).reshape(B, nq, qc, Hkv, g, Dh)
+    kf = k.astype(jnp.float32).reshape(B, nk, kc, Hkv, Dh)
+    vf = v.astype(jnp.float32).reshape(B, nk, kc, Hkv, Dh)
+    qpb = qpos.reshape(B, nq, qc)
+    kpb = kpos.reshape(B, nk, kc)
+
+    def q_block(_, qi):
+        qb, qp = qi                                        # (B,qc,Hkv,g,Dh), (B,qc)
+        m0 = jnp.full((B, Hkv, g, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, g, qc), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, g, qc, Dh), jnp.float32)
+        m0, l0, a0 = match_vma((m0, l0, a0), qb)
+
+        def kv_block(carry, ki):
+            m, l, acc = carry
+            kb, vb, kp = ki
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb) * scale
+            ok = _valid(qp, kp, causal, window)            # (B,1,1,qc,kc)
+            s = jnp.where(ok, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(ok, p, 0.0)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum("bhgqk,bkhd->bhgqd", p, vb)
+            return (m_new, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, (m0, l0, a0),
+            (kf.transpose(1, 0, 2, 3, 4), vf.transpose(1, 0, 2, 3, 4), kpb.transpose(1, 0, 2)))
+        ob = acc / jnp.maximum(l, 1e-30)[..., None]        # (B,Hkv,g,qc,Dh)
+        lse = jnp.where(l > 0, m + jnp.log(l), NEG_INF)    # (B,Hkv,g,qc)
+        ob = jnp.where((qp < 0)[:, None, None, :, None], 0.0, ob)
+        return None, (ob, lse)
+
+    _, (ob, lse) = jax.lax.scan(
+        q_block, None, (qf.transpose(1, 0, 2, 3, 4, 5), qpb.transpose(1, 0, 2)))
+    out = ob.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, H, Dh)       # nq,B,Hkv,g,qc,Dh
+    lse_full = lse.transpose(1, 0, 4, 2, 3).reshape(B, Sq, H)
+    return out, lse_full
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def _flash(q, k, v, qpos, kpos, causal, window, qc, kc):
+    out, _ = _fwd_core(q, k, v, qpos, kpos, causal, window, qc, kc)
+    return out.astype(q.dtype)
+
+
+def _flash_fwd(q, k, v, qpos, kpos, causal, window, qc, kc):
+    out, lse = _fwd_core(q, k, v, qpos, kpos, causal, window, qc, kc)
+    return out.astype(q.dtype), (q, k, v, qpos, kpos, out, lse)
+
+
+def _flash_bwd(causal, window, qc, kc, res, do):
+    q, k, v, qpos, kpos, out, lse = res
+    B, Sq, H, Dh = q.shape
+    g_kv = H // k.shape[2]                         # true GQA group size
+    k = _expand_kv(k, g_kv)
+    v = _expand_kv(v, g_kv)
+    Hkv = k.shape[2]
+    g = H // Hkv
+    Skv = k.shape[1]
+    nq, nk = Sq // qc, Skv // kc
+    scale = Dh ** -0.5
+
+    qf = q.astype(jnp.float32).reshape(B, nq, qc, Hkv, g, Dh)
+    kf = k.astype(jnp.float32).reshape(B, nk, kc, Hkv, Dh)
+    vf = v.astype(jnp.float32).reshape(B, nk, kc, Hkv, Dh)
+    dof = do.astype(jnp.float32).reshape(B, nq, qc, Hkv, g, Dh)
+    qpb = qpos.reshape(B, nq, qc)
+    kpb = kpos.reshape(B, nk, kc)
+    lseb = lse.reshape(B, nq, qc, Hkv, g)
+    # Delta_i = rowsum(dO ∘ O)
+    delta = jnp.sum(out * do.astype(jnp.float32), axis=-1).reshape(B, nq, qc, Hkv, g)
+    live = (lseb > NEG_INF / 2)
+
+    def kv_step(dq_acc, kv_in):
+        kb, vb, kp = kv_in                                 # kb/vb (B,kc,Hkv,Dh)
+
+        def q_step(dq_acc, q_in):
+            qb, dob, qp, lse_i, dl_i, lv_i, iq = q_in
+            # lse_i/dl_i/lv_i arrive as (B, qc, Hkv, g) → (B, Hkv, g, qc)
+            lse_t = lse_i.transpose(0, 2, 3, 1)[..., None]
+            dl_t = dl_i.transpose(0, 2, 3, 1)[..., None]
+            lv_t = lv_i.transpose(0, 2, 3, 1)[..., None]
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb) * scale
+            ok = _valid(qp, kp, causal, window) & lv_t
+            p = jnp.where(ok, jnp.exp(s - lse_t), 0.0)
+            dp = jnp.einsum("bqhgd,bkhd->bhgqk", dob, vb)
+            ds = p * (dp - dl_t) * scale
+            dv_j = jnp.einsum("bhgqk,bqhgd->bkhd", p, dob)
+            dk_j = jnp.einsum("bhgqk,bqhgd->bkhd", ds, qb)
+            dq_i = jnp.einsum("bhgqk,bkhd->bqhgd", ds, kb)
+            dq_acc = dq_acc.at[:, iq].add(dq_i)            # accumulate across kv blocks
+            return dq_acc, (dk_j, dv_j)
+
+        dq_acc, (dks, dvs) = jax.lax.scan(
+            q_step, dq_acc,
+            (qf.transpose(1, 0, 2, 3, 4, 5), dof.transpose(1, 0, 2, 3, 4, 5),
+             qpb.transpose(1, 0, 2), lseb.transpose(1, 0, 2, 3, 4),
+             delta.transpose(1, 0, 2, 3, 4), live.transpose(1, 0, 2, 3, 4),
+             jnp.arange(nq)))
+        dk_j = jnp.sum(dks, axis=0)
+        dv_j = jnp.sum(dvs, axis=0)
+        return dq_acc, (dk_j, dv_j)
+
+    dq0 = match_vma(jnp.zeros((B, nq, qc, Hkv, g, Dh), jnp.float32), qf)
+    dq, (dk, dv) = jax.lax.scan(
+        kv_step, dq0,
+        (kf.transpose(1, 0, 2, 3, 4), vf.transpose(1, 0, 2, 3, 4),
+         kpb.transpose(1, 0, 2)))
+    dq = dq.reshape(B, Sq, H, Dh).astype(q.dtype)
+    dk = dk.transpose(1, 0, 2, 3, 4).reshape(B, Skv, Hkv, Dh)
+    dv = dv.transpose(1, 0, 2, 3, 4).reshape(B, Skv, Hkv, Dh)
+    if g_kv > 1:                                   # un-expand: sum over groups
+        dk = dk.reshape(B, Skv, Hkv // g_kv, g_kv, Dh).sum(3)
+        dv = dv.reshape(B, Skv, Hkv // g_kv, g_kv, Dh).sum(3)
+    dk = dk.astype(res[1].dtype)
+    dv = dv.astype(res[2].dtype)
+    f0 = lambda x: np.zeros(x.shape, jax.dtypes.float0)
+    return dq, dk, dv, f0(qpos), f0(kpos)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def _pad_to(x, axis, mult, fill):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+def flash_attention_jnp(q, k, v, q_pos, kv_pos, *, causal=True, window=None,
+                        q_chunk=128, kv_chunk=128):
+    """Public chunked attention; pads to block multiples then unpads."""
+    B, Sq = q.shape[:2]
+    qc = min(q_chunk, max(1, Sq))
+    kc = min(kv_chunk, max(1, k.shape[1]))
+    qp = _pad_to(q_pos.astype(jnp.int32), 1, qc, -2)
+    kp = _pad_to(kv_pos.astype(jnp.int32), 1, kc, -1)
+    qpad = _pad_to(q, 1, qc, 0)
+    kpad = _pad_to(k, 1, kc, 0)
+    vpad = _pad_to(v, 1, kc, 0)
+    out = _flash(qpad, kpad, vpad, qp, kp, causal, window, qc, kc)
+    return out[:, :Sq]

@@ -1,0 +1,142 @@
+"""Pure-jnp oracles for every kernel. Slow, obvious, and correct.
+
+These define the semantics that the Pallas kernels (and the chunked jnp
+twins used for training/dry-run) must match bit-for-bit in f32 / within
+tolerance in bf16. All tests assert against these.
+
+Shared conventions
+------------------
+attention: q (B, Sq, H, Dh); k, v (B, Skv, Hkv, Dh) with H = Hkv * g (GQA).
+positions: q_pos (B, Sq), kv_pos (B, Skv) int32; kv_pos == -1 marks an
+invalid slot (unfilled cache / padding), q_pos < 0 marks a padded query row
+(output forced to 0). ``causal`` masks kv_pos > q_pos; ``window`` (if set)
+masks q_pos - kv_pos >= window (SWA).
+
+ssd (Mamba2 state-space duality): x (B, S, H, P); dt (B, S, H);
+A_log (H,); B, C (B, S, G, N) with G | H; D (H,); state (B, H, P, N).
+Recurrence per head:  a_t = exp(dt_t * -exp(A_log))
+    state_t = a_t * state_{t-1} + dt_t * (x_t ⊗ B_t)
+    y_t     = state_t · C_t + D * x_t
+
+guard_copy (MPKLink data plane): payload (n, 128) uint32, tag word, 128-lane
+Horner MAC folded to one uint32; returns (copy, mac, ok).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+MAC_PRIME = 0x01000193   # FNV-ish multiplier (python int: safe to use inside Pallas)
+MAC_INIT = 0x811C9DC5
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def attention_ref(q, k, v, q_pos, kv_pos, *, causal: bool = True,
+                  window=None, softmax_scale=None):
+    B, Sq, H, Dh = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    scale = softmax_scale if softmax_scale is not None else Dh ** -0.5
+
+    qf = q.astype(jnp.float32).reshape(B, Sq, Hkv, g, Dh)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf) * scale
+
+    qp = q_pos[:, None, None, :, None].astype(jnp.int32)
+    kp = kv_pos[:, None, None, None, :].astype(jnp.int32)
+    valid = kp >= 0
+    if causal:
+        valid &= kp <= qp
+    if window is not None:
+        valid &= (qp - kp) < window
+    scores = jnp.where(valid, scores, NEG_INF)
+
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - jax.lax.stop_gradient(jnp.maximum(m, NEG_INF / 2)))
+    e = jnp.where(valid, e, 0.0)
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    p = e / jnp.maximum(denom, 1e-30)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf).reshape(B, Sq, H, Dh)
+    out = jnp.where(q_pos[:, :, None, None] < 0, 0.0, out)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# ssd (Mamba2)
+# ---------------------------------------------------------------------------
+
+def ssd_ref(x, dt, A_log, B, C, D, init_state=None):
+    Bb, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = jnp.repeat(B.astype(jnp.float32), rep, axis=2)   # (B, S, H, N)
+    Cf = jnp.repeat(C.astype(jnp.float32), rep, axis=2)
+    A = -jnp.exp(A_log.astype(jnp.float32))               # (H,) negative
+    a = jnp.exp(dtf * A[None, None, :])                   # (B, S, H) decay in (0, 1]
+
+    state0 = (jnp.zeros((Bb, H, P, N), jnp.float32)
+              if init_state is None else init_state.astype(jnp.float32))
+
+    def step(state, inp):
+        x_t, a_t, dt_t, B_t, C_t = inp                    # (B,H,P), (B,H), (B,H), (B,H,N), (B,H,N)
+        state = a_t[:, :, None, None] * state + jnp.einsum("bhp,bhn->bhpn", dt_t[..., None] * x_t, B_t)
+        y_t = jnp.einsum("bhpn,bhn->bhp", state, C_t)
+        return state, y_t
+
+    xs = (xf.transpose(1, 0, 2, 3), a.transpose(1, 0, 2), dtf.transpose(1, 0, 2),
+          Bf.transpose(1, 0, 2, 3), Cf.transpose(1, 0, 2, 3))
+    final_state, ys = jax.lax.scan(step, state0, xs)
+    y = ys.transpose(1, 0, 2, 3) + D.astype(jnp.float32)[None, None, :, None] * xf
+    return y.astype(x.dtype), final_state
+
+
+# ---------------------------------------------------------------------------
+# guard_copy (MPKLink protected copy: tag check + Horner MAC + copy)
+# ---------------------------------------------------------------------------
+
+def _fold_powers_u32():
+    """PRIME^(127-i) mod 2^32 — Horner across lanes as one vector dot."""
+    import numpy as np
+    p = np.uint64(MAC_PRIME)
+    out = np.zeros(128, np.uint64)
+    acc = np.uint64(1)
+    for i in range(127, -1, -1):
+        out[i] = acc
+        acc = (acc * p) & np.uint64(0xFFFFFFFF)
+    return out.astype(np.uint32)
+
+
+_FOLD_POWERS = _fold_powers_u32()
+
+
+def mac_ref(payload_u32, tag: jnp.ndarray):
+    """128-lane Horner hash over rows, folded across lanes, tag mixed in.
+
+    Fold identity: Horner(h_0..h_127) = Σ h_i · PRIME^(127-i)  (mod 2^32),
+    so the lane fold is a single vector multiply-add — the same form the
+    Pallas kernel uses on the VPU.
+    """
+    assert payload_u32.dtype == jnp.uint32 and payload_u32.shape[-1] == 128
+
+    def row_step(h, row):
+        return h * MAC_PRIME + row, None
+
+    from repro.utils import match_vma
+    h0 = jnp.full((128,), MAC_INIT, jnp.uint32) + tag.astype(jnp.uint32)
+    h0 = match_vma(h0, payload_u32)
+    h, _ = jax.lax.scan(row_step, h0, payload_u32)
+    return jnp.sum(h * jnp.asarray(_FOLD_POWERS), dtype=jnp.uint32)
+
+
+def guard_copy_ref(payload_u32, tag, expected_mac):
+    mac = mac_ref(payload_u32, tag)
+    ok = (mac == expected_mac.astype(jnp.uint32)).astype(jnp.int32)
+    return payload_u32, mac, ok

@@ -1,0 +1,106 @@
+"""Mamba2 SSD (state-space duality) — chunked jnp implementation.
+
+The sequential recurrence (ref.py) is O(S) steps; SSD reorganizes it into
+MXU-friendly chunk-local matmuls plus an O(S/Q) inter-chunk state scan:
+
+  within chunk c (length Q), with cumulative log-decay L_i = Σ_{t≤i} dt_t·A:
+    intra:  y_i += Σ_{j≤i} (C_i·B_j) · exp(L_i − L_j) · dt_j · x_j
+    carry:  S_c  = exp(L_Q)·S_{c−1} + Σ_j exp(L_Q − L_j)·dt_j·(x_j ⊗ B_j)
+    inter:  y_i += exp(L_i) · C_i · S_{c−1}
+
+All decays are ≤ 1 (dt ≥ 0, A < 0) so every exp() here is ≤ 1 — no overflow.
+Group-aware (B/C shared across H/G heads) without materializing repeats.
+Fully differentiable (plain jnp + scan); the Pallas kernel mirrors this
+blocking with the state carried in VMEM scratch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _pad_seq(x, mult, fill=0.0):
+    pad = (-x.shape[1]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[1] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+def ssd_chunked(x, dt, A_log, B, C, D, init_state=None, *, chunk=128):
+    """Shapes as ref.ssd_ref. Returns (y, final_state (B,H,P,N) f32)."""
+    Bb, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    R = H // G
+    Q = min(chunk, S)
+
+    xf = _pad_seq(x.astype(jnp.float32), Q)
+    dtf = _pad_seq(dt.astype(jnp.float32), Q)          # pad dt=0 → decay 1, no update
+    Bf = _pad_seq(B.astype(jnp.float32), Q)
+    Cf = _pad_seq(C.astype(jnp.float32), Q)
+    Sp = xf.shape[1]
+    nc = Sp // Q
+
+    # (B, nc, Q, G, R, ...) group-aware blocks
+    xb = xf.reshape(Bb, nc, Q, G, R, P)
+    dtb = dtf.reshape(Bb, nc, Q, G, R)
+    Bb_ = Bf.reshape(Bb, nc, Q, G, N)
+    Cb = Cf.reshape(Bb, nc, Q, G, N)
+    A = -jnp.exp(A_log.astype(jnp.float32)).reshape(G, R)
+
+    la = dtb * A[None, None, None]                     # (B,nc,Q,G,R) ≤ 0
+    cum = jnp.cumsum(la, axis=2)                       # inclusive cumulative log-decay
+    seg = cum[:, :, -1:]                               # (B,nc,1,G,R) chunk total
+
+    # intra-chunk: M_ij = exp(L_i − L_j) for i ≥ j
+    dec = jnp.exp(cum[:, :, :, None] - cum[:, :, None, :, :])      # (B,nc,Q,Q,G,R)
+    tri = jnp.tril(jnp.ones((Q, Q), jnp.float32))
+    dec = dec * tri[None, None, :, :, None, None]
+    cb = jnp.einsum("bcqgn,bcjgn->bcqjg", Cb, Bb_)                  # (B,nc,Q,Q,G)
+    att = cb[..., None] * dec * dtb[:, :, None, :, :]               # weight at source j
+    y_intra = jnp.einsum("bcqjgr,bcjgrp->bcqgrp", att, xb)
+
+    # chunk state contribution: Σ_j exp(L_Q − L_j)·dt_j·(x_j ⊗ B_j)
+    w = jnp.exp(seg - cum) * dtb                                    # (B,nc,Q,G,R)
+    s_c = jnp.einsum("bcjgr,bcjgrp,bcjgn->bcgrpn", w, xb, Bb_)      # (B,nc,G,R,P,N)
+
+    state0 = (jnp.zeros((Bb, G, R, P, N), jnp.float32) if init_state is None
+              else init_state.astype(jnp.float32).reshape(Bb, G, R, P, N))
+    from repro.utils import match_vma
+    state0 = match_vma(state0, xf)
+
+    def carry_step(state, inp):
+        decay_c, s_chunk = inp                                      # (B,G,R), (B,G,R,P,N)
+        state_out = decay_c[..., None, None] * state + s_chunk
+        return state_out, state                                     # emit state *entering* chunk
+
+    decay = jnp.exp(seg[:, :, 0])                                   # (B,nc,G,R)
+    final_state, states_in = jax.lax.scan(
+        carry_step, state0, (decay.transpose(1, 0, 2, 3), s_c.transpose(1, 0, 2, 3, 4, 5)))
+    states_in = states_in.transpose(1, 0, 2, 3, 4, 5)               # (B,nc,G,R,P,N)
+
+    # inter-chunk: exp(L_i) · C_i · S_{c−1}
+    y_inter = jnp.einsum("bcqgn,bcgrpn,bcqgr->bcqgrp",
+                         Cb, states_in, jnp.exp(cum))
+
+    y = (y_intra + y_inter).reshape(Bb, Sp, H, P)[:, :S]
+    y = y + D.astype(jnp.float32)[None, None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), final_state.reshape(Bb, H, P, N)
+
+
+def ssd_decode_step(x_t, dt_t, A_log, B_t, C_t, D, state):
+    """Single-token recurrent step. x_t (B,H,P); dt_t (B,H); B_t/C_t (B,G,N);
+    state (B,H,P,N) f32 → (y_t (B,H,P), new_state)."""
+    Bb, H, P = x_t.shape
+    G, N = B_t.shape[1], B_t.shape[2]
+    R = H // G
+    xf = x_t.astype(jnp.float32)
+    dtf = dt_t.astype(jnp.float32)
+    A = -jnp.exp(A_log.astype(jnp.float32))
+    a = jnp.exp(dtf * A[None])                                      # (B,H)
+    Bh = jnp.repeat(B_t.astype(jnp.float32), R, axis=1)             # (B,H,N) — tiny at decode
+    Ch = jnp.repeat(C_t.astype(jnp.float32), R, axis=1)
+    state = a[:, :, None, None] * state + jnp.einsum("bhp,bhn->bhpn", dtf[..., None] * xf, Bh)
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch) + D.astype(jnp.float32)[None, :, None] * xf
+    return y.astype(x_t.dtype), state

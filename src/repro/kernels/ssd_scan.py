@@ -1,0 +1,108 @@
+"""Mamba2 SSD chunked scan as a Pallas TPU kernel.
+
+Grid (B, H, nc) with the chunk dim innermost/sequential: the (P, N) SSM state
+for a fixed (b, h) lives in VMEM scratch and is carried across chunk steps —
+the inter-chunk recurrence never touches HBM. Each chunk step does three
+MXU matmuls (C·Bᵀ → Q×Q, att·x → Q×P, state in/out → Q×N·N×P-shaped work)
+on (Q=128)-aligned tiles, which is exactly the SSD restructuring insight:
+turn an O(S) elementwise recurrence into O(S/Q) matmul steps.
+
+B/C group sharing (n_groups G ≤ H) is handled in the index_map (h → h // R),
+same trick as GQA in the flash kernel — no repeat materialized.
+
+Validated in interpret mode against ref.ssd_ref (tests/test_kernels_ssd.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, alog_ref, b_ref, c_ref, d_ref, s0_ref,
+                y_ref, sf_ref, state, *, out_dtype):
+    c = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(c == 0)
+    def _init():
+        state[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    xb = x_ref[0, :, 0, :].astype(jnp.float32)          # (Q, P)
+    dtb = dt_ref[0, :, 0].astype(jnp.float32)           # (Q,)
+    Bb = b_ref[0, :, 0, :].astype(jnp.float32)          # (Q, N)
+    Cb = c_ref[0, :, 0, :].astype(jnp.float32)          # (Q, N)
+    A = -jnp.exp(alog_ref[0].astype(jnp.float32))       # scalar
+    Dc = d_ref[0].astype(jnp.float32)
+
+    la = dtb * A                                        # (Q,) ≤ 0
+    cum = jnp.cumsum(la)
+    Q = xb.shape[0]
+
+    s_in = state[...]
+    # intra-chunk quadratic form
+    dec = jnp.exp(cum[:, None] - cum[None, :])
+    tri = jnp.tril(jnp.ones((Q, Q), jnp.float32))
+    cb = jax.lax.dot_general(Cb, Bb, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    att = cb * dec * tri * dtb[None, :]
+    y = jnp.dot(att, xb, preferred_element_type=jnp.float32)
+    # inter-chunk contribution: exp(L_i) · C_i · S_inᵀ
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        Cb, s_in, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    y += Dc * xb
+    y_ref[0, :, 0, :] = y.astype(out_dtype)
+
+    # state carry: S_out = exp(L_Q)·S_in + Σ_j exp(L_Q − L_j)·dt_j·(x_j ⊗ B_j)
+    w = jnp.exp(cum[-1] - cum) * dtb                    # (Q,)
+    s_c = jax.lax.dot_general(w[:, None] * xb, Bb, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)   # (P, N)
+    state[...] = jnp.exp(cum[-1]) * s_in + s_c
+
+    @pl.when(c == nc - 1)
+    def _final():
+        sf_ref[0, 0] = state[...]
+
+
+def ssd_scan_pallas(x, dt, A_log, B, C, D, init_state=None, *, chunk=128,
+                    interpret=True):
+    """Shapes as ref.ssd_ref; requires S % chunk == 0 (ops.py pads).
+    Returns (y, final_state (B,H,P,N) f32)."""
+    Bb, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    R = H // G
+    Q = chunk
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    if init_state is None:
+        init_state = jnp.zeros((Bb, H, P, N), jnp.float32)
+
+    grid = (Bb, H, nc)
+    kernel = functools.partial(_ssd_kernel, out_dtype=x.dtype)
+    y, sf = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),       # x
+            pl.BlockSpec((1, Q, 1), lambda b, h, c: (b, c, h)),             # dt
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),                        # A_log
+            pl.BlockSpec((1, Q, 1, N), lambda b, h, c: (b, c, h // R, 0)),  # B
+            pl.BlockSpec((1, Q, 1, N), lambda b, h, c: (b, c, h // R, 0)),  # C
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),                        # D
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),       # init_state
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),       # y
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),       # final_state
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bb, S, H, P), x.dtype),
+            jax.ShapeDtypeStruct((Bb, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A_log, B, C, D, init_state)
+    return y, sf

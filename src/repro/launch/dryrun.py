@@ -1,0 +1,321 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes, with NO device allocation (ShapeDtypeStruct inputs).
+
+This is the proof that the distribution config is coherent: a sharding
+mismatch, a collective XLA can't partition, or an OOM at compile time all
+fail here. Outputs (memory_analysis, cost_analysis, the collective schedule
+parsed from compiled HLO) are written to artifacts/dryrun/ and consumed by
+EXPERIMENTS.md §Dry-run / §Roofline and benchmarks/roofline_report.py.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                    # all cells, 1 pod
+  PYTHONPATH=src python -m repro.launch.dryrun --multi-pod        # all cells, 2 pods
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from dataclasses import replace as dc_replace
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (ARCH_IDS, SHAPES_BY_NAME, TrainConfig, get_config,
+                           shape_applicable)
+from repro.configs.base import OptimizerConfig
+from repro.launch.mesh import dp_axes, make_production_mesh
+from repro.models import init_decode_state, init_params
+from repro.models.transformer import Impl
+from repro.optim import init_opt_state
+from repro.roofline import analyze, model_flops
+from repro.runtime.steps import make_decode_step, make_prefill_step, make_train_step
+from repro.sharding.specs import (batch_specs, decode_state_specs,
+                                  opt_state_specs, param_specs)
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                         "artifacts", "dryrun")
+
+# Per-arch distribution choices (see DESIGN.md §4 and configs/*.py docstrings)
+TRAIN_POLICY = {"grok-1-314b": "fsdp_tp", "mixtral-8x7b": "fsdp_tp"}
+SERVE_POLICY = {"grok-1-314b": "fsdp_tp"}
+TRAIN_PARAM_DTYPE = {"grok-1-314b": jnp.bfloat16}
+TRAIN_OPT_DTYPE = {"grok-1-314b": jnp.bfloat16}
+ROWS_PER_DEVICE = {"whisper-tiny": 4, "smollm-360m": 2, "olmo-1b": 2,
+                   "llama3.2-1b": 2, "mamba2-1.3b": 2}
+
+IMPL = Impl(attention="chunked", decode_attention="naive", ssd="chunked",
+            q_chunk=128, kv_chunk=128, remat=True)
+
+# Head-padding targets for --opt-pad-heads (function-preserving; see
+# configs/base.py). Constraint: kv_pad ≥ kv, g_pad ≥ g, (kv_pad·g_pad) % 16 == 0.
+PAD_HEADS = {
+    "qwen3-14b": dict(pad_q_heads=48, pad_kv_heads=8),     # g 5→6
+    "smollm-360m": dict(pad_q_heads=32, pad_kv_heads=8),   # (5,3)→(8,4)
+    "whisper-tiny": dict(pad_q_heads=16, pad_kv_heads=16), # (6,1)→(16,1)
+}
+
+
+def apply_opts(cfg, impl, opts, kind="train"):
+    """Beyond-paper optimization knobs (§Perf hillclimb), composable.
+
+    Head padding is primarily a train/prefill optimization. At decode it
+    cuts replicated weight reads (qwen3: 1.3-1.5×) but padding the KV heads
+    grows the cache — and decode is bound by cache reads (smollm 0.65×,
+    whisper 0.47× before this rule). Policy: pad at decode only when the
+    kv head count is unchanged; serving weights are repacked accordingly."""
+    if opts.get("moe_group") and cfg.moe:
+        g = opts["moe_group"] if isinstance(opts["moe_group"], int) and \
+            opts["moe_group"] > 1 else 4096
+        cfg = dc_replace(cfg, moe=dc_replace(cfg.moe, group_size=g))
+    if opts.get("pad_heads") and cfg.name in PAD_HEADS:
+        pads = PAD_HEADS[cfg.name]
+        grows_kv = pads["pad_kv_heads"] > cfg.num_kv_heads
+        if kind != "decode" or not grows_kv:
+            cfg = dc_replace(cfg, **pads)
+    if opts.get("kv_chunk"):
+        impl = dataclasses.replace(impl, kv_chunk=opts["kv_chunk"])
+    if opts.get("anchor"):
+        impl = dataclasses.replace(impl, act_dp=opts["anchor"])
+    return cfg, impl
+
+
+def opts_tag(opts):
+    parts = []
+    if opts.get("moe_group"):
+        g = opts["moe_group"] if isinstance(opts["moe_group"], int) and \
+            opts["moe_group"] > 1 else 4096
+        parts.append(f"moegrp{g}")
+    if opts.get("pad_heads"):
+        parts.append("padh")
+    if opts.get("kv_chunk"):
+        parts.append(f"kvc{opts['kv_chunk']}")
+    if opts.get("zero_grads"):
+        parts.append("zgrad")
+    if opts.get("anchor"):
+        parts.append("anchor")
+    return "_".join(parts) if parts else "base"
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(arch: str, shape_name: str, *, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct stand-ins for every model input of a cell."""
+    cfg = get_config(arch)
+    shp = SHAPES_BY_NAME[shape_name]
+    B, S = shp.global_batch, shp.seq_len
+    if shp.kind == "decode":
+        return {"token": _sds((B, 1), jnp.int32)}
+    batch = {"tokens": _sds((B, S), jnp.int32),
+             "labels": _sds((B, S), jnp.int32)}
+    if cfg.vision_tokens:
+        batch["vision_embeds"] = _sds((B, cfg.vision_tokens, cfg.vision_dim), dtype)
+    if cfg.enc_dec:
+        batch["frames"] = _sds((B, cfg.enc_ctx, cfg.d_model), dtype)
+    return batch
+
+
+def _cast_tree(sds_tree, dtype, only_float=True):
+    def cast(x):
+        if only_float and not jnp.issubdtype(x.dtype, jnp.floating):
+            return x
+        return jax.ShapeDtypeStruct(x.shape, dtype)
+    return jax.tree.map(cast, sds_tree)
+
+
+def _shardings(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_cell(arch: str, shape_name: str, mesh, multi_pod: bool, opts=None):
+    """→ (jitted_fn, arg ShapeDtypeStructs with shardings attached)."""
+    opts = opts or {}
+    cfg = get_config(arch)
+    shp = SHAPES_BY_NAME[shape_name]
+    dp = dp_axes(multi_pod)
+    dp_total = 32 if multi_pod else 16
+    impl = IMPL
+    cfg, impl = apply_opts(cfg, impl, opts, kind=shp.kind)
+
+    params_sds = jax.eval_shape(lambda k: init_params(cfg, k),
+                                jax.random.PRNGKey(0))
+
+    if shp.kind == "train":
+        policy = TRAIN_POLICY.get(arch, "tp")
+        pdt = TRAIN_PARAM_DTYPE.get(arch, jnp.float32)
+        odt = TRAIN_OPT_DTYPE.get(arch, jnp.float32)
+        params_sds = _cast_tree(params_sds, pdt)
+        opt_sds = jax.eval_shape(lambda p: init_opt_state(p, odt), params_sds)
+        pspecs = param_specs(cfg, params_sds, policy=policy, dp=dp, mesh=mesh)
+        ospecs = opt_state_specs(cfg, params_sds, dp=dp, mesh=mesh)
+        bspecs = batch_specs(cfg, dp=dp)
+        micro = dp_total * ROWS_PER_DEVICE.get(arch, 1)
+        tcfg = TrainConfig(microbatch_size=micro,
+                           optimizer=OptimizerConfig(total_steps=10_000))
+        gspecs = (param_specs(cfg, params_sds, policy="fsdp_tp", dp=dp, mesh=mesh)
+                  if opts.get("zero_grads") else None)
+        fn = make_train_step(cfg, tcfg, impl, dp=dp, grad_specs=gspecs)
+        in_shard = (_shardings(mesh, pspecs), _shardings(mesh, ospecs),
+                    _shardings(mesh, bspecs))
+        out_shard = (_shardings(mesh, pspecs), _shardings(mesh, ospecs), None)
+        args = (params_sds, opt_sds, input_specs(arch, shape_name))
+        jfn = jax.jit(fn, in_shardings=in_shard, out_shardings=out_shard,
+                      donate_argnums=(0, 1))
+        return jfn, args
+
+    # serving cells: bf16 params
+    params_sds = _cast_tree(params_sds, jnp.bfloat16)
+    policy = SERVE_POLICY.get(arch, "tp")
+    pspecs = param_specs(cfg, params_sds, policy=policy, dp=dp, mesh=mesh)
+
+    if shp.kind == "prefill":
+        bspecs = batch_specs(cfg, dp=dp)
+        bspecs.pop("labels")
+        fn = make_prefill_step(cfg, impl)
+        args_batch = input_specs(arch, shape_name)
+        args_batch.pop("labels")
+        jfn = jax.jit(fn, in_shardings=(_shardings(mesh, pspecs),
+                                        _shardings(mesh, bspecs)))
+        return jfn, (params_sds, args_batch)
+
+    # decode
+    B, S = shp.global_batch, shp.seq_len
+    enc_sds = (_sds((B, cfg.enc_ctx, cfg.d_model), jnp.bfloat16)
+               if cfg.enc_dec else None)
+    state_sds = jax.eval_shape(
+        lambda p, e: init_decode_state(cfg, p, B, S, dtype=jnp.bfloat16,
+                                       impl=impl, enc_out=e),
+        params_sds, enc_sds)
+    sspecs = decode_state_specs(cfg, state_sds, dp=dp, batch=B)
+    tspec = {"token": P(dp if len(dp) > 1 else dp[0], None)} if B > 1 \
+        else {"token": P(None, None)}
+    fn = make_decode_step(cfg, impl)
+    jfn = jax.jit(fn,
+                  in_shardings=(_shardings(mesh, pspecs),
+                                _shardings(mesh, sspecs),
+                                _shardings(mesh, tspec["token"])),
+                  out_shardings=(None, _shardings(mesh, sspecs)),
+                  donate_argnums=(1,))
+    token_sds = input_specs(arch, shape_name)["token"]
+    return jfn, (params_sds, state_sds, token_sds)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             save: bool = True, opts=None) -> dict:
+    opts = opts or {}
+    cfg = get_config(arch)
+    shp = SHAPES_BY_NAME[shape_name]
+    ok, why = shape_applicable(cfg, shp)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "kind": shp.kind, "status": "skip", "skip_reason": why,
+              "opts": opts_tag(opts)}
+    if not ok:
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    t0 = time.time()
+    with mesh:
+        jfn, args = build_cell(arch, shape_name, mesh, multi_pod, opts)
+        lowered = jfn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    roof = analyze(cost, hlo, n_dev)
+
+    mfl = model_flops(cfg.active_param_count(),
+                      shp.tokens if shp.kind != "decode" else shp.global_batch,
+                      shp.kind)
+    result.update({
+        "status": "ok",
+        "devices": int(n_dev),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+        },
+        "roofline": roof.to_dict(),
+        "model_flops_global": mfl,
+        "model_flops_per_device": mfl / n_dev,
+        "useful_flops_ratio": (mfl / n_dev) / roof.flops if roof.flops else None,
+    })
+    if save:
+        os.makedirs(ARTIFACTS, exist_ok=True)
+        tag = opts_tag(opts)
+        suffix = "" if tag == "base" else f"__{tag}"
+        fname = f"{arch}__{shape_name}__{mesh_name}{suffix}.json"
+        with open(os.path.join(ARTIFACTS, fname), "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCH_IDS))
+    ap.add_argument("--shape", default=None, choices=list(SHAPES_BY_NAME))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--opt-moe-group", type=int, nargs="?", const=4096,
+                    default=0)
+    ap.add_argument("--opt-pad-heads", action="store_true")
+    ap.add_argument("--opt-kv-chunk", type=int, default=0)
+    ap.add_argument("--opt-zero-grads", action="store_true")
+    ap.add_argument("--opt-anchor-acts", action="store_true")
+    args = ap.parse_args()
+    opts = {"moe_group": args.opt_moe_group, "pad_heads": args.opt_pad_heads,
+            "kv_chunk": args.opt_kv_chunk, "zero_grads": args.opt_zero_grads}
+
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(SHAPES_BY_NAME)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = 0
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                tag = f"{arch:24s} {shape:12s} {'2x16x16' if mp else '16x16':8s}"
+                try:
+                    cell_opts = dict(opts)
+                    if args.opt_anchor_acts:
+                        cell_opts["anchor"] = dp_axes(mp)
+                    r = run_cell(arch, shape, multi_pod=mp, opts=cell_opts)
+                except Exception as e:
+                    failures += 1
+                    print(f"FAIL {tag} {type(e).__name__}: {e}")
+                    traceback.print_exc()
+                    continue
+                if r["status"] == "skip":
+                    print(f"SKIP {tag} {r['skip_reason']}")
+                    continue
+                roof = r["roofline"]
+                mem = r["memory"]
+                peak = mem["peak_bytes"] or \
+                    (mem["argument_bytes"] or 0) + (mem["temp_bytes"] or 0)
+                print(f"OK   {tag} compile={r['compile_s']:7.1f}s "
+                      f"mem/dev={(peak)/2**30:6.2f}GiB "
+                      f"flops/dev={roof['flops']:.3e} "
+                      f"coll={roof['collective_bytes']/2**20:9.1f}MiB "
+                      f"bound={roof['bottleneck']}")
+    print(f"\ndone; failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.models.model import (decode_step, encode, forward, init_decode_state,
+                                init_params, loss_fn)
+from repro.models.transformer import Impl
+
+__all__ = ["decode_step", "encode", "forward", "init_decode_state",
+           "init_params", "loss_fn", "Impl"]

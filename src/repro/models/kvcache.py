@@ -1,0 +1,98 @@
+"""KV-cache / recurrent-state structures for serving.
+
+Three cache kinds, all pure pytrees:
+
+* ``dense``  — (B, S_max, H_kv, Dh) K/V per layer; supports full and windowed
+               attention; sequence dim is the context-parallel shard axis.
+* ``ring``   — (B, W, H_kv, Dh) sliding-window ring buffer (SWA archs at 500k:
+               O(W) memory instead of O(S)). Slot positions are tracked so
+               masking stays exact.
+* ``ssm``    — Mamba2 conv tail + SSD state, O(1) in sequence length.
+
+Caches for a layer stack are stacked on a leading L axis and scanned.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# -- dense ------------------------------------------------------------------
+
+def init_dense_cache(batch: int, max_seq: int, n_kv: int, head_dim: int, dtype):
+    return {
+        "k": jnp.zeros((batch, max_seq, n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, max_seq, n_kv, head_dim), dtype),
+    }
+
+
+def dense_cache_insert(cache, k_new, v_new, pos: jnp.ndarray):
+    """Insert (B, S_new, H, D) at sequence offset ``pos`` (scalar int32)."""
+    idx = (0, pos, 0, 0)
+    return {
+        "k": jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), idx),
+        "v": jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), idx),
+    }
+
+
+def dense_cache_positions(cache, length: jnp.ndarray):
+    """kv positions (S_max,) with slots >= length masked as -1."""
+    s = cache["k"].shape[1]
+    pos = jnp.arange(s, dtype=jnp.int32)
+    return jnp.where(pos < length, pos, -1)
+
+
+def dense_cache_insert_rows(cache, k_new, v_new, pos_b: jnp.ndarray):
+    """Per-slot insert for continuous batching: row b gets its token at its
+    own position pos_b[b]. k_new/v_new (B, 1, H, D); pos_b (B,) int32."""
+    def one(c, x, p):
+        return jax.lax.dynamic_update_slice(c, x.astype(c.dtype), (p, 0, 0))
+    k = jax.vmap(one)(cache["k"], k_new, pos_b.astype(jnp.int32))
+    v = jax.vmap(one)(cache["v"], v_new, pos_b.astype(jnp.int32))
+    return {"k": k, "v": v}
+
+
+def dense_cache_positions_rows(cache, lengths: jnp.ndarray):
+    """(B, S_max) kv positions with per-row valid lengths."""
+    s = cache["k"].shape[1]
+    pos = jnp.arange(s, dtype=jnp.int32)[None]
+    return jnp.where(pos < lengths.astype(jnp.int32)[:, None], pos, -1)
+
+
+# -- ring (SWA) ---------------------------------------------------------------
+
+def init_ring_cache(batch: int, window: int, n_kv: int, head_dim: int, dtype):
+    return {
+        "k": jnp.zeros((batch, window, n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, window, n_kv, head_dim), dtype),
+        "slot_pos": jnp.full((window,), -1, jnp.int32),   # absolute position per slot
+    }
+
+
+def ring_cache_insert(cache, k_new, v_new, pos: jnp.ndarray):
+    """Insert a single token (B, 1, H, D) at absolute position ``pos``."""
+    w = cache["k"].shape[1]
+    slot = jnp.mod(pos, w)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
+    sp = jax.lax.dynamic_update_slice(cache["slot_pos"], pos[None].astype(jnp.int32), (slot,))
+    return {"k": k, "v": v, "slot_pos": sp}
+
+
+# -- ssm ----------------------------------------------------------------------
+
+def init_ssm_state(batch: int, n_heads: int, head_dim: int, d_state: int,
+                   conv_width: int, conv_channels: int, dtype):
+    return {
+        "ssd": jnp.zeros((batch, n_heads, head_dim, d_state), jnp.float32),
+        "conv": jnp.zeros((batch, conv_width - 1, conv_channels), dtype),
+    }
+
+
+# -- assembly -----------------------------------------------------------------
+
+def stack_caches(caches):
+    """[cache_pytree] * L → one pytree with leading L axis (scan-ready)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *caches)

@@ -1,0 +1,130 @@
+"""Mamba2 block: fused in-projection, depthwise causal conv, SSD core,
+gated RMS norm, out-projection. The SSD core lives in repro.kernels.ops.
+
+Layout follows the Mamba2 reference: one in_proj produces
+  [z (d_inner) | xBC (d_inner + 2·G·N) | dt (H)]
+with the short causal conv applied to the xBC slab only.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops as kops
+from repro.models.layers import dense_init, rms_norm
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    di = cfg.d_inner
+    H = cfg.ssm_heads
+    conv_ch = di + 2 * s.n_groups * s.d_state
+    return s, di, H, conv_ch
+
+
+def init_mamba(cfg: ModelConfig, key):
+    s, di, H, conv_ch = _dims(cfg)
+    D = cfg.d_model
+    ks = jax.random.split(key, 5)
+    proj_out = 2 * di + 2 * s.n_groups * s.d_state + H
+    # dt bias init so softplus(dt_bias) spans [dt_min, dt_max] (mamba2 init)
+    u = jax.random.uniform(ks[2], (H,), jnp.float32)
+    dt0 = jnp.exp(u * (jnp.log(s.dt_max) - jnp.log(s.dt_min)) + jnp.log(s.dt_min))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))    # inverse softplus
+    return {
+        "in_proj": dense_init(ks[0], (D, proj_out)),
+        "conv_w": dense_init(ks[1], (s.conv_width, conv_ch), in_axis_size=s.conv_width),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "dt_bias": dt_bias,
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "gate_norm": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[3], (di, D), in_axis_size=di),
+    }
+
+
+def _causal_conv(w, b, x, state=None):
+    """Depthwise causal conv, width cw. x (B,S,C); state (B,cw-1,C) or None.
+    Returns (y (B,S,C), new_state)."""
+    cw = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i].astype(x.dtype) for i in range(cw))
+    y = y + b.astype(x.dtype)
+    new_state = xp[:, -(cw - 1):, :] if cw > 1 else state
+    return y, new_state
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    s, di, H, _ = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * gn]
+    dt = zxbcdt[..., di + di + 2 * gn:]
+    return z, xbc, dt
+
+
+def _split_xbc(cfg: ModelConfig, xbc):
+    s, di, H, _ = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    xs = xbc[..., :di]
+    Bm = xbc[..., di:di + gn]
+    Cm = xbc[..., di + gn:]
+    return xs, Bm, Cm
+
+
+def apply_mamba(cfg: ModelConfig, p, x, *, impl="chunked"):
+    """Full-sequence Mamba2 block (train / prefill, state discarded)."""
+    y, _ = apply_mamba_with_state(cfg, p, x, conv_state=None, ssd_state=None, impl=impl)
+    return y
+
+
+def apply_mamba_with_state(cfg: ModelConfig, p, x, *, conv_state, ssd_state,
+                           impl="chunked"):
+    s, di, H, conv_ch = _dims(cfg)
+    B, S, D = x.shape
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc, new_conv = _causal_conv(p["conv_w"], p["conv_b"], xbc, conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs, Bm, Cm = _split_xbc(cfg, xbc)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])      # (B,S,H)
+    xh = xs.reshape(B, S, H, s.head_dim)
+    Bh = Bm.reshape(B, S, s.n_groups, s.d_state)
+    Ch = Cm.reshape(B, S, s.n_groups, s.d_state)
+    y, final_state = kops.ssd(xh, dt, p["A_log"], Bh, Ch, p["D"],
+                              init_state=ssd_state, chunk=s.chunk_size, impl=impl)
+    y = y.reshape(B, S, di)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, {"conv": new_conv, "ssd": final_state}
+
+
+def decode_mamba(cfg: ModelConfig, p, x_new, state):
+    """Single-token recurrent step. x_new (B,1,D); state {"conv","ssd"}."""
+    s, di, H, conv_ch = _dims(cfg)
+    B = x_new.shape[0]
+    zxbcdt = x_new @ p["in_proj"].astype(x_new.dtype)
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+
+    # conv state: (B, cw-1, C) rolling window
+    cw = s.conv_width
+    xp = jnp.concatenate([state["conv"].astype(xbc.dtype), xbc], axis=1)  # (B,cw,C)
+    y = sum(xp[:, i:i + 1, :] * p["conv_w"][i].astype(xbc.dtype) for i in range(cw))
+    xbc = jax.nn.silu(y + p["conv_b"].astype(xbc.dtype))
+    new_conv = xp[:, 1:, :]
+
+    xs, Bm, Cm = _split_xbc(cfg, xbc)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])     # (B,H)
+    xh = xs[:, 0].reshape(B, H, s.head_dim)
+    Bh = Bm[:, 0].reshape(B, s.n_groups, s.d_state)
+    Ch = Cm[:, 0].reshape(B, s.n_groups, s.d_state)
+    y_t, new_ssd = kops.ssd_decode_step(xh, dt, p["A_log"], Bh, Ch, p["D"],
+                                        state["ssd"])
+    y_t = y_t.reshape(B, 1, di)
+    y_t = rms_norm(y_t * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = y_t @ p["out_proj"].astype(x_new.dtype)
+    return out, {"conv": new_conv, "ssd": new_ssd}

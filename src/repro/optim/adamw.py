@@ -1,0 +1,83 @@
+"""AdamW in pure JAX (no optax): decoupled weight decay, bias correction,
+global-norm clipping, cosine schedule with linear warmup.
+
+State is a pytree mirroring params ({m, v} f32 + scalar step), so ZeRO-1
+sharding is just a PartitionSpec choice on m/v (sharding/specs.py).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+
+def init_opt_state(params, dtype=jnp.float32):
+    """``dtype`` — moment dtype; bf16 halves optimizer memory for the 314B
+    arch (quantized-state practice); update math is always f32."""
+    zeros = lambda p: jnp.zeros(p.shape, dtype)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def cosine_lr(step, cfg: OptimizerConfig):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    frac = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-12))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype),
+                        grads), g
+
+
+def adamw_update(params, grads, state, cfg: OptimizerConfig) -> Tuple[dict, dict, dict]:
+    """→ (new_params, new_state, metrics). Decay is NOT applied to 1-D params
+    (norms, biases) — standard practice."""
+    step = state["step"] + 1
+    lr = cosine_lr(step, cfg)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        mdt = m.dtype
+        g = g.astype(jnp.float32)
+        m = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        mh = m / c1
+        vh = v / c2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if p.ndim > 1:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                m.astype(mdt), v.astype(mdt))
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_state = {
+        "m": jax.tree.unflatten(treedef, [o[1] for o in out]),
+        "v": jax.tree.unflatten(treedef, [o[2] for o in out]),
+        "step": step,
+    }
+    return new_p, new_state, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,6 @@
+from repro.roofline.analyze import (CollectiveOp, Roofline, analyze,
+                                    model_flops, parse_collectives,
+                                    PEAK_FLOPS, HBM_BW, ICI_BW)
+
+__all__ = ["CollectiveOp", "Roofline", "analyze", "model_flops",
+           "parse_collectives", "PEAK_FLOPS", "HBM_BW", "ICI_BW"]

@@ -1,0 +1,48 @@
+"""Elastic scaling: re-mesh after failures and reshard state.
+
+Policy: tensor parallelism (the ``model`` axis) is pinned — TP size is a
+property of the model's memory footprint — and the data-parallel axis
+shrinks to the surviving hosts. Losing any chip in a 16-chip TP row loses
+the row, so the new dp size = floor(alive_rows). Checkpoint restore then
+re-places the (host) arrays with the new mesh's NamedShardings; because
+checkpoints store full logical arrays keyed by tree path, any mesh shape
+that tiles the dims can load any checkpoint (tests/test_checkpoint.py
+does 4×2 → 2×2 → 2×4 round trips).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.checkpoint import Checkpointer
+
+
+def plan_remesh(n_alive_chips: int, tp: int = 16,
+                axes=("data", "model")) -> Optional[Tuple[Tuple[int, int], Tuple[str, str]]]:
+    """→ ((dp, tp), axes) for the largest mesh the survivors support, or
+    None if fewer than one TP row survives."""
+    dp = n_alive_chips // tp
+    if dp < 1:
+        return None
+    return (dp, tp), tuple(axes)
+
+
+def remesh(n_alive_chips: int, tp: int = 16, axes=("data", "model")):
+    plan = plan_remesh(n_alive_chips, tp, axes)
+    if plan is None:
+        raise RuntimeError(
+            f"not enough chips ({n_alive_chips}) for one tp={tp} row")
+    shape, names = plan
+    return jax.make_mesh(shape, names)
+
+
+def elastic_restore(ckpt: Checkpointer, like_tree, mesh, spec_tree,
+                    step: Optional[int] = None):
+    """Restore the latest checkpoint and place it on a (possibly different)
+    mesh. → (step, placed_tree)."""
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                             is_leaf=lambda x: isinstance(
+                                 x, jax.sharding.PartitionSpec))
+    return ckpt.restore_placed(like_tree, shardings, step)

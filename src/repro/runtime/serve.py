@@ -1,0 +1,131 @@
+"""Serving engine: continuous batching over a fixed slot grid.
+
+Requests (prompts) occupy slots of a size-B decode batch; every engine tick
+runs ONE jitted decode_step for all slots with per-slot positions (the
+per-slot KV insert is kvcache.dense_cache_insert_rows). New requests join
+as slots free up — no batch-wide barrier, the production pattern for
+high-throughput decode. Prompt tokens are fed incrementally through the
+same decode path (teacher-forced), then generation continues from the
+model's samples until EOS/max_new.
+
+Works for dense and SSM families (per-slot positions; ring caches need
+uniform positions and are served by the batch path / dry-run cells).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step, init_decode_state
+from repro.models.transformer import Impl
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int = 16
+    eos_id: Optional[int] = None
+    # filled by the engine
+    generated: List[int] = field(default_factory=list)
+    slot: int = -1
+    done: bool = False
+    submitted_at: float = 0.0
+    finished_at: float = 0.0
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
+                 max_seq: int = 256, impl: Impl = Impl(remat=False),
+                 dtype=jnp.float32, greedy: bool = True, seed: int = 0):
+        assert cfg.swa_window is None or max_seq <= cfg.swa_window, \
+            "ring caches need uniform positions; lower max_seq or use dense"
+        self.cfg, self.params = cfg, params
+        self.B, self.max_seq = max_batch, max_seq
+        self.impl, self.dtype = impl, dtype
+        self.greedy = greedy
+        self.key = jax.random.PRNGKey(seed)
+
+        state = init_decode_state(cfg, params, max_batch, max_seq,
+                                  dtype=dtype, impl=impl)
+        state["pos"] = jnp.zeros((max_batch,), jnp.int32)
+        self.state = state
+        self._step = jax.jit(
+            lambda p, s, t: decode_step(cfg, p, s, t, impl=impl, dtype=dtype))
+
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.queue: List[Request] = []
+        self.current_token = np.zeros((max_batch, 1), np.int32)
+        self.prompt_cursor = np.zeros(max_batch, np.int64)
+        self.completed: List[Request] = []
+        self.ticks = 0
+
+    # -- request management -----------------------------------------------
+    def submit(self, req: Request):
+        req.submitted_at = time.perf_counter()
+        self.queue.append(req)
+
+    def _admit(self):
+        for b in range(self.B):
+            if self.slots[b] is None and self.queue:
+                req = self.queue.pop(0)
+                req.slot = b
+                self.slots[b] = req
+                # reset slot: zero its cache rows + position
+                self.state["caches"] = jax.tree.map(
+                    lambda c: c.at[:, b].set(0) if c.ndim >= 2 else c,
+                    self.state["caches"])
+                self.state["pos"] = self.state["pos"].at[b].set(0)
+                self.current_token[b, 0] = req.prompt[0]
+                self.prompt_cursor[b] = 1
+
+    def _retire(self, b: int):
+        req = self.slots[b]
+        req.done = True
+        req.finished_at = time.perf_counter()
+        self.completed.append(req)
+        self.slots[b] = None
+
+    # -- engine tick ---------------------------------------------------------
+    def tick(self):
+        self._admit()
+        if all(s is None for s in self.slots):
+            return False
+        logits, self.state = self._step(self.params, self.state,
+                                        jnp.asarray(self.current_token))
+        if self.greedy:
+            nxt = np.asarray(jnp.argmax(logits[:, -1], -1), np.int32)
+        else:
+            self.key, k = jax.random.split(self.key)
+            nxt = np.asarray(jax.random.categorical(k, logits[:, -1]), np.int32)
+        self.ticks += 1
+
+        for b, req in enumerate(self.slots):
+            if req is None:
+                continue
+            cur = int(self.prompt_cursor[b])
+            if cur < len(req.prompt):              # still feeding the prompt
+                self.current_token[b, 0] = req.prompt[cur]
+                self.prompt_cursor[b] = cur + 1
+                continue
+            tok = int(nxt[b])
+            req.generated.append(tok)
+            self.current_token[b, 0] = tok
+            pos = int(self.state["pos"][b])
+            if (len(req.generated) >= req.max_new
+                    or (req.eos_id is not None and tok == req.eos_id)
+                    or pos >= self.max_seq - 1):
+                self._retire(b)
+        return True
+
+    def run_until_drained(self, max_ticks: int = 10_000):
+        while (self.queue or any(s is not None for s in self.slots)) \
+                and self.ticks < max_ticks:
+            self.tick()
+        return self.completed

@@ -1,0 +1,102 @@
+"""Step functions: train (microbatched grad accumulation + AdamW), prefill,
+decode. Shared by the real runtime (runtime/train_loop.py) and the dry-run
+(launch/dryrun.py) so what we lower at 512 devices is exactly what runs.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, OptimizerConfig, TrainConfig
+from repro.models import forward, loss_fn, decode_step as model_decode_step
+from repro.models.transformer import Impl
+from repro.optim import adamw_update
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, impl: Impl,
+                    dp=("data",), grad_specs=None):
+    """→ train_step(params, opt_state, batch) → (params, opt_state, metrics).
+
+    The global batch is split into microbatches consumed by lax.scan;
+    gradients accumulate in f32 (ZeRO-1 sharding comes from the opt-state
+    PartitionSpecs, remat from Impl). One optimizer step per call.
+
+    The (B,) → (n_micro, micro) reshape needs an explicit sharding
+    constraint: without it GSPMD may shard the *scan* dimension (n_micro is
+    usually smaller than the dp axis) and replicate the batch instead —
+    measured as an 8× flops blow-up before the constraint.
+
+    ``grad_specs`` (beyond-paper §Perf): PartitionSpecs for the gradient
+    accumulator. Passing the fsdp_tp specs keeps the accumulating grads
+    SHARDED over the data axes through the microbatch scan — each
+    microbatch contributes via reduce-scatter instead of all-reduce (half
+    the bytes), and the params all-gather once in the optimizer. This is
+    ZeRO-1 done properly; None = the chatty per-microbatch-all-reduce
+    baseline that GSPMD picks on its own."""
+    from jax.sharding import PartitionSpec as P
+    dtype = _dtype(tcfg.dtype)
+    micro = tcfg.microbatch_size
+    dpe = None if dp is None else (dp if len(dp) > 1 else dp[0])
+
+    def train_step(params, opt_state, batch):
+        B = batch["tokens"].shape[0]
+        n_micro = max(1, B // micro)
+
+        def to_micro(x):
+            m = x.reshape((n_micro, B // n_micro) + x.shape[1:])
+            if dpe is None:          # single-device / no-mesh runs
+                return m
+            return jax.lax.with_sharding_constraint(
+                m, P(None, dpe, *([None] * (x.ndim - 1))))
+
+        mbatches = jax.tree.map(to_micro, batch)
+        gzero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def shard_grads(g):
+            if grad_specs is None:
+                return g
+            return jax.tree.map(
+                lambda x, s: jax.lax.with_sharding_constraint(x, s),
+                g, grad_specs)
+
+        gzero = shard_grads(gzero)
+
+        def body(carry, mb):
+            gsum, loss_sum = carry
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: loss_fn(cfg, p, mb, impl=impl, dtype=dtype),
+                has_aux=True)(params)
+            gsum = shard_grads(jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), gsum, grads))
+            return (gsum, loss_sum + loss), None
+
+        (gsum, loss_sum), _ = jax.lax.scan(body, (gzero, jnp.float32(0)), mbatches)
+        grads = jax.tree.map(lambda g: g / n_micro, gsum)
+        params, opt_state, om = adamw_update(params, grads, opt_state, tcfg.optimizer)
+        metrics = {"loss": loss_sum / n_micro, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, impl: Impl, dtype=jnp.bfloat16):
+    """Serving prefill: full-context forward, next-token logits only."""
+    def prefill_step(params, batch):
+        logits, _ = forward(cfg, params, batch, impl=impl, dtype=dtype,
+                            last_only=True)
+        return logits
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, impl: Impl, dtype=jnp.bfloat16):
+    """Serving decode: one token through the cached stack."""
+    def serve_step(params, state, token):
+        return model_decode_step(cfg, params, state, token, impl=impl, dtype=dtype)
+    return serve_step

@@ -1,0 +1,163 @@
+"""Training driver: microbatched steps, async checkpointing, restart-on-
+failure, straggler telemetry, elastic re-mesh hooks.
+
+The loop is deliberately host-side-simple: every piece of cluster logic
+(failure detection, restart decision, straggler mitigation, data-stream
+determinism) is a small testable object, and the heavy lifting is one
+jitted train_step. Restart semantics: state is (params, opt_state, step);
+data is a pure function of step — so restore(step=k) reproduces the exact
+trajectory a non-failed run would have taken (asserted by
+tests/test_runtime.py::test_restart_equivalence).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.data import SyntheticDataset
+from repro.models import init_params
+from repro.models.transformer import Impl
+from repro.optim import init_opt_state
+from repro.runtime.fault import (FailureInjector, GuardTripError,
+                                 HeartbeatMonitor, StragglerDetector)
+from repro.runtime.steps import make_train_step
+
+
+@dataclass
+class TrainReport:
+    steps_run: int = 0
+    restarts: int = 0
+    stragglers: int = 0
+    guard_trips: int = 0
+    losses: List[float] = field(default_factory=list)
+    events: List[str] = field(default_factory=list)
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig, *,
+                 global_batch: int, seq_len: int,
+                 checkpoint_dir: Optional[str] = None,
+                 impl: Impl = Impl(remat=False),
+                 workers: Optional[List[str]] = None,
+                 injector: Optional[FailureInjector] = None,
+                 mesh=None, dp=None):
+        self.cfg, self.tcfg = cfg, tcfg
+        self.global_batch, self.seq_len = global_batch, seq_len
+        self.impl = impl
+        self.mesh = mesh
+        self.dataset = SyntheticDataset(cfg, seq_len, seed=tcfg.seed)
+        self.ckpt = (Checkpointer(checkpoint_dir, keep=tcfg.keep_checkpoints)
+                     if checkpoint_dir else None)
+        self.monitor = HeartbeatMonitor(workers or ["w0"], timeout=1e9)
+        self.injector = injector or FailureInjector()
+        self.straggler = StragglerDetector()
+        self._step_fn = None
+        self.dp = dp
+
+    # -- state ------------------------------------------------------------
+    def init_state(self, seed: int = 0):
+        params = init_params(self.cfg, jax.random.PRNGKey(seed))
+        return {"params": params, "opt": init_opt_state(params)}
+
+    def _fn(self):
+        if self._step_fn is None:
+            step = make_train_step(self.cfg, self.tcfg, self.impl, dp=self.dp)
+            self._step_fn = jax.jit(step, donate_argnums=(0, 1))
+        return self._step_fn
+
+    # -- checkpoint/restart -------------------------------------------------
+    def save(self, step: int, state, blocking=False):
+        if self.ckpt:
+            self.ckpt.save(step, {"params": state["params"], "opt": state["opt"]},
+                           blocking=blocking)
+
+    def restore_or_init(self):
+        state = self.init_state(self.tcfg.seed)
+        start = 0
+        if self.ckpt and self.ckpt.latest_step() is not None:
+            start, host = self.ckpt.restore(
+                {"params": state["params"], "opt": state["opt"]})
+            state = jax.tree.map(jax.numpy.asarray, host)
+        return start, state
+
+    # -- main loop ------------------------------------------------------------
+    def run(self, num_steps: int, state=None, start_step: int = 0,
+            report: Optional[TrainReport] = None) -> TrainReport:
+        report = report or TrainReport()
+        if state is None:
+            start_step, state = self.restore_or_init()
+            if start_step:
+                report.events.append(f"resumed from checkpoint step {start_step}")
+        fn = self._fn()
+        step = start_step
+        import contextlib
+        ctx = self.mesh if self.mesh is not None else contextlib.nullcontext()
+        with ctx:
+            while step < num_steps:
+                # -- failure detection / restart -------------------------------
+                failed = self.injector.fire(step, self.monitor)
+                if failed or self.monitor.check():
+                    report.restarts += 1
+                    report.events.append(
+                        f"step {step}: workers failed {sorted(failed)}; "
+                        f"restarting from last checkpoint")
+                    for w in failed:            # replacement joins
+                        self.monitor._workers[w].alive = True
+                        self.monitor.beat(w)
+                    self.injector.schedule.pop(step, None)
+                    if self.ckpt:
+                        self.ckpt.wait()
+                        step, state = self.restore_or_init()
+                    continue
+
+                batch = self.dataset.batch(step, self.global_batch)
+                t0 = time.perf_counter()
+                try:
+                    params, opt, metrics = fn(state["params"], state["opt"], batch)
+                except GuardTripError as e:
+                    report.guard_trips += 1
+                    report.events.append(f"step {step}: guard trip — retry ({e.detail})")
+                    continue
+                # fabric-guarded steps surface MAC verification as a metric;
+                # a trip means a corrupted exchange — the step result is
+                # untrusted, so recover from the last checkpoint (donated
+                # buffers preclude in-place retry)
+                if float(metrics.get("guard_ok", 1)) == 0:
+                    report.guard_trips += 1
+                    report.events.append(
+                        f"step {step}: channel guard tripped — restoring "
+                        f"last checkpoint")
+                    if self.ckpt:
+                        self.ckpt.wait()
+                        step, state = self.restore_or_init()
+                    else:
+                        state = self.init_state(self.tcfg.seed)
+                        step = 0
+                    continue
+                state = {"params": params, "opt": opt}
+                dt = time.perf_counter() - t0
+                if self.straggler.observe(dt):
+                    report.stragglers += 1
+                    report.events.append(
+                        f"step {step}: straggler ({dt:.3f}s vs median "
+                        f"{self.straggler.median:.3f}s)")
+                loss = float(metrics["loss"])
+                report.losses.append(loss)
+                report.steps_run += 1
+                step += 1
+                if self.tcfg.log_every and step % self.tcfg.log_every == 0:
+                    print(f"step {step:5d} loss {loss:8.4f} "
+                          f"lr {float(metrics['lr']):.2e} "
+                          f"gnorm {float(metrics['grad_norm']):.3f} "
+                          f"({dt*1e3:.0f} ms)")
+                if self.ckpt and step % self.tcfg.checkpoint_every == 0:
+                    self.save(step, state)
+            if self.ckpt:
+                self.save(num_steps, state, blocking=True)
+        return report

@@ -1,0 +1,4 @@
+from repro.sharding.specs import (batch_specs, decode_state_specs,
+                                  opt_state_specs, param_specs)
+
+__all__ = ["batch_specs", "decode_state_specs", "opt_state_specs", "param_specs"]

@@ -1,0 +1,193 @@
+"""PartitionSpec policies: how every parameter, activation, batch field and
+cache shards over the ("pod", "data", "model") production mesh.
+
+Policies
+--------
+``tp``       Megatron-style tensor parallelism on the ``model`` axis
+             (attention heads / FFN hidden / vocab), pure DP elsewhere.
+``fsdp_tp``  ``tp`` plus parameters (and optimizer state) sharded over the
+             data axes on a remaining dim — ZeRO-3-style per-layer
+             all-gather under scan+remat. Required for grok-1-314b
+             (628 GB bf16 > 16 GB × 16-way TP).
+
+Divisibility-aware fallbacks (jax argument shardings must tile evenly):
+  * attention heads shard over model when H % tp == 0, otherwise the
+    head_dim shards (qwen3 40H, smollm 15H/5KV, whisper 6H, 8-KV GQA —
+    every assigned head_dim ∈ {64, 80, 128} divides 16);
+  * vocab shards over model when divisible (mamba2's 50280 and whisper's
+    51865 are not → the d_model dim shards instead);
+  * any fsdp dim that doesn't tile the data axes falls back to replicated.
+
+The builders are rule-based over tree paths + shapes, so any new module
+following the naming conventions shards correctly without new code.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def _axes_size(ax, sizes) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        n = 1
+        for a in ax:
+            n *= sizes[a]
+        return n
+    return sizes[ax]
+
+
+def _fits(dim: int, ax, sizes) -> bool:
+    return dim % _axes_size(ax, sizes) == 0
+
+
+def _rule(path: str, shape: Tuple[int, ...], policy: str, dp, sizes):
+    """→ spec entries for the *unstacked* param."""
+    fsdp = dp if policy == "fsdp_tp" else None
+    last = path.rsplit("/", 1)[-1]
+
+    def f(dim_idx, ax=fsdp):
+        """fsdp axis if it tiles this dim, else replicated."""
+        return ax if (ax is not None and _fits(shape[dim_idx], ax, sizes)) else None
+
+    def tp(dim_idx):
+        return "model" if _fits(shape[dim_idx], "model", sizes) else None
+
+    if path.endswith("embed/tok"):                       # (V, D)
+        if _fits(shape[0], "model", sizes):
+            return ("model", f(1))
+        # non-divisible vocab (mamba2 50280, whisper 51865): replicate —
+        # sharding D would make every logits matmul all-reduce a (B,S,V)
+        return (f(0), None)
+    if path.endswith("embed/head"):                      # (D, V)
+        if _fits(shape[1], "model", sizes):
+            return (f(0), "model")
+        return (f(0), None)
+    if path.endswith("vision_proj/w"):
+        return (None, None)
+    if last in ("wq", "wk", "wv"):                       # (D, H, Dh)
+        if _fits(shape[1], "model", sizes):
+            return (f(0), "model", None)
+        # non-divisible heads (qwen3 40H, smollm 15/5, whisper 6, 8-KV GQA):
+        # replicate over model — sharding Dh makes every attention dot
+        # contract a sharded dim (an all-reduce per flash block: measured
+        # 31 TB/step on smollm before this rule). Attention runs DP-only;
+        # the idle model axis shows up in the roofline compute term and is
+        # the explicit target of the seq-parallel hillclimb.
+        return (f(0), None, None)
+    if last == "wo":                                     # (H, Dh, D)
+        if _fits(shape[0], "model", sizes):
+            return ("model", None, f(2))
+        return (None, None, f(2))
+    if last in ("gate", "up"):
+        if len(shape) == 3:                              # moe (E, D, F)
+            return (None, f(1), tp(2))
+        return (f(0), tp(1))                             # dense (D, F)
+    if last == "down":
+        if len(shape) == 3:                              # moe (E, F, D)
+            return (None, tp(1), f(2))
+        return (tp(0), f(1))                             # dense (F, D)
+    if last == "router":                                 # (D, E)
+        return (f(0), None)
+    if last == "in_proj":                                # (D, PO)
+        return (f(0), tp(1))
+    if last == "conv_w":                                 # (cw, C)
+        return (None, tp(1))
+    if last in ("conv_b", "dt_bias", "A_log", "D", "gate_norm"):
+        return (tp(0),)
+    if last == "out_proj":                               # (di, D)
+        return (tp(0), f(1))
+    return (None,) * len(shape)                          # norms, scalars
+
+
+def param_specs(cfg: ModelConfig, params_tree, *, policy: str = "tp",
+                dp=("data",), mesh=None, axis_sizes=None):
+    """params_tree: pytree of arrays or ShapeDtypeStructs → pytree of P."""
+    sizes = axis_sizes or (dict(zip(mesh.axis_names, mesh.devices.shape))
+                           if mesh is not None else
+                           {"pod": 2, "data": 16, "model": 16})
+    dp_entry = dp if len(dp) > 1 else dp[0]
+
+    def spec_of(path, leaf):
+        ps = _path_str(path)
+        stacked = ps.split("/")[0] in ("blocks", "enc_blocks")
+        shape = tuple(leaf.shape[1:]) if stacked else tuple(leaf.shape)
+        entries = tuple(_rule(ps, shape, policy, dp_entry, sizes))[:len(shape)]
+        entries = entries + (None,) * (len(shape) - len(entries))
+        if stacked:
+            entries = (None,) + entries
+        return P(*entries)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_tree)
+    return jax.tree_util.tree_unflatten(treedef, [spec_of(p, l) for p, l in flat])
+
+
+def opt_state_specs(cfg: ModelConfig, params_tree, *, dp=("data",), mesh=None,
+                    axis_sizes=None):
+    """ZeRO-1: moments shard like fsdp_tp params (sharded over data axes on
+    top of TP) regardless of the param policy; scalar step replicated."""
+    ps = param_specs(cfg, params_tree, policy="fsdp_tp", dp=dp, mesh=mesh,
+                     axis_sizes=axis_sizes)
+    return {"m": ps, "v": ps, "step": P()}
+
+
+def batch_specs(cfg: ModelConfig, *, dp=("data",)):
+    dpe = dp if len(dp) > 1 else dp[0]
+    specs = {"tokens": P(dpe, None), "labels": P(dpe, None)}
+    if cfg.vision_tokens:
+        specs["vision_embeds"] = P(dpe, None, None)
+    if cfg.enc_dec:
+        specs["frames"] = P(dpe, None, None)
+    return specs
+
+
+def decode_state_specs(cfg: ModelConfig, state_tree, *, dp=("data",),
+                       batch: int = 0, seq_shard=("model",)):
+    """Cache sharding, rule-based over the actual decode-state pytree
+    (pass jax.eval_shape(init_decode_state, ...) output).
+
+    KV-cache *sequence* dims shard over ``seq_shard`` — context parallelism,
+    because KV head counts (5..32) never divide a 256-chip pod. When
+    batch == 1 (long_500k) the data axes join the sequence shard so no mesh
+    axis idles. SSM states shard heads over model (falling back to head_dim
+    when heads don't divide); the conv tail shards channels over model."""
+    dpe = dp if len(dp) > 1 else dp[0]
+    sizes = {"pod": 2, "data": 16, "model": 16}
+    if batch == 1:
+        cache_b = None
+        seq_axes = tuple(dp) + tuple(seq_shard)
+        seq = seq_axes if len(seq_axes) > 1 else seq_axes[0]
+    else:
+        cache_b = dpe
+        seq = seq_shard if len(seq_shard) > 1 else seq_shard[0]
+
+    def spec_of(path, leaf):
+        ps = _path_str(path)
+        last = ps.rsplit("/", 1)[-1]
+        if last == "pos":
+            return P()
+        if last == "slot_pos":                     # (L, W)
+            return P(None, seq)
+        if last == "ssd":                          # (L, B, H, P, N)
+            h_ok = leaf.shape[2] % _axes_size("model", sizes) == 0
+            return (P(None, cache_b, "model", None, None) if h_ok
+                    else P(None, cache_b, None, "model", None))
+        if last == "conv":                         # (L, B, cw-1, C)
+            return P(None, cache_b, None, "model")
+        if "cross" in ps:                          # (L, B, Se, Hkv, Dh) — small
+            return P(None, cache_b, None, None, None)
+        if last in ("k", "v"):                     # (L, B, S, Hkv, Dh)
+            return P(None, cache_b, seq, None, None)
+        return P(*([None] * leaf.ndim))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state_tree)
+    return jax.tree_util.tree_unflatten(treedef, [spec_of(p, l) for p, l in flat])

@@ -1,0 +1,18 @@
+"""Small shared utilities."""
+from __future__ import annotations
+
+import jax
+
+
+def match_vma(x, like):
+    """Make ``x``'s varying-manual-axes match ``like``'s (shard_map scan
+    carries initialized from constants must be cast to varying — see the
+    shard_map VMA docs). No-op outside shard_map."""
+    try:
+        vma = jax.typeof(like).vma
+    except AttributeError:
+        return x
+    if not vma:
+        return x
+    return jax.tree.map(
+        lambda a: jax.lax.pcast(a, tuple(vma), to="varying"), x)

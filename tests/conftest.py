@@ -1,0 +1,21 @@
+import os
+import sys
+
+# Tests run on the single real CPU device. Only the dry-run sets the
+# 512-device flag (in its own process); multi-device tests here spawn
+# subprocesses with their own XLA_FLAGS.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)

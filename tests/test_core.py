@@ -1,0 +1,154 @@
+"""MPKLink control plane: domains/keys/PKRU, framing, signatures, CA."""
+import numpy as np
+import pytest
+
+from repro.core import framing
+from repro.core.ca import CertificateAuthority, enroll
+from repro.core.domains import (AccessViolation, KeyRegistry, READ, RW, WRITE,
+                                mac_seed)
+from repro.core import signature as sig
+from repro.core.transports import fast_mac
+
+
+# -- domains / PKRU ----------------------------------------------------------
+
+def test_domain_allocation_and_exhaustion():
+    reg = KeyRegistry(max_keys=4)
+    doms = [reg.allocate_domain(f"d{i}") for i in range(4)]
+    assert len({d.did for d in doms}) == 4
+    with pytest.raises(ResourceWarning):
+        reg.allocate_domain("overflow")          # pkey_alloc ENOSPC analogue
+
+
+def test_rights_enforced():
+    reg = KeyRegistry()
+    dom = reg.allocate_domain("c")
+    ro = reg.issue_key(dom, READ)
+    reg.check(ro, READ)
+    with pytest.raises(AccessViolation):
+        reg.check(ro, WRITE)
+    with pytest.raises(AccessViolation):
+        reg.check(ro, RW)
+
+
+def test_revocation_and_epoch():
+    reg = KeyRegistry()
+    dom = reg.allocate_domain("c")
+    k1 = reg.issue_key(dom, RW)
+    k2 = reg.issue_key(dom, RW)
+    reg.check(k1, RW)
+    reg.revoke(k1)
+    with pytest.raises(AccessViolation):
+        reg.check(k1, READ)                       # revoked
+    with pytest.raises(AccessViolation):
+        reg.check(k2, READ)                       # stale epoch after revoke
+    k3 = reg.issue_key(dom, RW)
+    reg.check(k3, RW)                             # fresh key at new epoch
+
+
+def test_foreign_registry_key_rejected():
+    reg_a, reg_b = KeyRegistry(seed=1), KeyRegistry(seed=2)
+    dom_b = reg_b.allocate_domain("b")
+    key_b = reg_b.issue_key(dom_b)
+    with pytest.raises(AccessViolation):
+        reg_a.check(key_b, READ)
+
+
+def test_pkru_word_layout():
+    reg = KeyRegistry()
+    d0 = reg.allocate_domain("d0")
+    d1 = reg.allocate_domain("d1")
+    k0 = reg.issue_key(d0, RW)
+    k1 = reg.issue_key(d1, READ)
+    word = reg.pkru_word((k0, k1))
+    assert (word >> 0) & 0b11 == 0b00             # RW
+    assert (word >> 2) & 0b11 == 0b10             # read-only: write-disable
+    assert (word >> 4) & 0b11 == 0b11             # unallocated: no access
+
+
+# -- framing ------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape,dtype", [
+    ((7,), np.float32), ((3, 5), np.int32), ((2, 2, 2), np.uint32),
+    ((1,), np.float64), ((128,), np.uint8), ((4, 129), np.float32)])
+def test_frame_roundtrip(shape, dtype):
+    rng = np.random.default_rng(0)
+    arr = (rng.standard_normal(shape) * 100).astype(dtype)
+    frame = framing.build_frame(arr, seed=0xAB, seq=3)
+    out = framing.parse_frame(frame, seed=0xAB, expect_seq=3)
+    np.testing.assert_array_equal(out, arr)
+    assert out.dtype == arr.dtype
+
+
+def test_frame_wrong_seed_rejected():
+    arr = np.arange(10, dtype=np.int32)
+    frame = framing.build_frame(arr, seed=1, seq=0)
+    with pytest.raises(framing.FrameError, match="seed"):
+        framing.parse_frame(frame, seed=2)
+
+
+def test_frame_tamper_rejected():
+    arr = np.arange(300, dtype=np.float32)
+    frame = framing.build_frame(arr, seed=1, seq=0)
+    frame[2, 5] ^= 1
+    with pytest.raises(framing.FrameError, match="MAC"):
+        framing.parse_frame(frame, seed=1)
+
+
+def test_frame_seq_rejected():
+    arr = np.arange(4, dtype=np.int32)
+    frame = framing.build_frame(arr, seed=1, seq=7)
+    with pytest.raises(framing.FrameError, match="sequence"):
+        framing.parse_frame(frame, seed=1, expect_seq=8)
+
+
+def test_fast_mac_equals_reference():
+    rng = np.random.default_rng(1)
+    for rows in (1, 2, 63, 64, 65, 513):
+        p = rng.integers(0, 2 ** 32, (rows, 128), dtype=np.uint64).astype(np.uint32)
+        assert fast_mac(p, 123, block_rows=64) == framing._mac_np(p, 123)
+
+
+# -- signatures / CA -----------------------------------------------------------
+
+def test_sign_verify():
+    kp = sig.KeyPair.generate("svc")
+    s = sig.sign(kp.private, b"hello")
+    assert sig.verify(kp.public, b"hello", s)
+    assert not sig.verify(kp.public, b"tampered", s)
+    other = sig.KeyPair.generate("other")
+    assert not sig.verify(other.public, b"hello", s)
+
+
+def test_dh_session_symmetry():
+    a = sig.KeyPair.generate("a")
+    b = sig.KeyPair.generate("b")
+    assert sig.session_key(a.private, b.public) == sig.session_key(b.private, a.public)
+
+
+def test_ca_grant_flow():
+    ca = CertificateAuthority()
+    enroll(ca, "svc-a")
+    enroll(ca, "svc-b")
+    dom, ka, kb = ca.grant_channel("svc-a", "svc-b")
+    ca.registry.check(ka, RW)
+    ca.registry.check(kb, RW)
+
+
+def test_ca_rejects_unregistered_and_revoked():
+    ca = CertificateAuthority()
+    enroll(ca, "svc-a")
+    with pytest.raises(AccessViolation):
+        ca.grant_channel("svc-a", "ghost")
+    enroll(ca, "svc-b")
+    ca.revoke_service("svc-b")
+    with pytest.raises(AccessViolation):
+        ca.grant_channel("svc-a", "svc-b")
+
+
+def test_ca_rejects_bad_proof():
+    ca = CertificateAuthority()
+    kp = sig.KeyPair.generate("mallory")
+    bad_proof = sig.sign(kp.private, b"not the registration message")
+    with pytest.raises(AccessViolation):
+        ca.register("mallory", kp.public, bad_proof)

@@ -1,0 +1,74 @@
+"""Head padding (--opt-pad-heads) must be function-preserving: embedding the
+real heads of an unpadded attention into the padded layout (zeros elsewhere)
+produces bit-equal outputs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced, replace
+from repro.models import attention as attn_mod
+from repro.models import forward, init_params
+from repro.models.transformer import Impl
+
+
+def _embed_padded(cfg, cfg_pad, p0):
+    """Place p0's real-head weights into a zeroed padded layout."""
+    H, Hkv, Dh, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.d_model
+    Hp, Hkvp = cfg_pad.q_heads_eff, cfg_pad.kv_heads_eff
+    g, gp = H // Hkv, Hp // Hkvp
+    wq = jnp.zeros((D, Hkvp, gp, Dh)).at[:, :Hkv, :g].set(
+        p0["wq"].reshape(D, Hkv, g, Dh)).reshape(D, Hp, Dh)
+    wo = jnp.zeros((Hkvp, gp, Dh, D)).at[:Hkv, :g].set(
+        p0["wo"].reshape(Hkv, g, Dh, D)).reshape(Hp, Dh, D)
+    wk = jnp.zeros((D, Hkvp, Dh)).at[:, :Hkv].set(p0["wk"])
+    wv = jnp.zeros((D, Hkvp, Dh)).at[:, :Hkv].set(p0["wv"])
+    p1 = {"wq": wq, "wk": wk, "wv": wv, "wo": wo}
+    for k in ("q_norm", "k_norm"):
+        if k in p0:
+            p1[k] = p0[k]
+    return p1
+
+
+@pytest.mark.parametrize("arch,pads", [
+    ("qwen3-14b", dict(pad_q_heads=8, pad_kv_heads=4)),      # reduced: 4H/2KV
+    ("smollm-360m", dict(pad_q_heads=8, pad_kv_heads=2)),    # reduced: 3H/1KV
+])
+@pytest.mark.parametrize("impl_name", ["naive", "chunked"])
+def test_padding_preserves_attention(arch, pads, impl_name):
+    cfg = get_reduced(arch)
+    cfg_pad = replace(cfg, **pads)
+    key = jax.random.PRNGKey(0)
+    p0 = attn_mod.init_attn(cfg, key)
+    p1 = _embed_padded(cfg, cfg_pad, p0)
+
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(16, dtype=jnp.int32)[None], (2, 16))
+    y0 = attn_mod.apply_attn(cfg, p0, x, positions=pos, impl=impl_name,
+                             q_chunk=8, kv_chunk=8)
+    y1 = attn_mod.apply_attn(cfg_pad, p1, x, positions=pos, impl=impl_name,
+                             q_chunk=8, kv_chunk=8)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_padded_init_zero_rows():
+    cfg = replace(get_reduced("qwen3-14b"), pad_q_heads=8, pad_kv_heads=4)
+    p = attn_mod.init_attn(cfg, jax.random.PRNGKey(0))
+    H, Hkv = 4, 2                                  # reduced real counts
+    g, gp = H // Hkv, 8 // 4
+    wq = p["wq"].reshape(cfg.d_model, 4, 2, cfg.head_dim)
+    assert float(jnp.abs(wq[:, Hkv:]).max()) == 0.0
+    assert float(jnp.abs(wq[:, :Hkv, g:]).max()) == 0.0 if gp > g else True
+    assert float(jnp.abs(wq[:, :Hkv, :g]).max()) > 0.0
+
+
+def test_padded_model_forward_finite():
+    cfg = replace(get_reduced("qwen3-14b"), pad_q_heads=8, pad_kv_heads=4)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.zeros((2, 16), jnp.int32),
+             "labels": jnp.zeros((2, 16), jnp.int32)}
+    logits, _ = forward(cfg, params, batch, impl=Impl(remat=False, q_chunk=8,
+                                                      kv_chunk=8),
+                        dtype=jnp.float32)
+    assert np.isfinite(np.asarray(logits[..., :cfg.vocab_size])).all()

@@ -1,0 +1,93 @@
+"""Flash attention: jnp twin (fwd+bwd) and Pallas kernel (interpret) vs the
+naive oracle, swept over shapes/dtypes/masking modes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.flash_jnp import flash_attention_jnp
+from repro.kernels.ref import attention_ref
+
+CASES = [
+    # B, Sq, Skv, H, Hkv, Dh, causal, window, qc, kc
+    (2, 17, 17, 4, 2, 8, True, None, 8, 8),
+    (1, 33, 33, 6, 3, 16, True, 5, 8, 8),
+    (2, 1, 40, 4, 2, 8, True, None, 8, 8),       # decode shape
+    (2, 24, 24, 4, 4, 8, False, None, 8, 8),     # MHA, non-causal (cross-attn)
+    (1, 64, 64, 2, 1, 32, True, 16, 16, 16),     # SWA
+    (1, 9, 40, 3, 3, 8, True, None, 4, 16),      # ragged chunking
+]
+
+
+def _inputs(case, dtype=jnp.float32, seed=0):
+    B, Sq, Skv, H, Hkv, Dh, causal, win, qc, kc = case
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (B, Sq, H, Dh), dtype)
+    k = jax.random.normal(ks[1], (B, Skv, Hkv, Dh), dtype)
+    v = jax.random.normal(ks[2], (B, Skv, Hkv, Dh), dtype)
+    qp = jnp.broadcast_to(jnp.arange(Skv - Sq, Skv, dtype=jnp.int32), (B, Sq))
+    kp = jnp.broadcast_to(jnp.arange(Skv, dtype=jnp.int32), (B, Skv))
+    if Skv > 8:
+        kp = kp.at[:, -3:].set(-1)               # unfilled cache slots
+    return q, k, v, qp, kp, causal, win, qc, kc
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_jnp_twin_forward(case):
+    q, k, v, qp, kp, causal, win, qc, kc = _inputs(case)
+    ref = attention_ref(q, k, v, qp, kp, causal=causal, window=win)
+    got = flash_attention_jnp(q, k, v, qp, kp, causal=causal, window=win,
+                              q_chunk=qc, kv_chunk=kc)
+    np.testing.assert_allclose(got, ref, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("case", CASES[:4])
+def test_jnp_twin_grads(case):
+    q, k, v, qp, kp, causal, win, qc, kc = _inputs(case)
+
+    def loss_ref(q, k, v):
+        return (attention_ref(q, k, v, qp, kp, causal=causal, window=win) ** 2).sum()
+
+    def loss_got(q, k, v):
+        return (flash_attention_jnp(q, k, v, qp, kp, causal=causal, window=win,
+                                    q_chunk=qc, kv_chunk=kc) ** 2).sum()
+
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    gg = jax.grad(loss_got, argnums=(0, 1, 2))(q, k, v)
+    for a, b, name in zip(gr, gg, "qkv"):
+        np.testing.assert_allclose(b, a, rtol=5e-5, atol=5e-5, err_msg=name)
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_pallas_kernel(case):
+    q, k, v, qp, kp, causal, win, qc, kc = _inputs(case)
+    # kernel requires divisible shapes; ops.py pads — pad here like ops does
+    from repro.kernels.ops import attention
+    ref = attention_ref(q, k, v, qp, kp, causal=causal, window=win)
+    got = attention(q, k, v, qp, kp, causal=causal, window=win, impl="pallas",
+                    q_chunk=qc, kv_chunk=kc)
+    np.testing.assert_allclose(got, ref, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5), (jnp.bfloat16, 2e-2)])
+def test_dtypes(dtype, tol):
+    case = (2, 32, 32, 4, 2, 16, True, None, 8, 8)
+    q, k, v, qp, kp, causal, win, qc, kc = _inputs(case, dtype=dtype)
+    ref = attention_ref(q, k, v, qp, kp, causal=causal, window=win)
+    jn = flash_attention_jnp(q, k, v, qp, kp, causal=causal, q_chunk=qc, kv_chunk=kc)
+    pa = flash_attention_pallas(q, k, v, qp, kp, causal=causal,
+                                q_chunk=qc, kv_chunk=kc)
+    np.testing.assert_allclose(jn.astype(jnp.float32), ref.astype(jnp.float32),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(pa.astype(jnp.float32), ref.astype(jnp.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_fully_masked_rows_zero():
+    """Queries with q_pos < 0 (padding) must produce exactly 0."""
+    case = (1, 8, 8, 2, 2, 8, True, None, 4, 4)
+    q, k, v, qp, kp, causal, win, qc, kc = _inputs(case)
+    qp = qp.at[:, -2:].set(-2)
+    out = flash_attention_jnp(q, k, v, qp, kp, causal=True, q_chunk=4, kv_chunk=4)
+    assert np.abs(np.asarray(out[:, -2:])).max() == 0.0

@@ -1,0 +1,77 @@
+"""MoE routing invariants and the grouped (GShard) dispatch."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced, replace
+from repro.configs.base import MoEConfig
+from repro.models import moe as moe_mod
+
+
+def _setup(group_size=None, T=64, seed=0):
+    cfg = get_reduced("mixtral-8x7b")
+    cfg = replace(cfg, moe=replace(cfg.moe, group_size=group_size))
+    p = moe_mod.init_moe(cfg, jax.random.PRNGKey(seed))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, T // 2, cfg.d_model))
+    return cfg, p, x
+
+
+def test_routing_capacity_and_mass():
+    cfg, p, x = _setup()
+    xf = x.reshape(-1, x.shape[-1])
+    disp, comb, aux = moe_mod._route(cfg, p, xf)
+    T = xf.shape[0]
+    E, k = cfg.moe.num_experts, cfg.moe.top_k
+    C = max(1, int(cfg.moe.capacity_factor * T * k / E))
+    # every (e, c) slot holds at most one token
+    assert float(jnp.max(jnp.sum(disp, axis=0))) <= 1.0 + 1e-6
+    # each token dispatched at most k times
+    assert float(jnp.max(jnp.sum(disp, axis=(1, 2)))) <= k + 1e-6
+    # combine weights of kept tokens sum to ≤ 1 (renormalized top-k probs)
+    mass = jnp.sum(comb, axis=(1, 2))
+    assert float(jnp.max(mass)) <= 1.0 + 1e-5
+    assert 0.0 <= float(aux["moe_drop_frac"]) <= 1.0
+
+
+def test_aux_losses_finite_and_positive():
+    cfg, p, x = _setup()
+    y, aux = moe_mod.apply_moe(cfg, p, x)
+    assert np.isfinite(float(aux["moe_lb_loss"])) and float(aux["moe_lb_loss"]) > 0
+    assert np.isfinite(float(aux["moe_z_loss"]))
+    assert y.shape == x.shape
+
+
+def test_grouped_equals_ungrouped_when_capacity_loose():
+    """With capacity_factor high enough that nothing drops, grouped routing
+    computes the same function (groups only change slot assignment)."""
+    cfg0 = get_reduced("mixtral-8x7b")
+    loose = replace(cfg0.moe, capacity_factor=8.0)
+    cfgu = replace(cfg0, moe=loose)
+    cfgg = replace(cfg0, moe=replace(loose, group_size=16))
+    p = moe_mod.init_moe(cfgu, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg0.d_model))
+    yu, _ = moe_mod.apply_moe(cfgu, p, x)
+    yg, _ = moe_mod.apply_moe(cfgg, p, x)
+    np.testing.assert_allclose(np.asarray(yu), np.asarray(yg), rtol=2e-5, atol=2e-5)
+
+
+def test_dropped_tokens_fall_to_residual():
+    """capacity_factor → 0 forces drops; output ≈ 0 for dropped tokens (the
+    residual path continues in the block)."""
+    cfg0 = get_reduced("mixtral-8x7b")
+    cfgt = replace(cfg0, moe=replace(cfg0.moe, capacity_factor=0.01))
+    p = moe_mod.init_moe(cfgt, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, cfg0.d_model))
+    y, aux = moe_mod.apply_moe(cfgt, p, x)
+    assert float(aux["moe_drop_frac"]) > 0.5
+    # most rows are zeros
+    row_norms = jnp.linalg.norm(y[0], axis=-1)
+    assert float(jnp.median(row_norms)) == 0.0
+
+
+def test_grads_flow_through_router():
+    cfg, p, x = _setup()
+    g = jax.grad(lambda p: moe_mod.apply_moe(cfg, p, x)[0].sum()
+                 + moe_mod.apply_moe(cfg, p, x)[1]["moe_lb_loss"])(p)
+    assert float(jnp.sum(jnp.abs(g["router"]))) > 0

@@ -1,0 +1,125 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import framing
+from repro.core.transports import fast_mac
+from repro.core.wordcount import count_words, make_text
+from repro.kernels.flash_jnp import flash_attention_jnp
+from repro.kernels.ref import attention_ref, mac_ref
+from repro.optim import dequantize_int8, quantize_int8
+
+SET = settings(max_examples=25, deadline=None)
+
+
+@given(st.integers(1, 2000), st.integers(0, 10_000))
+@SET
+def test_wordcount_exact(n, seed):
+    assert int(count_words(make_text(n, seed=seed))[0]) == n
+
+
+@given(st.lists(st.integers(-1000, 1000), min_size=1, max_size=300),
+       st.integers(0, 2 ** 32 - 1), st.integers(0, 2 ** 31))
+@SET
+def test_frame_roundtrip_any_ints(data, seed, seq):
+    arr = np.asarray(data, np.int32)
+    frame = framing.build_frame(arr, seed=seed, seq=seq)
+    out = framing.parse_frame(frame, seed=seed, expect_seq=seq)
+    np.testing.assert_array_equal(out, arr)
+
+
+@given(st.integers(1, 200), st.integers(0, 127), st.integers(0, 2 ** 32 - 1))
+@SET
+def test_mac_detects_any_single_flip(rows, lane, seed):
+    rng = np.random.default_rng(seed % 1000)
+    p = rng.integers(0, 2 ** 32, (rows, 128), dtype=np.uint64).astype(np.uint32)
+    row = seed % rows
+    m0 = fast_mac(p, seed)
+    p2 = p.copy()
+    p2[row, lane] ^= np.uint32(1 << (seed % 32))
+    assert fast_mac(p2, seed) != m0
+
+
+@given(st.integers(1, 400), st.integers(0, 10 ** 6))
+@SET
+def test_fast_mac_matches_scan_mac(rows, seed):
+    rng = np.random.default_rng(seed)
+    p = rng.integers(0, 2 ** 32, (rows, 128), dtype=np.uint64).astype(np.uint32)
+    assert fast_mac(p, seed, block_rows=37) == framing._mac_np(p, seed)
+    got = int(mac_ref(jnp.asarray(p), jnp.uint32(seed & 0xFFFFFFFF)))
+    assert got == framing._mac_np(p, seed & 0xFFFFFFFF)
+
+
+@given(st.integers(2, 64), st.integers(0, 10 ** 6))
+@SET
+def test_quantize_error_bounded(n, seed):
+    x = np.random.default_rng(seed).standard_normal(n).astype(np.float32) * 10
+    q, s = quantize_int8(jnp.asarray(x))
+    err = np.abs(np.asarray(dequantize_int8(q, s)) - x).max()
+    assert err <= float(s) * 0.5 + 1e-6
+
+
+@given(st.integers(4, 24), st.integers(0, 10 ** 6))
+@SET
+def test_attention_causality(S, seed):
+    """Output at position t is independent of tokens at positions > t."""
+    ks = jax.random.split(jax.random.PRNGKey(seed % 2 ** 30), 4)
+    B, H, Dh = 1, 2, 8
+    q = jax.random.normal(ks[0], (B, S, H, Dh))
+    k = jax.random.normal(ks[1], (B, S, H, Dh))
+    v = jax.random.normal(ks[2], (B, S, H, Dh))
+    pos = jnp.arange(S, dtype=jnp.int32)[None]
+    out = flash_attention_jnp(q, k, v, pos, pos, causal=True, q_chunk=4, kv_chunk=4)
+    t = S // 2
+    k2 = k.at[:, t + 1:].set(jax.random.normal(ks[3], (B, S - t - 1, H, Dh)))
+    v2 = v.at[:, t + 1:].set(0.5)
+    out2 = flash_attention_jnp(q, k2, v2, pos, pos, causal=True, q_chunk=4, kv_chunk=4)
+    np.testing.assert_allclose(out[:, :t + 1], out2[:, :t + 1], rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(1, 30), st.integers(0, 10 ** 6))
+@SET
+def test_chunked_attention_matches_ref_random_shapes(S, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed % 2 ** 30), 3)
+    B, Hkv, g, Dh = 1, 2, 2, 4
+    H = Hkv * g
+    q = jax.random.normal(ks[0], (B, S, H, Dh))
+    k = jax.random.normal(ks[1], (B, S, Hkv, Dh))
+    v = jax.random.normal(ks[2], (B, S, Hkv, Dh))
+    pos = jnp.arange(S, dtype=jnp.int32)[None]
+    ref = attention_ref(q, k, v, pos, pos, causal=True)
+    got = flash_attention_jnp(q, k, v, pos, pos, causal=True, q_chunk=8, kv_chunk=8)
+    np.testing.assert_allclose(got, ref, rtol=3e-5, atol=3e-5)
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@SET
+def test_signature_never_verifies_wrong_message(seed):
+    from repro.core import signature as sig
+    kp = sig.KeyPair.generate(f"svc{seed}")
+    s = sig.sign(kp.private, b"m1")
+    assert sig.verify(kp.public, b"m1", s)
+    assert not sig.verify(kp.public, b"m2", s)
+
+
+@given(st.integers(1, 64), st.integers(1, 8), st.integers(0, 10 ** 6))
+@SET
+def test_ssd_is_linear_in_x(S, P, seed):
+    """The SSD recurrence is linear in x: f(αx) == αf(x) (with D term)."""
+    from repro.kernels.ssd_jnp import ssd_chunked
+    ks = jax.random.split(jax.random.PRNGKey(seed % 2 ** 30), 5)
+    B, H, G, N = 1, 2, 1, 4
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H))) * 0.1
+    A_log = jax.random.normal(ks[2], (H,)) * 0.3
+    Bm = jax.random.normal(ks[3], (B, S, G, N))
+    Cm = jax.random.normal(ks[4], (B, S, G, N))
+    D = jnp.ones((H,))
+    y1, s1 = ssd_chunked(x, dt, A_log, Bm, Cm, D, chunk=8)
+    y2, s2 = ssd_chunked(3.0 * x, dt, A_log, Bm, Cm, D, chunk=8)
+    np.testing.assert_allclose(np.asarray(y2), 3.0 * np.asarray(y1),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s2), 3.0 * np.asarray(s1),
+                               rtol=2e-4, atol=2e-4)

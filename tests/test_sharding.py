@@ -1,0 +1,74 @@
+"""Sharding specs: every (arch, policy) produces specs whose sharded dims
+tile the production mesh — the invariant the 512-device dry-run relies on."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import init_params
+from repro.sharding.specs import batch_specs, opt_state_specs, param_specs
+
+AXIS_SIZES = {"pod": 2, "data": 16, "model": 16}
+
+
+def _check_divisible(sds_tree, spec_tree, arch, policy):
+    flat_s, _ = jax.tree_util.tree_flatten(sds_tree)
+    flat_p = jax.tree_util.tree_flatten(
+        spec_tree, is_leaf=lambda x: isinstance(x, P))[0]
+    assert len(flat_s) == len(flat_p)
+    for leaf, spec in zip(flat_s, flat_p):
+        for dim, entry in zip(leaf.shape, tuple(spec)):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            n = 1
+            for a in axes:
+                n *= AXIS_SIZES[a]
+            assert dim % n == 0, (arch, policy, leaf.shape, tuple(spec))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("policy", ["tp", "fsdp_tp"])
+@pytest.mark.parametrize("dp", [("data",), ("pod", "data")])
+def test_param_specs_divisible(arch, policy, dp):
+    cfg = get_config(arch)
+    sds = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    specs = param_specs(cfg, sds, policy=policy, dp=dp, axis_sizes=AXIS_SIZES)
+    _check_divisible(sds, specs, arch, policy)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-14b", "mixtral-8x7b", "mamba2-1.3b"])
+def test_opt_specs_structure(arch):
+    cfg = get_config(arch)
+    sds = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    ospec = opt_state_specs(cfg, sds, axis_sizes=AXIS_SIZES)
+    assert set(ospec) == {"m", "v", "step"}
+    assert ospec["step"] == P()
+    _check_divisible(sds, ospec["m"], arch, "zero1")
+
+
+def test_tp_shards_model_axis_where_it_matters():
+    """The big matmul weights must actually be TP-sharded, not replicated."""
+    cfg = get_config("llama3.2-1b")
+    sds = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    specs = param_specs(cfg, sds, policy="tp", axis_sizes=AXIS_SIZES)
+    assert "model" in tuple(specs["blocks"]["ffn"]["up"])
+    assert "model" in tuple(specs["blocks"]["ffn"]["down"])
+    assert "model" in tuple(specs["blocks"]["attn"]["wq"])
+    assert "model" in tuple(specs["embed"]["tok"])
+
+
+def test_nondivisible_heads_replicated_not_split():
+    cfg = get_config("qwen3-14b")                 # 40 heads % 16 != 0
+    sds = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    specs = param_specs(cfg, sds, policy="tp", axis_sizes=AXIS_SIZES)
+    assert "model" not in tuple(specs["blocks"]["attn"]["wq"])
+    assert "model" in tuple(specs["blocks"]["ffn"]["up"])     # ffn still TP
+
+
+def test_batch_specs_fields():
+    cfg = get_config("llava-next-mistral-7b")
+    bs = batch_specs(cfg, dp=("pod", "data"))
+    assert set(bs) == {"tokens", "labels", "vision_embeds"}
+    assert tuple(bs["tokens"])[0] == ("pod", "data")
