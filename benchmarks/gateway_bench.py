@@ -1,0 +1,210 @@
+"""Gateway concurrency benchmark: N clients × named services × transports.
+
+Sweeps clients ∈ {1, 4, 16, 64} against two named services multiplexed over
+one transport:
+
+  wordcount   the paper's §VI workload (cheap handler — measures the
+              gateway + transport path under concurrency)
+  infer       token generation through runtime/serve.py's ServingEngine —
+              continuous batching absorbs the concurrent load, so aggregate
+              throughput should scale strongly with client count until the
+              slot grid saturates
+
+Emits JSON: per-cell throughput (req/s), p50/p99 latency (ms), key-sync
+counts (mpklink variants), server/client MAC-verification counts, and a
+scaling summary (16-client vs 1-client throughput per transport/service).
+
+  PYTHONPATH=src python benchmarks/gateway_bench.py [--quick] [--out f.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import ServiceGateway
+from repro.core.transports import MPKLinkTransport
+from repro.core.wordcount import make_text, wordcount_handler
+
+CLIENTS = [1, 4, 16, 64]
+TRANSPORTS_ORDER = ["pipe", "uds", "shm", "grpc_sim", "mpklink", "mpklink_opt"]
+WORDS = 2_000                         # wordcount payload (≈14 KB)
+PROMPT_LEN = 4
+MAX_NEW = 16                          # decode-dominated requests: the regime
+                                      # where continuous batching pays
+
+
+def build_engine_service(max_batch: int = 32, max_seq: int = 64):
+    """Tiny-model ServingEngine behind the thread-safe EngineService."""
+    import jax
+    from repro.configs import get_reduced
+    from repro.models import init_params
+    from repro.models.transformer import Impl
+    from repro.runtime import EngineService, ServingEngine, encode_prompt
+
+    cfg = get_reduced("llama3.2-1b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServingEngine(cfg, params, max_batch=max_batch, max_seq=max_seq,
+                           impl=Impl(attention="naive", remat=False))
+    svc = EngineService(engine).start()
+    svc.handler(encode_prompt([1, 2, 3], max_new=2))   # jit warmup off the clock
+    return svc
+
+
+def run_cell(gw: ServiceGateway, service: str, n_clients: int, reps: int,
+             make_payload) -> Dict:
+    """n_clients threads, each with its own gateway client/session, all
+    hammering ``service`` for ``reps`` requests; wall-clocked together."""
+    latencies: List[List[float]] = [[] for _ in range(n_clients)]
+    errors: List[str] = []
+    clients = [gw.connect(f"bench-{service}-{n_clients}-{i}")
+               for i in range(n_clients)]
+    for c in clients:                       # channel setup off the clock
+        c.open(service)
+    barrier = threading.Barrier(n_clients + 1)
+
+    def worker(i):
+        c = clients[i]
+        try:
+            barrier.wait()
+            for j in range(reps):
+                t0 = time.perf_counter()
+                c.call(service, make_payload(i, j))
+                latencies[i].append(time.perf_counter() - t0)
+        except Exception as e:              # pragma: no cover
+            errors.append(repr(e))
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(n_clients)]
+    for t in threads:
+        t.start()
+    stats0 = dict(gw.stats)
+    sync0 = getattr(gw.transport, "sync_count", 0)
+    barrier.wait()
+    t0 = time.perf_counter()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    stats1 = dict(gw.stats)
+    sync1 = getattr(gw.transport, "sync_count", 0)
+    client_macs = sum(c.macs_verified for c in clients)
+    for c in clients:
+        c.close()
+
+    lats = np.asarray(sorted(sum(latencies, [])))
+    total = int(lats.size)
+    server_macs = stats1["macs_verified"] - stats0["macs_verified"]
+    return {
+        "service": service,
+        "clients": n_clients,
+        "requests": total,
+        "errors": errors,
+        "seconds": round(wall, 4),
+        "throughput_rps": round(total / wall, 2) if wall > 0 else None,
+        "p50_ms": round(float(np.percentile(lats, 50)) * 1e3, 3) if total else None,
+        "p99_ms": round(float(np.percentile(lats, 99)) * 1e3, 3) if total else None,
+        "key_syncs": sync1 - sync0,
+        "macs_verified_server": server_macs,
+        "macs_verified_clients": client_macs,
+        "all_macs_verified": (not errors and server_macs == total
+                              and client_macs == total),
+        "rejected": stats1["rejected"] - stats0["rejected"],
+    }
+
+
+def sweep(transports: List[str], clients: List[int], reps_wordcount: int,
+          reps_infer: int, engine_service) -> List[Dict]:
+    results = []
+    for name in transports:
+        gw = ServiceGateway(name, max_keys=256)
+        gw.register_service("wordcount", wordcount_handler)
+        if engine_service is not None:
+            gw.register_service("infer", engine_service.handler)
+        gw.start()
+        try:
+            for n in clients:
+                cell = run_cell(
+                    gw, "wordcount", n, reps_wordcount,
+                    lambda i, j: make_text(WORDS, seed=i * 131 + j))
+                cell["transport"] = name
+                results.append(cell)
+                print(f"  {name:<12} wordcount c={n:<3} "
+                      f"{cell['throughput_rps']:>9} req/s "
+                      f"p50={cell['p50_ms']}ms p99={cell['p99_ms']}ms "
+                      f"syncs={cell['key_syncs']}", flush=True)
+                if engine_service is not None:
+                    from repro.runtime import encode_prompt
+                    cell = run_cell(
+                        gw, "infer", n, reps_infer,
+                        lambda i, j: encode_prompt(
+                            [1 + (i + j) % 29, 2, 3, 4][:PROMPT_LEN],
+                            max_new=MAX_NEW))
+                    cell["transport"] = name
+                    results.append(cell)
+                    print(f"  {name:<12} infer     c={n:<3} "
+                          f"{cell['throughput_rps']:>9} req/s "
+                          f"p50={cell['p50_ms']}ms p99={cell['p99_ms']}ms",
+                          flush=True)
+        finally:
+            gw.close()
+    return results
+
+
+def scaling_summary(results: List[Dict]) -> Dict[str, Optional[float]]:
+    """16-client vs 1-client aggregate throughput per (transport, service)."""
+    out = {}
+    by = {(r["transport"], r["service"], r["clients"]): r for r in results}
+    for (tr, svc, n), r in sorted(by.items()):
+        if n != 16:
+            continue
+        base = by.get((tr, svc, 1))
+        if base and base["throughput_rps"]:
+            out[f"{tr}/{svc}"] = round(
+                r["throughput_rps"] / base["throughput_rps"], 2)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="mpklink variants only, clients ≤ 16, fewer reps")
+    ap.add_argument("--no-infer", action="store_true",
+                    help="skip the ServingEngine-backed service")
+    ap.add_argument("--out", default=None, help="write JSON here too")
+    args = ap.parse_args()
+
+    transports = (["mpklink", "mpklink_opt"] if args.quick
+                  else TRANSPORTS_ORDER)
+    clients = [c for c in CLIENTS if c <= (16 if args.quick else 64)]
+    reps_wc = 4 if args.quick else 8
+    reps_inf = 2 if args.quick else 6
+
+    engine_service = None if args.no_infer else build_engine_service()
+    try:
+        results = sweep(transports, clients, reps_wc, reps_inf, engine_service)
+    finally:
+        if engine_service is not None:
+            engine_service.close()
+
+    report = {
+        "meta": {"clients": clients, "transports": transports,
+                 "wordcount_words": WORDS, "prompt_len": PROMPT_LEN,
+                 "max_new": MAX_NEW},
+        "results": results,
+        "scaling_16c_over_1c": scaling_summary(results),
+        "all_macs_verified": all(r["all_macs_verified"] for r in results),
+    }
+    blob = json.dumps(report, indent=2)
+    print(blob)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(blob)
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,6 @@
-"""Paper reproduction benchmark: the distributed word count over the five
-IPC transports (Fig. 1, Fig. 2, Fig. 3 and Table I of the paper).
+"""Paper reproduction benchmark: the distributed word count over the six
+registered IPC transports (Fig. 1, Fig. 2, Fig. 3 and Table I of the paper;
+mpklink_opt is the beyond-paper sixth).
 
 Measured end-to-end request→count→response latency on this host's CPU —
 absolute numbers differ from the paper's Cloudlab c6420 node, but every

@@ -2,7 +2,7 @@
 """Benchmark harness entry point.
 
   table1/fig1-3  — benchmarks/ipc_wordcount.py: the paper's word-count IPC
-                   comparison across the five transports + claim validation
+                   comparison across the six transports + claim validation
   tableX         — benchmarks/kernel_bench.py: guarded copy vs plain copy
                    (the "security rides the copy" comparative analysis §VIII-A)
                    + attention / SSD kernel twins

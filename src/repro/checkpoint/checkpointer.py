@@ -1,7 +1,10 @@
 """Checkpointing: atomic, asynchronous, retention-managed, reshard-on-restore.
 
 Layout:  <dir>/step_<N>/
-           meta.msgpack.zst     — step, tree structure, shapes/dtypes
+           meta.msgpack.{zst,zlib} — step, codec, tree structure,
+                                  shapes/dtypes; zstd-compressed when the
+                                  optional zstandard package is installed,
+                                  stdlib-zlib otherwise (restore reads both)
            arrays.npz           — flattened leaves keyed by tree path
 
 Atomicity: everything is written into ``<dir>/.tmp_<N>`` and os.replace()d
@@ -30,16 +33,56 @@ import os
 import re
 import shutil
 import threading
+import zlib
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Dict, List, Optional, Tuple
 
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:                                   # optional — stdlib zlib fallback below
+    import zstandard as zstd
+except ImportError:
+    zstd = None
 
 import jax
 
 _STEP_RE = re.compile(r"^step_(\d+)$")
+
+# Manifest codec: zstd when the optional package is present, else stdlib
+# zlib. The codec is recorded both in the manifest filename extension and in
+# the manifest body ("codec" key), so a checkpoint written by either side
+# restores on the other (a .zst manifest still *requires* zstandard to read).
+_META_BASENAME = "meta.msgpack"
+_CODEC_EXT = {"zstd": ".zst", "zlib": ".zlib"}
+_CODEC = "zstd" if zstd is not None else "zlib"
+
+
+def _compress_meta(data: bytes) -> bytes:
+    if _CODEC == "zstd":
+        return zstd.ZstdCompressor().compress(data)
+    return zlib.compress(data, 6)
+
+
+def _decompress_meta(data: bytes, codec: str) -> bytes:
+    if codec == "zstd":
+        if zstd is None:
+            raise ImportError(
+                "checkpoint manifest is zstd-compressed but the optional "
+                "'zstandard' package is not installed")
+        return zstd.ZstdDecompressor().decompress(data)
+    if codec == "zlib":
+        return zlib.decompress(data)
+    raise ValueError(f"unknown checkpoint manifest codec {codec!r}")
+
+
+def _find_meta(path: str) -> Tuple[str, str]:
+    """→ (manifest path, codec) for a step directory, any known codec."""
+    for codec, ext in _CODEC_EXT.items():
+        cand = os.path.join(path, _META_BASENAME + ext)
+        if os.path.exists(cand):
+            return cand, codec
+    raise FileNotFoundError(f"no checkpoint manifest in {path}")
 
 
 def _flatten(tree) -> Tuple[Dict[str, np.ndarray], Any]:
@@ -88,14 +131,15 @@ class Checkpointer:
         np.savez(os.path.join(tmp, "arrays.npz"), **ordered)
         meta = {
             "step": step,
+            "codec": _CODEC,
             "keys": sorted(flat.keys()),
             "treedef": str(treedef),
             "shapes": {k: list(v.shape) for k, v in flat.items()},
             "dtypes": {k: str(v.dtype) for k, v in flat.items()},
         }
-        cctx = zstd.ZstdCompressor()
-        with open(os.path.join(tmp, "meta.msgpack.zst"), "wb") as f:
-            f.write(cctx.compress(msgpack.packb(meta, use_bin_type=True)))
+        blob = _compress_meta(msgpack.packb(meta, use_bin_type=True))
+        with open(os.path.join(tmp, _META_BASENAME + _CODEC_EXT[_CODEC]), "wb") as f:
+            f.write(blob)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.replace(tmp, final)
@@ -132,9 +176,9 @@ class Checkpointer:
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
         path = os.path.join(self.dir, f"step_{step}")
-        dctx = zstd.ZstdDecompressor()
-        with open(os.path.join(path, "meta.msgpack.zst"), "rb") as f:
-            meta = msgpack.unpackb(dctx.decompress(f.read()), raw=False)
+        meta_path, codec = _find_meta(path)
+        with open(meta_path, "rb") as f:
+            meta = msgpack.unpackb(_decompress_meta(f.read(), codec), raw=False)
         with np.load(os.path.join(path, "arrays.npz")) as z:
             arrays = {meta["keys"][int(k)]: z[k] for k in z.files}
         ref_flat, treedef = _flatten(treedef_like)

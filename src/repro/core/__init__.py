@@ -1,8 +1,9 @@
 # MPKLink — the paper's primary contribution: protected shared-buffer
 # communication for co-located peers. domains.py = software pkey/PKRU,
 # framing/signature/ca = message auth + identity, transports.py = the
-# measurable CPU reproduction of the paper's IPC zoo, fabric.py = the
-# distributed (mesh) incarnation used by the training/serving stack.
+# measurable CPU reproduction of the paper's IPC zoo, gateway.py = named
+# services multiplexed over one transport (per-service domains), fabric.py =
+# the distributed (mesh) incarnation used by the training/serving stack.
 from repro.core import ca, domains, framing, signature, transports, wordcount
 from repro.core.domains import (AccessViolation, DomainKey, KeyRegistry,
                                 ProtectionDomain, READ, RW, WRITE, mac_seed)
@@ -16,6 +17,10 @@ TRANSPORTS = {
     "mpklink_opt": transports.MPKLinkOptTransport,
 }
 
-__all__ = ["ca", "domains", "framing", "signature", "transports", "wordcount",
-           "AccessViolation", "DomainKey", "KeyRegistry", "ProtectionDomain",
-           "READ", "RW", "WRITE", "mac_seed", "TRANSPORTS"]
+from repro.core import gateway                     # needs TRANSPORTS above
+from repro.core.gateway import GatewayClient, ServiceGateway
+
+__all__ = ["ca", "domains", "framing", "gateway", "signature", "transports",
+           "wordcount", "AccessViolation", "DomainKey", "KeyRegistry",
+           "ProtectionDomain", "READ", "RW", "WRITE", "mac_seed", "TRANSPORTS",
+           "GatewayClient", "ServiceGateway"]

@@ -35,7 +35,17 @@ class CertificateAuthority:
     # -- service lifecycle ----------------------------------------------------
     def register(self, name: str, public_key: int, proof: Tuple[int, int]) -> ServiceRecord:
         """A service proves possession of its private key by signing its own
-        registration; the CA then certifies (name, public_key)."""
+        registration; the CA then certifies (name, public_key). A revoked
+        identity stays revoked: re-registration under the same name is
+        refused, otherwise a ban would be one reconnect deep."""
+        existing = self._services.get(name)
+        if existing is not None and not existing.verified:
+            raise AccessViolation(
+                f"service {name}: identity revoked — re-registration refused")
+        if existing is not None and existing.public_key != public_key:
+            raise AccessViolation(
+                f"service {name}: name already bound to a different key — "
+                f"identity takeover refused")
         msg = f"register:{name}:{public_key}".encode()
         if not sig.verify(public_key, msg, proof):
             raise AccessViolation(f"service {name}: bad proof of possession")

@@ -80,16 +80,20 @@ class KeyRegistry:
         self._issued: Dict[int, set] = {}
         self._rng = itertools.count(seed * 2654435761 % 2 ** 31 + 1)
         self._next_id = 0
+        self._free: list = []          # freed pkey numbers, reused like pkey_alloc
 
     # -- domains ------------------------------------------------------------
     def allocate_domain(self, name: str) -> ProtectionDomain:
         with self._lock:
-            if self._next_id >= self._max:
+            if self._free:
+                did = self._free.pop()
+            elif self._next_id < self._max:
+                did = self._next_id
+                self._next_id += 1
+            else:
                 raise ResourceWarning(
                     f"out of protection keys ({self._max}) — like pkey_alloc(2) "
                     f"returning ENOSPC")
-            did = self._next_id
-            self._next_id += 1
             tag = (hash((name, did, 0x9E3779B9)) & 0xFFFFFFFF) | 1
             dom = ProtectionDomain(did, name, tag)
             self._domains[did] = dom
@@ -99,7 +103,8 @@ class KeyRegistry:
 
     def free_domain(self, dom: ProtectionDomain):
         with self._lock:
-            self._domains.pop(dom.did, None)
+            if self._domains.pop(dom.did, None) is not None:
+                self._free.append(dom.did)
             self._issued.pop(dom.did, None)
             self._epochs.pop(dom.did, None)
 
@@ -119,6 +124,13 @@ class KeyRegistry:
             self._issued.get(key.domain.did, set()).discard(key.nonce)
             if key.domain.did in self._epochs:
                 self._epochs[key.domain.did] += 1
+
+    def retire(self, key: DomainKey):
+        """Graceful release: forget the nonce WITHOUT bumping the epoch.
+        Closing a session is not a security event — other holders of keys
+        on the domain keep working; the retired key itself stops checking."""
+        with self._lock:
+            self._issued.get(key.domain.did, set()).discard(key.nonce)
 
     def epoch(self, dom: ProtectionDomain) -> int:
         return self._epochs.get(dom.did, -1)

@@ -1,0 +1,340 @@
+"""MPKLink service gateway: named services multiplexed over one transport.
+
+The transports in :mod:`repro.core.transports` move bytes between ONE client
+and ONE handler. The gateway is the routing/multiplexing layer the paper's
+microservice story needs on top: a single co-located process exposes N
+**named services**, each behind its own **protection domain**, and M
+concurrent clients call them through one transport.
+
+Wire format (one gateway envelope per transport message):
+
+  request   [GW_MAGIC, service_id, client_id, 0]  (4×u32 route words)
+            + MPKLink frame (framing.build_frame) MAC-seeded with the
+              (client, service) channel seed and per-channel sequence
+  response  [GW_MAGIC, status, service_id, err_len]
+            + status 0: response frame under the same channel seed/seq
+            + status 1: msgpack {"type", "msg"} error blob (typed re-raise
+              client-side — AccessViolation / FrameError / CapacityError)
+
+Isolation model (the paper's §V, finally with >2 endpoints):
+
+* every service gets its own :class:`ProtectionDomain` in the gateway's
+  shared :class:`KeyRegistry`; the service holds an RW key on it;
+* a client must enroll with the gateway CA (key pair + proof of
+  possession) and *open* a channel per service: the CA re-verifies the
+  client certificate (and the service's allow-list) before issuing the
+  client a capability key on that service's domain;
+* the channel MAC seed = service-domain tag ⊕ epoch-mix ⊕ DH session key
+  of (client, service) — so a frame built with service A's channel seed is
+  rejected by service B's guard (FrameError), and a client holding no key
+  for B is rejected at the capability check (AccessViolation). A foreign
+  client can never read another service's region, only its own;
+* revocation bumps the service-domain epoch: stale keys fail the PKRU
+  check and stale frames fail the MAC — the analogue of flushing stale
+  PKRU state from every thread that ever cached the key.
+
+Dispatch runs on the per-session service threads of the underlying
+transport, so N clients drive N concurrent request streams; per-channel
+sequence numbers keep each stream's framing order independent. For the
+mpklink transports the gateway shares its registry/CA with the transport,
+putting link-level channel domains and service domains in ONE key table
+(one software PKRU file per process, like the hardware).
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional, Set, Tuple, Union
+
+import numpy as np
+
+from repro.core import framing
+from repro.core.ca import CertificateAuthority, enroll
+from repro.core.domains import (AccessViolation, DomainKey, KeyRegistry,
+                                ProtectionDomain, RW, READ, WRITE, mac_seed)
+from repro.core.transports import (MPKLinkTransport, Transport, TransportError,
+                                   _pack_error, _raise_remote, fast_mac)
+
+Handler = Callable[[np.ndarray], np.ndarray]
+
+GW_MAGIC = 0x4D504B47               # "MPKG"
+_ROUTE_BYTES = 16                   # 4 × u32 route words
+_OK, _ERR = 0, 1
+
+
+def _route(a: int, b: int, c: int) -> np.ndarray:
+    return np.array([GW_MAGIC, a, b, c], "<u4").view(np.uint8)
+
+
+def _as_frameable(arr: np.ndarray) -> np.ndarray:
+    """Handlers may return any dtype; frame unsupported ones as raw bytes."""
+    arr = np.ascontiguousarray(arr)
+    if np.dtype(arr.dtype) not in framing._DTYPE_CODES:
+        arr = arr.view(np.uint8).reshape(-1)
+    return arr
+
+
+@dataclass
+class _Service:
+    sid: int
+    name: str
+    handler: Handler
+    domain: ProtectionDomain
+    server_key: DomainKey
+    allow: Optional[Set[str]]       # client-name allow-list; None = any cert
+
+
+@dataclass
+class Channel:
+    """One (client, service) grant: capability key + MAC seed + sequences.
+
+    The two sequence counters advance in lock-step because the transport
+    session is strictly request/response. If the transport fails between the
+    server's increment and the client's (e.g. a response timeout), the
+    channel is desynced — but the transport session poisons itself on
+    timeout, so every later call fails loudly instead of mis-parsing;
+    recovery is a fresh client."""
+    cid: int
+    sid: int
+    service: str
+    seed: int
+    client_key: DomainKey
+    seq: int = 0                    # client-side next sequence number
+    server_seq: int = 0             # server-side expected sequence number
+    slock: threading.Lock = field(default_factory=threading.Lock)
+
+
+class ServiceGateway:
+    """Dispatch table of named services over a single transport."""
+
+    def __init__(self, transport: Union[str, type] = "mpklink_opt", *,
+                 max_keys: int = 256, mac_impl: Callable = fast_mac,
+                 transport_kwargs: Optional[dict] = None):
+        self.registry = KeyRegistry(max_keys=max_keys, seed=0x6A7E)
+        self.ca = CertificateAuthority(self.registry)
+        self._mac = mac_impl
+        self._services: Dict[str, _Service] = {}
+        self._by_sid: Dict[int, _Service] = {}
+        self._channels: Dict[Tuple[int, int], Channel] = {}
+        self._glock = threading.Lock()
+        self._sid_counter = itertools.count(1)
+        self._cid_counter = itertools.count(1)
+        self.stats = {"requests": 0, "responses": 0, "macs_verified": 0,
+                      "rejected": 0}
+
+        if isinstance(transport, str):
+            from repro.core import TRANSPORTS
+            transport = TRANSPORTS[transport]
+        kwargs = dict(transport_kwargs or {})
+        if isinstance(transport, type) and issubclass(transport, MPKLinkTransport):
+            # one key table for link channels AND service domains
+            kwargs.setdefault("registry", self.registry)
+            kwargs.setdefault("ca", self.ca)
+        self.transport: Transport = transport(self._dispatch, **kwargs)
+
+    # -- service lifecycle --------------------------------------------------
+    def register_service(self, name: str, handler: Handler,
+                         allow: Optional[Set[str]] = None) -> int:
+        """Enroll a service with the CA and give it its own protection
+        domain. ``allow`` restricts which client names may open channels."""
+        with self._glock:
+            if name in self._services:
+                raise ValueError(f"service {name!r} already registered")
+            enroll(self.ca, name)
+            dom = self.registry.allocate_domain(f"svc:{name}")
+            svc = _Service(next(self._sid_counter), name, handler, dom,
+                           self.registry.issue_key(dom, RW),
+                           set(allow) if allow is not None else None)
+            self._services[name] = svc
+            self._by_sid[svc.sid] = svc
+            return svc.sid
+
+    def start(self) -> "ServiceGateway":
+        self.transport.start()
+        return self
+
+    def close(self):
+        self.transport.close()
+
+    # -- client lifecycle ---------------------------------------------------
+    def connect(self, client_name: str) -> "GatewayClient":
+        return GatewayClient(self, client_name)
+
+    def _open_channel(self, client: "GatewayClient", service: str) -> Channel:
+        """Control plane: CA-checked issue of a client key on the service's
+        domain + derivation of the per-(client, service) MAC seed."""
+        svc = self._services.get(service)
+        if svc is None:
+            raise AccessViolation(f"unknown service {service!r}")
+        if svc.allow is not None and client.name not in svc.allow:
+            raise AccessViolation(
+                f"client {client.name!r} not authorized for service {service!r}")
+        rec = self.ca._services.get(client.name)
+        if rec is None or not rec.verified or not self.ca.verify_cert(rec):
+            raise AccessViolation(
+                f"client {client.name!r} failed certificate check")
+        key = self.registry.issue_key(svc.domain, RW)
+        seed = mac_seed(svc.domain, self.registry.epoch(svc.domain)) \
+            ^ self.ca.session_seed(client._kp.private, service)
+        chan = Channel(client.cid, svc.sid, service, seed, key)
+        with self._glock:
+            self._channels[(client.cid, svc.sid)] = chan
+        return chan
+
+    def revoke(self, client: "GatewayClient", service: Optional[str] = None):
+        """Revoke a client's channel key(s). Bumps the service-domain epoch,
+        so every stale key/frame on that domain fails the guard afterwards
+        (other clients must re-open — the PKRU-flush analogue)."""
+        with self._glock:
+            doomed = [(k, ch) for k, ch in self._channels.items()
+                      if k[0] == client.cid
+                      and (service is None or ch.service == service)]
+        for k, ch in doomed:
+            self.registry.revoke(ch.client_key)
+            with self._glock:
+                self._channels.pop(k, None)
+            client._channels.pop(ch.service, None)
+            # the epoch bump stales every key on the domain, including the
+            # service's own — the co-located service re-syncs immediately
+            # (clients must re-open through the CA; GatewayClient.call does
+            # this transparently for still-certified clients)
+            svc = self._by_sid[ch.sid]
+            svc.server_key = self.registry.issue_key(svc.domain, RW)
+
+    def _release_client(self, client: "GatewayClient"):
+        """Graceful disconnect: retire the client's keys (no epoch bump —
+        closing is not a security event) and drop its routing entries, so a
+        closed client's cid can never dispatch again."""
+        with self._glock:
+            doomed = [(k, ch) for k, ch in self._channels.items()
+                      if k[0] == client.cid]
+            for k, ch in doomed:
+                self._channels.pop(k, None)
+        for _, ch in doomed:
+            self.registry.retire(ch.client_key)
+
+    # -- data plane (runs on the transport's per-session service threads) ----
+    def _bump(self, *stats: str):
+        with self._glock:
+            for s in stats:
+                self.stats[s] += 1
+
+    def _dispatch(self, req: np.ndarray) -> np.ndarray:
+        sid = 0
+        try:
+            raw = np.ascontiguousarray(np.asarray(req)) \
+                .view(np.uint8).reshape(-1)
+            if raw.nbytes < _ROUTE_BYTES:
+                raise framing.FrameError("short gateway envelope")
+            route = raw[:_ROUTE_BYTES].view("<u4")
+            if int(route[0]) != GW_MAGIC:
+                raise framing.FrameError("not a gateway envelope (bad magic)")
+            sid, cid = int(route[1]), int(route[2])
+            svc = self._by_sid.get(sid)
+            if svc is None:
+                raise AccessViolation(f"unknown service id {sid}")
+            chan = self._channels.get((cid, sid))
+            if chan is None:
+                raise AccessViolation(
+                    f"client {cid} holds no key for service {svc.name!r}")
+            with chan.slock:
+                # PKRU staging checks: the client may write the request
+                # region, the service may read it (revocation/epoch enforced)
+                self.registry.check(chan.client_key, WRITE)
+                self.registry.check(svc.server_key, READ)
+                frame = raw[_ROUTE_BYTES:].view("<u4") \
+                    .reshape(-1, framing.LANES)
+                payload = framing.parse_frame(
+                    frame, seed=chan.seed, expect_seq=chan.server_seq,
+                    mac_impl=self._mac)
+                self._bump("requests", "macs_verified")
+                resp = _as_frameable(np.asarray(svc.handler(payload)))
+                self.registry.check(svc.server_key, WRITE)
+                self.registry.check(chan.client_key, READ)
+                rframe = framing.build_frame(
+                    resp, seed=chan.seed, seq=chan.server_seq,
+                    mac_impl=self._mac)
+                chan.server_seq += 1
+            self._bump("responses")
+            return np.concatenate(
+                [_route(_OK, sid, 0), rframe.reshape(-1).view(np.uint8)])
+        except Exception as e:
+            self._bump("rejected")
+            blob = _pack_error(e)
+            return np.concatenate(
+                [_route(_ERR, sid, len(blob)), np.frombuffer(blob, np.uint8)])
+
+
+class GatewayClient:
+    """One CA-enrolled client: its own transport session plus per-service
+    channels. ``call()`` is thread-safe but serial per client — open one
+    client per concurrent caller (that's the session model)."""
+
+    def __init__(self, gw: ServiceGateway, name: str):
+        self.gw = gw
+        self.name = name
+        self._kp, _ = enroll(gw.ca, name)
+        self.cid = next(gw._cid_counter)
+        self._session = gw.transport.connect(f"gw:{name}")
+        self._channels: Dict[str, Channel] = {}
+        self._lock = threading.Lock()
+        self.macs_verified = 0          # response MACs this client checked
+
+    def open(self, service: str) -> Channel:
+        with self._lock:
+            chan = self._channels.get(service)
+            if chan is None:
+                chan = self.gw._open_channel(self, service)
+                self._channels[service] = chan
+            return chan
+
+    def reopen(self, service: str) -> Channel:
+        """Drop the cached channel and open a fresh one (new key at the
+        current epoch) — the recovery path after a domain-epoch bump."""
+        with self._lock:
+            self._channels.pop(service, None)
+        return self.open(service)
+
+    def call(self, service: str, payload: np.ndarray) -> np.ndarray:
+        payload = np.asarray(payload)
+        try:
+            return self._call_once(self.open(service), payload)
+        except AccessViolation as e:
+            # someone's revocation bumped the service-domain epoch; a still-
+            # certified client just re-keys through the CA and retries once
+            # (a banned client fails the certificate check in reopen())
+            if "stale key epoch" not in str(e):
+                raise
+            return self._call_once(self.reopen(service), payload)
+
+    def _call_once(self, chan: Channel, payload: np.ndarray) -> np.ndarray:
+        with self._lock:
+            frame = framing.build_frame(payload, seed=chan.seed,
+                                        seq=chan.seq, mac_impl=self.gw._mac)
+            env = np.concatenate([_route(chan.sid, self.cid, 0),
+                                  frame.reshape(-1).view(np.uint8)])
+            resp = np.ascontiguousarray(np.asarray(self._session.request(env))) \
+                .view(np.uint8).reshape(-1)
+            if resp.nbytes < _ROUTE_BYTES:
+                raise TransportError("malformed gateway response (truncated)")
+            route = resp[:_ROUTE_BYTES].view("<u4")
+            if int(route[0]) != GW_MAGIC:
+                raise TransportError("malformed gateway response (bad magic)")
+            if int(route[1]) != _OK:
+                _raise_remote(resp[_ROUTE_BYTES:
+                                   _ROUTE_BYTES + int(route[3])].tobytes())
+            rframe = resp[_ROUTE_BYTES:].view("<u4") \
+                .reshape(-1, framing.LANES)
+            out = framing.parse_frame(rframe, seed=chan.seed,
+                                      expect_seq=chan.seq,
+                                      mac_impl=self.gw._mac)
+            chan.seq += 1
+            self.macs_verified += 1
+            return out
+
+    def close(self):
+        self.gw._release_client(self)
+        with self._lock:
+            self._channels.clear()
+        self._session.close()

@@ -1,8 +1,8 @@
 """The paper's IPC transport zoo, reproduced measurably on CPU (§VI).
 
-Two "microservices" run as threads of one master process (exactly the
-paper's final design — their separate-process attempt segfaulted, §VI) and
-exchange a request/response through one of:
+Microservices run as threads of one master process (exactly the paper's
+final design — their separate-process attempt segfaulted, §VI) and exchange
+request/response messages through one of six transports:
 
   pipe        two unidirectional OS pipes (the named-pipe setup of §VI;
               anonymous pipes share the same kernel FIFO path, minus the
@@ -21,6 +21,21 @@ exchange a request/response through one of:
   mpklink_opt beyond-paper: ONE key sync per message (batched epoch),
               vectorized MAC — the cliff removed (EXPERIMENTS.md §Perf)
 
+Concurrency model (this file's post-seed refactor): every transport now
+serves **N concurrent client sessions**. ``transport.connect()`` returns a
+:class:`Session` with its own channel (own fds / socketpair / regions) and a
+dedicated service thread, so independent clients never share a wire. The
+mpklink variants give each session its own CA enrollment, protection domain,
+capability keys and per-session MAC seed + framing sequence — the paper's
+per-endpoint isolation, finally exercised with more than one client.
+``transport.request()`` keeps the old single-client API by lazily opening a
+default session.
+
+Failure model: handler exceptions and capacity overflows are propagated to
+the *calling* client as typed exceptions (never swallowed in the service
+thread), and blocking-wait transports (shm, mpklink) bound their response
+waits with ``timeout`` so no transport can deadlock the process.
+
 Adaptation notes (single-core container):
   * the paper polls shared metadata; busy-spin on one core inverts results,
     so signalling uses threading.Event — the *count* of synchronization
@@ -31,19 +46,20 @@ Adaptation notes (single-core container):
 """
 from __future__ import annotations
 
+import itertools
 import os
 import socket
 import struct
 import threading
-import time
-from typing import Callable, Optional
+from typing import Callable, Dict, List, Optional
 
 import msgpack
 import numpy as np
 
 from repro.core import framing
 from repro.core.ca import CertificateAuthority, enroll
-from repro.core.domains import KeyRegistry, READ, WRITE, RW, mac_seed
+from repro.core.domains import (AccessViolation, KeyRegistry, READ, WRITE,
+                                RW, mac_seed)
 from repro.kernels.ref import MAC_PRIME, MAC_INIT, _FOLD_POWERS
 
 Handler = Callable[[np.ndarray], np.ndarray]
@@ -55,6 +71,26 @@ class TransportError(RuntimeError):
 
 class CapacityError(TransportError):
     """Raised when a fixed-capacity transport cannot hold the payload."""
+
+
+# exception types a service thread may propagate back to its client by name
+_REMOTE_ERRORS: Dict[str, type] = {
+    "CapacityError": CapacityError,
+    "TransportError": TransportError,
+    "AccessViolation": AccessViolation,
+    "FrameError": framing.FrameError,
+}
+
+
+def _pack_error(exc: BaseException) -> bytes:
+    return msgpack.packb({"type": type(exc).__name__, "msg": str(exc)},
+                         use_bin_type=True)
+
+
+def _raise_remote(blob: bytes):
+    info = msgpack.unpackb(bytes(blob), raw=False)
+    cls = _REMOTE_ERRORS.get(info.get("type", ""), TransportError)
+    raise cls(info.get("msg", "remote service error"))
 
 
 # ---------------------------------------------------------------------------
@@ -83,10 +119,11 @@ def fast_mac(payload_u32: np.ndarray, seed: int, block_rows: int = 65536) -> int
 
 
 # ---------------------------------------------------------------------------
-# base: request/response over a byte stream
+# byte-stream helpers
 # ---------------------------------------------------------------------------
 
 _LEN = struct.Struct("<Q")
+_ERR_BIT = 1 << 63                    # high bit of the length word = error
 
 
 def _write_fd(fd: int, data: memoryview):
@@ -108,40 +145,126 @@ def _read_fd(fd: int, n: int) -> bytearray:
     return buf
 
 
-class _ThreadServer:
-    """Runs handler requests on a dedicated 'microservice' thread."""
+# ---------------------------------------------------------------------------
+# session / transport base
+# ---------------------------------------------------------------------------
 
-    def __init__(self, handler: Handler):
-        self.handler = handler
+class Session:
+    """One client's private channel to the service.
+
+    Each session owns its wire (fds / socketpair / shared regions) and a
+    dedicated service thread, so N sessions run N concurrent request/response
+    streams with no cross-talk. ``request()`` is synchronous per session;
+    open one session per client thread.
+    """
+
+    def __init__(self, transport: "Transport", name: str):
+        self.transport = transport
+        self.name = name
+        self.handler = transport.handler
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
+        self._closed = False
 
-    def start(self):
-        self._thread = threading.Thread(target=self._serve, daemon=True)
-        self._thread.start()
+    # -- lifecycle --------------------------------------------------------
+    def ensure_started(self):
+        if self._thread is None and not self._closed:
+            self._thread = threading.Thread(
+                target=self._serve, daemon=True,
+                name=f"{self.transport.name}:{self.name}")
+            self._thread.start()
 
     def close(self):
+        if self._closed:
+            return
+        self._closed = True
         self._stop.set()
         self._wake()
-        if self._thread:
+        if self._thread is not None:
             self._thread.join(timeout=5)
+        self._teardown()
+        self.transport._forget(self)
 
+    # -- per-transport hooks ----------------------------------------------
     def _wake(self):
+        pass
+
+    def _teardown(self):
         pass
 
     def _serve(self):
         raise NotImplementedError
 
+    def request(self, payload: np.ndarray) -> np.ndarray:
+        raise NotImplementedError
 
-# ---------------------------------------------------------------------------
-# 1. OS pipes (two unidirectional)
-# ---------------------------------------------------------------------------
 
-class PipeTransport(_ThreadServer):
-    name = "pipe"
+class Transport:
+    """Base: a service handler plus N client sessions (threads of one
+    process — the paper's co-located microservice design)."""
+
+    name = "?"
 
     def __init__(self, handler: Handler):
-        super().__init__(handler)
+        self.handler = handler
+        self._sessions: List[Session] = []
+        self._slock = threading.Lock()
+        self._default: Optional[Session] = None
+        self._counter = itertools.count()
+
+    # -- session management -----------------------------------------------
+    def _make_session(self, name: str) -> Session:
+        raise NotImplementedError
+
+    def connect(self, name: Optional[str] = None) -> Session:
+        """Open a new client session (own channel + service thread)."""
+        s = self._make_session(name or f"{self.name}-client-{next(self._counter)}")
+        with self._slock:
+            self._sessions.append(s)
+        s.ensure_started()
+        return s
+
+    def _forget(self, session: Session):
+        with self._slock:
+            if session in self._sessions:
+                self._sessions.remove(session)
+
+    # -- legacy single-client API ------------------------------------------
+    def start(self):
+        with self._slock:
+            sessions = list(self._sessions)
+        for s in sessions:
+            s.ensure_started()
+        return self
+
+    def request(self, payload: np.ndarray) -> np.ndarray:
+        d = self._default
+        if d is None or d._closed or getattr(d, "_poisoned", False):
+            if d is not None and not d._closed:
+                d.close()                  # a poisoned session is done for
+            self._default = self.connect("svc-client")
+            self._on_new_default()
+        self._default.ensure_started()
+        return self._default.request(payload)
+
+    def _on_new_default(self):
+        """Hook: the default session was replaced (first use, or recovery
+        after a poisoning timeout)."""
+
+    def close(self):
+        with self._slock:
+            sessions = list(self._sessions)
+        for s in sessions:
+            s.close()
+
+
+# ---------------------------------------------------------------------------
+# 1. OS pipes (two unidirectional per session)
+# ---------------------------------------------------------------------------
+
+class PipeSession(Session):
+    def __init__(self, transport, name):
+        super().__init__(transport, name)
         self._c2s = os.pipe()
         self._s2c = os.pipe()
 
@@ -149,13 +272,19 @@ class PipeTransport(_ThreadServer):
         while not self._stop.is_set():
             try:
                 n = _LEN.unpack(bytes(_read_fd(self._c2s[0], 8)))[0]
-            except TransportError:
+            except (TransportError, OSError):
                 return
             if n == 0:
                 return
             req = np.frombuffer(_read_fd(self._c2s[0], n), np.uint8)
-            resp = self.handler(req)
-            raw = resp.view(np.uint8).reshape(-1)
+            try:
+                resp = self.handler(req)
+                raw = np.ascontiguousarray(resp).view(np.uint8).reshape(-1)
+            except Exception as e:                 # propagate, don't die
+                blob = _pack_error(e)
+                _write_fd(self._s2c[1], memoryview(_LEN.pack(len(blob) | _ERR_BIT)))
+                _write_fd(self._s2c[1], memoryview(blob))
+                continue
             _write_fd(self._s2c[1], memoryview(_LEN.pack(raw.nbytes)))
             _write_fd(self._s2c[1], memoryview(raw))
 
@@ -166,14 +295,15 @@ class PipeTransport(_ThreadServer):
             pass
 
     def request(self, payload: np.ndarray) -> np.ndarray:
-        raw = payload.view(np.uint8).reshape(-1)
+        raw = np.ascontiguousarray(payload).view(np.uint8).reshape(-1)
         _write_fd(self._c2s[1], memoryview(_LEN.pack(raw.nbytes)))
         _write_fd(self._c2s[1], memoryview(raw))
         n = _LEN.unpack(bytes(_read_fd(self._s2c[0], 8)))[0]
+        if n & _ERR_BIT:
+            _raise_remote(_read_fd(self._s2c[0], n & ~_ERR_BIT))
         return np.frombuffer(_read_fd(self._s2c[0], n), np.uint8)
 
-    def close(self):
-        super().close()
+    def _teardown(self):
         for fd in (*self._c2s, *self._s2c):
             try:
                 os.close(fd)
@@ -181,39 +311,52 @@ class PipeTransport(_ThreadServer):
                 pass
 
 
+class PipeTransport(Transport):
+    name = "pipe"
+
+    def _make_session(self, name):
+        return PipeSession(self, name)
+
+
 # ---------------------------------------------------------------------------
-# 2. Unix domain sockets (one bidirectional)
+# 2. Unix domain sockets (one bidirectional pair per session)
 # ---------------------------------------------------------------------------
 
-class UDSTransport(_ThreadServer):
-    name = "uds"
+def _recv_exact(sock: socket.socket, n: int) -> bytearray:
+    buf = bytearray(n)
+    view = memoryview(buf)
+    got = 0
+    while got < n:
+        r = sock.recv_into(view[got:], n - got)
+        if r == 0:
+            raise TransportError("socket closed")
+        got += r
+    return buf
 
-    def __init__(self, handler: Handler):
-        super().__init__(handler)
-        self._client, self._server = socket.socketpair(socket.AF_UNIX, socket.SOCK_STREAM)
 
-    @staticmethod
-    def _recv_exact(sock: socket.socket, n: int) -> bytearray:
-        buf = bytearray(n)
-        view = memoryview(buf)
-        got = 0
-        while got < n:
-            r = sock.recv_into(view[got:], n - got)
-            if r == 0:
-                raise TransportError("socket closed")
-            got += r
-        return buf
+class UDSSession(Session):
+    def __init__(self, transport, name):
+        super().__init__(transport, name)
+        self._client, self._server = socket.socketpair(
+            socket.AF_UNIX, socket.SOCK_STREAM)
 
     def _serve(self):
         while not self._stop.is_set():
             try:
-                n = _LEN.unpack(bytes(self._recv_exact(self._server, 8)))[0]
+                n = _LEN.unpack(bytes(_recv_exact(self._server, 8)))[0]
             except (TransportError, OSError):
                 return
             if n == 0:
                 return
-            req = np.frombuffer(self._recv_exact(self._server, n), np.uint8)
-            resp = self.handler(req).view(np.uint8).reshape(-1)
+            req = np.frombuffer(_recv_exact(self._server, n), np.uint8)
+            try:
+                resp = np.ascontiguousarray(self.handler(req)) \
+                    .view(np.uint8).reshape(-1)
+            except Exception as e:
+                blob = _pack_error(e)
+                self._server.sendall(_LEN.pack(len(blob) | _ERR_BIT))
+                self._server.sendall(blob)
+                continue
             self._server.sendall(_LEN.pack(resp.nbytes))
             self._server.sendall(resp)
 
@@ -224,38 +367,43 @@ class UDSTransport(_ThreadServer):
             pass
 
     def request(self, payload: np.ndarray) -> np.ndarray:
-        raw = payload.view(np.uint8).reshape(-1)
+        raw = np.ascontiguousarray(payload).view(np.uint8).reshape(-1)
         self._client.sendall(_LEN.pack(raw.nbytes))
         self._client.sendall(raw)
-        n = _LEN.unpack(bytes(self._recv_exact(self._client, 8)))[0]
-        return np.frombuffer(self._recv_exact(self._client, n), np.uint8)
+        n = _LEN.unpack(bytes(_recv_exact(self._client, 8)))[0]
+        if n & _ERR_BIT:
+            _raise_remote(_recv_exact(self._client, n & ~_ERR_BIT))
+        return np.frombuffer(_recv_exact(self._client, n), np.uint8)
 
-    def close(self):
-        super().close()
+    def _teardown(self):
         self._client.close()
         self._server.close()
+
+
+class UDSTransport(Transport):
+    name = "uds"
+
+    # kept as a staticmethod for back-compat with callers of the old API
+    _recv_exact = staticmethod(_recv_exact)
+
+    def _make_session(self, name):
+        return UDSSession(self, name)
 
 
 # ---------------------------------------------------------------------------
 # 3. raw shared memory, fixed capacity (the paper's failing baseline)
 # ---------------------------------------------------------------------------
 
-class ShmTransport(_ThreadServer):
-    """Two regions (req/resp) + length words + ready events. Capacity is fixed
-    at construction — ≥capacity payloads raise CapacityError, reproducing the
-    paper's observation that baseline shm "is incapable of handling requests
-    involving 100,000 words or more"."""
-
-    name = "shm"
-    DEFAULT_CAPACITY = 512 * 1024      # ≈70k words of ~7 chars — fails at 100k
-
-    def __init__(self, handler: Handler, capacity: int = DEFAULT_CAPACITY):
-        super().__init__(handler)
-        self.capacity = capacity
-        self._req = np.zeros(capacity, np.uint8)
-        self._resp = np.zeros(capacity, np.uint8)
+class ShmSession(Session):
+    def __init__(self, transport, name):
+        super().__init__(transport, name)
+        self.capacity = transport.capacity
+        self._req = np.zeros(self.capacity, np.uint8)
+        self._resp = np.zeros(self.capacity, np.uint8)
         self._req_len = 0
         self._resp_len = 0
+        self._error: Optional[BaseException] = None
+        self._poisoned = False
         self._req_ready = threading.Event()
         self._resp_ready = threading.Event()
 
@@ -267,44 +415,86 @@ class ShmTransport(_ThreadServer):
             if self._stop.is_set():
                 return
             req = self._req[: self._req_len]
-            resp = self.handler(req).view(np.uint8).reshape(-1)
-            self._resp[: resp.nbytes] = resp
-            self._resp_len = resp.nbytes
+            try:
+                resp = np.ascontiguousarray(self.handler(req)) \
+                    .view(np.uint8).reshape(-1)
+                if resp.nbytes > self.capacity:
+                    raise CapacityError(
+                        f"shm region ({self.capacity}B) cannot hold "
+                        f"{resp.nbytes}B response")
+                self._error = None
+                self._resp[: resp.nbytes] = resp
+                self._resp_len = resp.nbytes
+            except Exception as e:                 # incl. CapacityError
+                self._error = e
+                self._resp_len = 0
             self._resp_ready.set()
 
     def _wake(self):
+        # a waiter woken by close() must get an error, never the previous
+        # request's bytes masquerading as its response
+        self._error = TransportError("session closed while request in flight")
         self._req_ready.set()
+        self._resp_ready.set()
 
     def request(self, payload: np.ndarray) -> np.ndarray:
-        raw = payload.view(np.uint8).reshape(-1)
+        if self._poisoned:
+            raise TransportError(
+                "session poisoned by an earlier timeout (a stale response "
+                "may be in flight) — open a new session")
+        raw = np.ascontiguousarray(payload).view(np.uint8).reshape(-1)
         if raw.nbytes > self.capacity:
             raise CapacityError(
                 f"shm region ({self.capacity}B) cannot hold {raw.nbytes}B payload")
         self._req[: raw.nbytes] = raw
         self._req_len = raw.nbytes
         self._req_ready.set()
-        self._resp_ready.wait()
+        if not self._resp_ready.wait(timeout=self.transport.timeout):
+            # the service thread may still deliver later; never let that
+            # stale response be mistaken for the answer to a NEW request
+            self._poisoned = True
+            raise TransportError(
+                f"shm response timed out after {self.transport.timeout}s")
         self._resp_ready.clear()
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
         return self._resp[: self._resp_len].copy()
+
+
+class ShmTransport(Transport):
+    """Two regions (req/resp) per session + length words + ready events.
+    Capacity is fixed at construction — ≥capacity payloads raise
+    CapacityError (on EITHER direction — an oversized handler response is
+    reported to the caller, never stranded in the service thread),
+    reproducing the paper's observation that baseline shm "is incapable of
+    handling requests involving 100,000 words or more"."""
+
+    name = "shm"
+    DEFAULT_CAPACITY = 512 * 1024      # ≈70k words of ~7 chars — fails at 100k
+
+    def __init__(self, handler: Handler, capacity: int = DEFAULT_CAPACITY,
+                 timeout: float = 120.0):
+        super().__init__(handler)
+        self.capacity = capacity
+        self.timeout = timeout
+
+    def _make_session(self, name):
+        return ShmSession(self, name)
 
 
 # ---------------------------------------------------------------------------
 # 4. gRPC simulation (serialization + HTTP/2 framing + flow control)
 # ---------------------------------------------------------------------------
 
-class GrpcSimTransport(_ThreadServer):
-    """msgpack body + 9-byte frame header per 16 KiB DATA frame + 64 KiB
-    flow-control window with WINDOW_UPDATE acks — the protocol overhead the
-    paper attributes to network-style IPC for co-located services."""
-
-    name = "grpc_sim"
-    FRAME = 16 * 1024
-    WINDOW = 64 * 1024
-    _HDR = struct.Struct("<IBI")       # length, type, stream_id
-
-    def __init__(self, handler: Handler):
-        super().__init__(handler)
-        self._client, self._server = socket.socketpair(socket.AF_UNIX, socket.SOCK_STREAM)
+class GrpcSimSession(Session):
+    def __init__(self, transport, name):
+        super().__init__(transport, name)
+        self.FRAME = transport.FRAME
+        self.WINDOW = transport.WINDOW
+        self._HDR = transport._HDR
+        self._client, self._server = socket.socketpair(
+            socket.AF_UNIX, socket.SOCK_STREAM)
         for s in (self._client, self._server):
             s.setsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF, 1 << 20)
 
@@ -314,7 +504,7 @@ class GrpcSimTransport(_ThreadServer):
         credit = self.WINDOW
         while sent < len(body):
             if credit <= 0:                      # wait for WINDOW_UPDATE
-                hdr = UDSTransport._recv_exact(sock, self._HDR.size)
+                hdr = _recv_exact(sock, self._HDR.size)
                 ln, typ, _ = self._HDR.unpack(bytes(hdr))
                 assert typ == 8, "expected WINDOW_UPDATE"
                 credit += ln
@@ -324,19 +514,18 @@ class GrpcSimTransport(_ThreadServer):
             sent += n
             credit -= n
         sock.sendall(self._HDR.pack(0, 1, 1))    # END_STREAM
-
     def _recv_msg(self, sock: socket.socket):
         chunks = []
         consumed = 0
         while True:
-            hdr = UDSTransport._recv_exact(sock, self._HDR.size)
+            hdr = _recv_exact(sock, self._HDR.size)
             ln, typ, _ = self._HDR.unpack(bytes(hdr))
             if typ == 1:
                 break
             if typ == 8:
                 continue                          # WINDOW_UPDATE for our own
                                                   # sends — headers only
-            chunks.append(bytes(UDSTransport._recv_exact(sock, ln)))
+            chunks.append(bytes(_recv_exact(sock, ln)))
             consumed += ln
             if consumed >= self.WINDOW // 2:     # grant more window
                 sock.sendall(self._HDR.pack(consumed, 8, 1))
@@ -352,7 +541,13 @@ class GrpcSimTransport(_ThreadServer):
             if msg.get("op") == "stop":
                 return
             req = np.frombuffer(msg["data"], np.uint8)
-            resp = self.handler(req).view(np.uint8).reshape(-1)
+            try:
+                resp = np.ascontiguousarray(self.handler(req)) \
+                    .view(np.uint8).reshape(-1)
+            except Exception as e:
+                self._send_msg(self._server,
+                               {"status": 1, "error": _pack_error(e)})
+                continue
             self._send_msg(self._server, {"status": 0, "data": resp.tobytes()})
 
     def _wake(self):
@@ -362,57 +557,54 @@ class GrpcSimTransport(_ThreadServer):
             pass
 
     def request(self, payload: np.ndarray) -> np.ndarray:
-        raw = payload.view(np.uint8).reshape(-1)
+        raw = np.ascontiguousarray(payload).view(np.uint8).reshape(-1)
         self._send_msg(self._client, {"op": "count", "data": raw.tobytes()})
         resp = self._recv_msg(self._client)
+        if resp.get("status"):
+            _raise_remote(resp["error"])
         return np.frombuffer(resp["data"], np.uint8)
 
-    def close(self):
-        super().close()
+    def _teardown(self):
         self._client.close()
         self._server.close()
+
+
+class GrpcSimTransport(Transport):
+    """msgpack body + 9-byte frame header per 16 KiB DATA frame + 64 KiB
+    flow-control window with WINDOW_UPDATE acks — the protocol overhead the
+    paper attributes to network-style IPC for co-located services."""
+
+    name = "grpc_sim"
+    FRAME = 16 * 1024
+    WINDOW = 64 * 1024
+    _HDR = struct.Struct("<IBI")       # length, type, stream_id
+
+    def _make_session(self, name):
+        return GrpcSimSession(self, name)
 
 
 # ---------------------------------------------------------------------------
 # 5. MPKLink (paper-faithful) and 6. MPKLink-opt (beyond paper)
 # ---------------------------------------------------------------------------
 
-class MPKLinkTransport(_ThreadServer):
-    """Shared region + MPK emulation (paper-faithful).
+class MPKLinkSession(Session):
+    """One CA-enrolled client endpoint: its own protection domain shared
+    with the server, capability keys, session-derived MAC seed, framing
+    sequence, and guarded regions."""
 
-    Establishment (once): both services enroll with the CA (key pairs +
-    proof-of-possession), the CA verifies certificates and grants a channel
-    domain; data-plane MAC seed = domain tag ⊕ epoch-mix ⊕ DH session key.
-
-    Per message: the payload is framed (framing.build_frame — header + MAC)
-    and moved through the region in CHUNK-sized pieces; every chunk performs
-    one PKRU synchronization round trip (writer updates the shared PKRU
-    word, reader acknowledges) — the paper's per-chunk key sync. The
-    receiver re-derives the MAC and rejects tampered/foreign frames.
-
-    ``syncs_per_message ≈ ceil(frame_bytes / chunk)`` is what produces the
-    paper's large-payload cliff; MPKLinkOptTransport batches it to 1
-    (the beyond-paper fix, EXPERIMENTS.md §Perf).
-    """
-
-    name = "mpklink"
-    CHUNK = 64 * 1024
-
-    def __init__(self, handler: Handler, chunk: Optional[int] = None,
-                 mac_impl: Callable = fast_mac):
-        super().__init__(handler)
-        self.chunk = chunk or self.CHUNK
-        self._mac = mac_impl
-        # --- control plane: CA handshake -----------------------------------
-        self.registry = KeyRegistry(seed=7)
-        self.ca = CertificateAuthority(self.registry)
-        self._kp_client, _ = enroll(self.ca, "svc-client")
-        self._kp_server, _ = enroll(self.ca, "svc-server")
+    def __init__(self, transport: "MPKLinkTransport", name: str):
+        super().__init__(transport, name)
+        self.chunk = transport.chunk
+        self._mac = transport._mac
+        self.registry = transport.registry
+        # --- control plane: CA handshake (per client) ----------------------
+        self._kp, _ = enroll(transport.ca, name)
         self.domain, self.key_client, self.key_server = \
-            self.ca.grant_channel("svc-client", "svc-server", RW)
-        sess = self.ca.session_seed(self._kp_client.private, "svc-server")
-        self.seed = mac_seed(self.domain, self.registry.epoch(self.domain)) ^ sess
-        # --- data plane: shared regions + PKRU "register file" ---------------
+            transport.ca.grant_channel(name, transport.server_name, RW)
+        sess = transport.ca.session_seed(self._kp.private, transport.server_name)
+        self.seed = mac_seed(self.domain,
+                             self.registry.epoch(self.domain)) ^ sess
+        # --- data plane: shared regions + PKRU "register file" -------------
         self._region_req = np.zeros((0, framing.LANES), np.uint32)
         self._region_resp = np.zeros((0, framing.LANES), np.uint32)
         self._pkru = np.zeros(2, np.uint64)        # [pkru_word, epoch]
@@ -420,17 +612,20 @@ class MPKLinkTransport(_ThreadServer):
         self._chunk_ack = threading.Event()
         self._resp_ready = threading.Event()
         self._final = False                        # last chunk of a request?
+        self._error: Optional[BaseException] = None
+        self._poisoned = False
         self._req_rows = 0
         self._resp_rows = 0
         self._seq = 0
-        self.sync_count = 0                        # measured key syncs (telemetry)
+        self.sync_count = 0                        # per-session key syncs
 
-    # -- one PKRU synchronization round trip (writer side) ---------------------
+    # -- one PKRU synchronization round trip (writer side) -------------------
     def _sync_key(self, key, rights):
         self.registry.check(key, rights)           # staging-time capability check
         self._pkru[0] = self.registry.pkru_word((key,))
         self._pkru[1] = self.registry.epoch(self.domain)
         self.sync_count += 1
+        self.transport._bump_sync()
         self._chunk_ready.set()
         self._chunk_ack.wait()
         self._chunk_ack.clear()
@@ -454,11 +649,19 @@ class MPKLinkTransport(_ThreadServer):
                                           seed=self.seed, expect_seq=self._seq,
                                           mac_impl=self._mac)
             except framing.FrameError:
+                self._error = None                 # guard rejection, not a crash
                 self._resp_rows = 0
                 self._resp_ready.set()
                 continue
             self.registry.check(self.key_server, WRITE)
-            resp = self.handler(req).view(np.uint8).reshape(-1)
+            try:
+                resp = np.ascontiguousarray(self.handler(req)) \
+                    .view(np.uint8).reshape(-1)
+            except Exception as e:
+                self._error = e
+                self._resp_rows = 0
+                self._resp_ready.set()
+                continue
             rframe = framing.build_frame(resp, seed=self.seed, seq=self._seq,
                                          mac_impl=self._mac)
             rows = rframe.shape[0]
@@ -467,14 +670,25 @@ class MPKLinkTransport(_ThreadServer):
             self._region_resp[:rows] = rframe
             self._resp_rows = rows
             self.sync_count += 1                   # response-side key sync
+            self.transport._bump_sync()
             self._resp_ready.set()
 
     def _wake(self):
         self._final = False
         self._chunk_ready.set()
         self._chunk_ack.set()
+        self._resp_ready.set()
+
+    def _teardown(self):
+        # give the pkey back (pkey_free) so long-lived transports can cycle
+        # through many more sessions than the key-table size
+        self.registry.free_domain(self.domain)
 
     def request(self, payload: np.ndarray) -> np.ndarray:
+        if self._poisoned:
+            raise TransportError(
+                "session poisoned by an earlier timeout (a stale response "
+                "may be in flight) — open a new session")
         frame = framing.build_frame(payload, seed=self.seed, seq=self._seq,
                                     mac_impl=self._mac)
         rows = frame.shape[0]
@@ -487,9 +701,15 @@ class MPKLinkTransport(_ThreadServer):
             self._req_rows = rows
             self._final = e >= rows
             self._sync_key(self.key_client, WRITE)
-        self._resp_ready.wait()
+        if not self._resp_ready.wait(timeout=self.transport.timeout):
+            self._poisoned = True       # a late response must never be
+            raise TransportError(       # read back as the next one's answer
+                f"mpklink response timed out after {self.transport.timeout}s")
         self._resp_ready.clear()
         if self._resp_rows == 0:
+            if self._error is not None:
+                err, self._error = self._error, None
+                raise err
             raise TransportError("server rejected frame (guard failure)")
         self.registry.check(self.key_client, READ)
         out = framing.parse_frame(self._region_resp[: self._resp_rows],
@@ -497,6 +717,86 @@ class MPKLinkTransport(_ThreadServer):
                                   mac_impl=self._mac)
         self._seq += 1
         return out
+
+
+class MPKLinkTransport(Transport):
+    """Shared region + MPK emulation (paper-faithful).
+
+    Establishment (once per session): the client enrolls with the CA (key
+    pair + proof-of-possession), the CA verifies certificates and grants a
+    channel domain shared with the server; data-plane MAC seed = domain tag
+    ⊕ epoch-mix ⊕ DH session key. Each session therefore holds its own
+    domain, keys and seed — a frame from one session fails the guard on any
+    other.
+
+    Per message: the payload is framed (framing.build_frame — header + MAC)
+    and moved through the session's region in CHUNK-sized pieces; every
+    chunk performs one PKRU synchronization round trip (writer updates the
+    shared PKRU word, reader acknowledges) — the paper's per-chunk key sync.
+    The receiver re-derives the MAC and rejects tampered/foreign frames.
+
+    ``syncs_per_message ≈ ceil(frame_bytes / chunk)`` is what produces the
+    paper's large-payload cliff; MPKLinkOptTransport batches it to 1
+    (the beyond-paper fix, EXPERIMENTS.md §Perf).
+
+    ``registry``/``ca`` may be shared (e.g. by the service gateway) so that
+    transport channels and service domains live in ONE key table;
+    ``max_keys`` lifts the 16-domain x86 limit for many-client runs
+    (documented deviation — the emulation has no hardware key file).
+    """
+
+    name = "mpklink"
+    CHUNK = 64 * 1024
+
+    def __init__(self, handler: Handler, chunk: Optional[int] = None,
+                 mac_impl: Callable = fast_mac, *,
+                 registry: Optional[KeyRegistry] = None,
+                 ca: Optional[CertificateAuthority] = None,
+                 max_keys: Optional[int] = None,
+                 server_name: str = "svc-server",
+                 timeout: float = 120.0):
+        super().__init__(handler)
+        self.chunk = chunk or self.CHUNK
+        self._mac = mac_impl
+        self.timeout = timeout
+        self.server_name = server_name
+        standalone = registry is None and ca is None
+        self.registry = registry or KeyRegistry(max_keys=max_keys or 16, seed=7)
+        self.ca = ca or CertificateAuthority(self.registry)
+        if server_name not in self.ca._services:
+            self._kp_server, _ = enroll(self.ca, server_name)
+        self.sync_count = 0                        # aggregate across sessions
+        self._sync_lock = threading.Lock()
+        if standalone:
+            # eager default session: keeps the seed's single-client attribute
+            # surface (domain / seed / keys inspectable before start()).
+            # With a shared registry/CA (gateway deployments) sessions come
+            # only from connect() — no key-table slot or CA identity is
+            # consumed for a client that will never be used.
+            d = self._make_session("svc-client")
+            with self._slock:
+                self._sessions.append(d)
+            self._default = d
+            self._on_new_default()
+
+    def _on_new_default(self):
+        d = self._default
+        self._kp_client = d._kp
+        self.domain = d.domain
+        self.key_client = d.key_client
+        self.key_server = d.key_server
+        self.seed = d.seed
+
+    def _bump_sync(self):
+        with self._sync_lock:
+            self.sync_count += 1
+
+    @property
+    def _seq(self) -> int:
+        return self._default._seq if self._default is not None else 0
+
+    def _make_session(self, name):
+        return MPKLinkSession(self, name)
 
 
 class MPKLinkOptTransport(MPKLinkTransport):
@@ -507,5 +807,6 @@ class MPKLinkOptTransport(MPKLinkTransport):
 
     name = "mpklink_opt"
 
-    def __init__(self, handler: Handler, mac_impl: Callable = fast_mac):
-        super().__init__(handler, chunk=1 << 62, mac_impl=mac_impl)
+    def __init__(self, handler: Handler, mac_impl: Callable = fast_mac, **kw):
+        kw.setdefault("chunk", 1 << 62)
+        super().__init__(handler, mac_impl=mac_impl, **kw)

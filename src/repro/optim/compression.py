@@ -22,7 +22,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.utils import match_vma
+from repro.utils import axis_size, match_vma
 
 
 def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -50,7 +50,7 @@ def compressed_reduce(g: jnp.ndarray, ef: jnp.ndarray, axis: str):
     """All-reduce-mean of one tensor over ``axis`` with an int8 all-gather leg.
     Call inside shard_map. Falls back to exact psum when the leading dim
     doesn't tile. → (reduced (same shape as g), new_ef)."""
-    n = jax.lax.axis_size(axis)
+    n = axis_size(axis)
     if g.ndim == 0 or g.shape[0] % n != 0:
         return jax.lax.pmean(g, axis), ef
 

@@ -18,6 +18,7 @@ layer stack in tests/test_pipeline.py.
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import Tuple
 
 import jax
@@ -27,7 +28,32 @@ from repro.configs.base import ModelConfig
 from repro.core.domains import DomainKey
 from repro.core.fabric import FabricChannel, MPKLinkFabric, neighbor_exchange
 from repro.models.transformer import Impl, apply_block
-from repro.utils import match_vma
+from repro.utils import axis_size, match_vma
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def _broadcast_from(x, axis, src):
+    """psum-broadcast ``x`` from shard ``src`` to every shard of ``axis``.
+
+    Explicit VJP because the transpose of a masked psum is version-dependent:
+    pre-0.5 shard_map transposes psum to psum, which multiplies the cotangent
+    by the axis size when the downstream loss is computed redundantly on the
+    replicated output. The true adjoint — cotangent masked back to the source
+    shard — is spelled out here so gradients are right on every jax pin."""
+    sid = jax.lax.axis_index(axis)
+    return jax.lax.psum(jnp.where(sid == src, x, jnp.zeros_like(x)), axis)
+
+
+def _broadcast_from_fwd(x, axis, src):
+    return _broadcast_from(x, axis, src), None
+
+
+def _broadcast_from_bwd(axis, src, _res, ct):
+    sid = jax.lax.axis_index(axis)
+    return (jnp.where(sid == src, ct, jnp.zeros_like(ct)),)
+
+
+_broadcast_from.defvjp(_broadcast_from_fwd, _broadcast_from_bwd)
 
 
 def pipeline_apply(cfg: ModelConfig, local_params, x_micro, *,
@@ -41,7 +67,7 @@ def pipeline_apply(cfg: ModelConfig, local_params, x_micro, *,
     final broadcast from the last stage, ok flag)."""
     fabric.check(chan, key)
     assert not cfg.moe, "pipeline stages compose with moe_ep, not dense MoE"
-    n = jax.lax.axis_size(chan.axis)
+    n = axis_size(chan.axis)
     sid = jax.lax.axis_index(chan.axis)
     params = jax.tree.map(lambda a: a[0], local_params)      # (L/n, ...)
     n_micro, mb, S, D = x_micro.shape
@@ -75,7 +101,7 @@ def pipeline_apply(cfg: ModelConfig, local_params, x_micro, *,
 
     # microbatch m exits the last stage at tick m + n - 1
     outs = emits[n - 1:]                                     # (n_micro, mb, S, D)
-    outs = jax.lax.psum(jnp.where(sid == n - 1, outs, 0), chan.axis)
+    outs = _broadcast_from(outs, chan.axis, n - 1)
     return outs, ok
 
 

@@ -13,6 +13,8 @@ uniform positions and are served by the batch path / dry-run cells).
 """
 from __future__ import annotations
 
+import itertools
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -129,3 +131,126 @@ class ServingEngine:
                 and self.ticks < max_ticks:
             self.tick()
         return self.completed
+
+
+# ---------------------------------------------------------------------------
+# gateway-facing front-end
+# ---------------------------------------------------------------------------
+
+def encode_prompt(prompt: List[int], max_new: int = 16) -> np.ndarray:
+    """Gateway wire format for EngineService: int32 [max_new, *prompt]."""
+    return np.asarray([max_new, *prompt], np.int32)
+
+
+class EngineService:
+    """Thread-safe inference service over a :class:`ServingEngine`.
+
+    The engine itself is single-threaded (one jitted decode step over the
+    slot grid). This wrapper runs the tick loop on ONE background thread and
+    lets N concurrent callers (gateway service threads) submit prompts and
+    block until their request retires — continuous batching absorbs the
+    concurrency: all admitted prompts share every decode step, so aggregate
+    throughput scales with occupancy, not callers.
+
+    ``handler`` is the gateway/transport service handler: request payload is
+    int32 ``[max_new, tok0, tok1, ...]`` (see :func:`encode_prompt`),
+    response is the int32 generated-token array.
+    """
+
+    def __init__(self, engine: ServingEngine, *, timeout: float = 300.0,
+                 idle_wait: float = 0.02):
+        self.engine = engine
+        self.timeout = timeout
+        self._idle_wait = idle_wait
+        self._lock = threading.Lock()           # guards engine + tables
+        self._events: Dict[int, threading.Event] = {}
+        self._done: Dict[int, Request] = {}
+        self._abandoned: set = set()            # timed-out rids: drop results
+        self._rid = itertools.count()
+        self._consumed = 0                      # engine.completed drained so far
+        self._work = threading.Event()          # submit signal for idle loop
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    # -- lifecycle ---------------------------------------------------------
+    def start(self) -> "EngineService":
+        if self._thread is None:
+            self._thread = threading.Thread(target=self._run, daemon=True,
+                                            name="engine-service")
+            self._thread.start()
+        return self
+
+    def close(self):
+        self._stop.set()
+        self._work.set()
+        if self._thread is not None:
+            self._thread.join(timeout=10)
+        # fail every still-blocked caller fast instead of letting them sit
+        # out the full timeout against a dead tick loop
+        with self._lock:
+            pending = list(self._events.values())
+            self._events.clear()
+        for ev in pending:
+            ev.set()
+
+    # -- tick loop (one thread owns the engine) -----------------------------
+    def _run(self):
+        while not self._stop.is_set():
+            with self._lock:
+                progressed = self.engine.tick()
+                fresh = self.engine.completed[self._consumed:]
+                # drain: the service owns the engine, and an unbounded
+                # completed list is a leak at serving timescales
+                del self.engine.completed[:]
+                self._consumed = 0
+                for req in fresh:
+                    if req.rid in self._abandoned:   # caller timed out: drop
+                        self._abandoned.discard(req.rid)
+                        continue
+                    self._done[req.rid] = req
+                events = [self._events.pop(r.rid, None) for r in fresh]
+            for ev in events:
+                if ev is not None:
+                    ev.set()
+            if not progressed:
+                self._work.wait(timeout=self._idle_wait)
+                self._work.clear()
+
+    # -- service handler (called from N transport/gateway threads) ----------
+    def handler(self, req: np.ndarray) -> np.ndarray:
+        arr = np.asarray(req)
+        if arr.dtype != np.int32:
+            arr = np.frombuffer(np.ascontiguousarray(arr).tobytes(), np.int32)
+        arr = arr.reshape(-1)
+        if arr.size < 2:
+            raise ValueError("inference request needs [max_new, tok0, ...]")
+        max_new, prompt = int(arr[0]), [int(t) for t in arr[1:]]
+        if self._stop.is_set():
+            raise RuntimeError("EngineService is closed")
+        ev = threading.Event()
+        with self._lock:
+            rid = next(self._rid)
+            self._events[rid] = ev
+            self.engine.submit(Request(rid=rid, prompt=prompt, max_new=max_new))
+        self._work.set()
+        ev.wait(timeout=self.timeout)
+        with self._lock:
+            done = self._done.pop(rid, None)
+        if done is not None:
+            return np.asarray(done.generated, np.int32)
+        if self._stop.is_set():
+            raise RuntimeError(
+                f"EngineService closed while request {rid} was in flight")
+        with self._lock:
+            self._events.pop(rid, None)
+            # still queued → cancel outright; already in a slot → mark
+            # abandoned so the result is dropped at retirement
+            before = len(self.engine.queue)
+            self.engine.queue = [r for r in self.engine.queue
+                                 if r.rid != rid]
+            if len(self.engine.queue) == before:
+                self._abandoned.add(rid)
+        raise TimeoutError(f"inference request {rid} timed out "
+                           f"after {self.timeout}s")
+
+    __call__ = handler

@@ -3,6 +3,24 @@ from __future__ import annotations
 
 import jax
 
+# jax moved shard_map out of experimental in 0.6; the pinned 0.4.x only has
+# the experimental spelling. Import it from here everywhere so the repo runs
+# on both sides of the move.
+try:
+    from jax import shard_map  # type: ignore[attr-defined]  # jax >= 0.6
+except ImportError:
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def axis_size(name) -> int:
+    """Static size of a named mesh axis, on either side of the jax API move
+    (``jax.lax.axis_size`` is jax ≥ 0.5; ``psum(1, name)`` constant-folds to
+    the axis size everywhere)."""
+    try:
+        return jax.lax.axis_size(name)
+    except AttributeError:
+        return jax.lax.psum(1, name)
+
 
 def match_vma(x, like):
     """Make ``x``'s varying-manual-axes match ``like``'s (shard_map scan

@@ -11,7 +11,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from repro.utils import shard_map
 from repro.configs import get_reduced, replace
 from repro.configs.base import MoEConfig
 from repro.core.fabric import MPKLinkFabric
