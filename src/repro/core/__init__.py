@@ -18,9 +18,15 @@ TRANSPORTS = {
 }
 
 from repro.core import gateway                     # needs TRANSPORTS above
-from repro.core.gateway import GatewayClient, ServiceGateway
+from repro.core.gateway import GatewayClient, ServiceGateway, ServiceHealth
+from repro.core import faultwire                   # needs gateway above
+from repro.core.faultwire import FaultFabric, FaultPlan, FaultyClient
+from repro.core.transports import (ResponseTimeout, ServiceCrashed,
+                                   ServiceUnavailable)
 
-__all__ = ["ca", "domains", "framing", "gateway", "signature", "transports",
-           "wordcount", "AccessViolation", "DomainKey", "KeyRegistry",
-           "ProtectionDomain", "READ", "RW", "WRITE", "mac_seed", "TRANSPORTS",
-           "GatewayClient", "ServiceGateway"]
+__all__ = ["ca", "domains", "framing", "gateway", "faultwire", "signature",
+           "transports", "wordcount", "AccessViolation", "DomainKey",
+           "KeyRegistry", "ProtectionDomain", "READ", "RW", "WRITE",
+           "mac_seed", "TRANSPORTS", "GatewayClient", "ServiceGateway",
+           "ServiceHealth", "FaultFabric", "FaultPlan", "FaultyClient",
+           "ResponseTimeout", "ServiceCrashed", "ServiceUnavailable"]

@@ -37,7 +37,10 @@ class CertificateAuthority:
         """A service proves possession of its private key by signing its own
         registration; the CA then certifies (name, public_key). A revoked
         identity stays revoked: re-registration under the same name is
-        refused, otherwise a ban would be one reconnect deep."""
+        refused, otherwise a ban would be one reconnect deep. Keys bind to
+        exactly one identity: a (possibly stolen) key already certified for
+        another name — revoked or not — cannot mint a fresh identity, so a
+        banned client cannot re-enter under an alias."""
         existing = self._services.get(name)
         if existing is not None and not existing.verified:
             raise AccessViolation(
@@ -46,6 +49,13 @@ class CertificateAuthority:
             raise AccessViolation(
                 f"service {name}: name already bound to a different key — "
                 f"identity takeover refused")
+        for rec in self._services.values():
+            if rec.public_key == public_key and rec.name != name:
+                raise AccessViolation(
+                    f"service {name}: key already bound to identity "
+                    f"{rec.name!r}"
+                    + (" (revoked)" if not rec.verified else "")
+                    + " — alias registration refused")
         msg = f"register:{name}:{public_key}".encode()
         if not sig.verify(public_key, msg, proof):
             raise AccessViolation(f"service {name}: bad proof of possession")

@@ -4,7 +4,7 @@ A frame is a uint32 matrix of 128 lanes (the TPU-native layout the guard
 kernel consumes):
 
   row 0   — header: [MAGIC, seed, seq, nbytes, dtype_code, ndim,
-                     shape[0..3], mac, 0...]
+                     shape[0..3], 0, mac^meta_mix, 0...]
   rows 1+ — payload: raw bytes viewed as little-endian uint32, zero-padded
             to a whole number of 128-lane rows.
 
@@ -14,6 +14,12 @@ ca.session_seed) — so a frame is only verifiable by a peer holding the same
 domain key *and* session identity, at the current epoch. That single uint32
 check is where MPK access control and the paper's per-message signature
 collapse into one fused operation on-device.
+
+Header integrity: the stored word is ``payload_mac ⊕ _meta_mix(header)``, a
+Horner mix of the ten metadata words — so flipping any header bit (dtype,
+shape, nbytes, ...) fails verification exactly like a payload flip, and the
+reserved lanes (10, 12..127) must be zero. The payload MAC itself is
+unchanged and stays bit-identical to the guard kernel / fast_mac.
 
 Works on both numpy (host transports) and jnp (device fabric) arrays.
 """
@@ -44,6 +50,17 @@ def _mac_np(payload_u32: np.ndarray, seed: int) -> int:
     for row in payload_u32:
         h = (h * MAC_PRIME + row.astype(np.uint64)) & 0xFFFFFFFF
     return int((h * _FOLD_POWERS.astype(np.uint64)).sum() & 0xFFFFFFFF)
+
+
+def _meta_mix(header: np.ndarray, seed: int) -> int:
+    """Horner mix of the ten metadata words (magic..shape[3]) — folded into
+    the stored MAC word so header tampering fails exactly like payload
+    tampering. Pure uint arithmetic, deterministic everywhere."""
+    from repro.kernels.ref import MAC_PRIME
+    h = (0x9E3779B9 ^ (seed & 0xFFFFFFFF)) & 0xFFFFFFFF
+    for w in header[:10]:
+        h = (h * MAC_PRIME + int(w)) & 0xFFFFFFFF
+    return h
 
 
 def pack_payload(arr: np.ndarray) -> Tuple[np.ndarray, dict]:
@@ -78,13 +95,16 @@ def build_frame(arr: np.ndarray, *, seed: int, seq: int, mac_impl=None) -> np.nd
     header[:10] = [MAGIC, seed & 0xFFFFFFFF, seq & 0xFFFFFFFF,
                    meta["nbytes"] & 0xFFFFFFFF, meta["dtype_code"],
                    len(meta["shape"]), *[s & 0xFFFFFFFF for s in shape]]
-    header[11] = mac
+    header[11] = (mac ^ _meta_mix(header, seed)) & 0xFFFFFFFF
     return np.concatenate([header[None], payload], axis=0)
 
 
 def parse_frame(frame: np.ndarray, *, seed: int, expect_seq=None, mac_impl=None) -> np.ndarray:
-    """Verify magic, seed, seq, MAC; return the payload array.
+    """Verify magic, seed, seq, header integrity, MAC; return the payload.
     Raises FrameError on any mismatch — this is the receive-side guard."""
+    frame = np.asarray(frame)
+    if frame.ndim != 2 or frame.shape[0] < 1 or frame.shape[1] != LANES:
+        raise FrameError("malformed frame — truncated or not lane-aligned")
     header, payload = frame[0], frame[1:]
     if int(header[0]) != MAGIC:
         raise FrameError("bad magic — not an MPKLink frame")
@@ -92,12 +112,25 @@ def parse_frame(frame: np.ndarray, *, seed: int, expect_seq=None, mac_impl=None)
         raise FrameError("seed mismatch — wrong domain key, session or epoch")
     if expect_seq is not None and int(header[2]) != (expect_seq & 0xFFFFFFFF):
         raise FrameError(f"sequence mismatch (got {int(header[2])}, want {expect_seq})")
+    if int(header[10]) != 0 or np.any(np.asarray(header[12:]) != 0):
+        raise FrameError("nonzero reserved header lanes — header tampered")
     mac = (mac_impl or _mac_np)(payload, seed)
-    if mac != int(header[11]):
-        raise FrameError("MAC mismatch — payload tampered or truncated")
+    if (mac ^ _meta_mix(header, seed)) & 0xFFFFFFFF != int(header[11]):
+        raise FrameError("MAC mismatch — payload or header tampered/truncated")
     ndim = int(header[5])
-    meta = {"dtype_code": int(header[4]), "nbytes": int(header[3]),
-            "shape": tuple(int(s) for s in header[6:6 + ndim])}
+    nbytes = int(header[3])
+    dtype_code = int(header[4])
+    if dtype_code not in _DTYPES or ndim > 4:
+        raise FrameError("invalid header metadata (dtype/ndim)")
+    shape = tuple(int(s) for s in header[6:6 + ndim])
+    itemsize = np.dtype(_DTYPES[dtype_code]).itemsize
+    if int(np.prod(shape, dtype=np.int64)) * itemsize != nbytes:
+        raise FrameError("invalid header metadata (shape/nbytes disagree)")
+    if payload.shape[0] != frame_rows(nbytes) - 1:
+        raise FrameError(
+            f"frame length mismatch ({payload.shape[0]} payload rows for "
+            f"{nbytes} bytes)")
+    meta = {"dtype_code": dtype_code, "nbytes": nbytes, "shape": shape}
     return unpack_payload(payload, meta)
 
 

@@ -44,6 +44,8 @@ from __future__ import annotations
 
 import itertools
 import threading
+import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Callable, Dict, Optional, Set, Tuple, Union
 
@@ -53,8 +55,11 @@ from repro.core import framing
 from repro.core.ca import CertificateAuthority, enroll
 from repro.core.domains import (AccessViolation, DomainKey, KeyRegistry,
                                 ProtectionDomain, RW, READ, WRITE, mac_seed)
-from repro.core.transports import (MPKLinkTransport, Transport, TransportError,
-                                   _pack_error, _raise_remote, fast_mac)
+from repro.core.transports import (HandlerCrash, MPKLinkTransport,
+                                   ResponseTimeout, ServiceCrashed,
+                                   ServiceUnavailable, Transport,
+                                   TransportError, _pack_error, _raise_remote,
+                                   fast_mac)
 
 Handler = Callable[[np.ndarray], np.ndarray]
 
@@ -75,6 +80,91 @@ def _as_frameable(arr: np.ndarray) -> np.ndarray:
     return arr
 
 
+class ServiceHealth:
+    """Per-service failure tracking + circuit breaker.
+
+    States: ``closed`` (healthy) → ``open`` after ``threshold`` consecutive
+    handler failures (requests are shed with a typed
+    :class:`ServiceUnavailable` instead of hanging) → ``half_open`` after
+    ``probe_after`` sheds (ONE probe request is let through; success closes
+    the circuit, failure re-opens it). Counting sheds instead of wall-clock
+    keeps chaos runs exactly replayable from a seed."""
+
+    def __init__(self, threshold: int = 3, probe_after: int = 8):
+        self.threshold = threshold
+        self.probe_after = probe_after
+        self.state = "closed"
+        self.consecutive_failures = 0
+        self.failures = 0               # lifetime handler failures
+        self.crashes = 0                # lifetime handler-thread crashes
+        self.sheds = 0                  # lifetime circuit rejections
+        self.restarts = 0               # lifetime handler restarts
+        self._shed_run = 0              # sheds since the circuit last opened
+        self._lock = threading.Lock()
+
+    def admit(self, service: str):
+        """Gate a request. Raises ServiceUnavailable while the circuit is
+        open (except for the half-open probe)."""
+        with self._lock:
+            if self.state == "closed":
+                return
+            if self.state == "open":
+                if self._shed_run >= self.probe_after:
+                    self.state = "half_open"    # this request is the probe
+                    return
+                self._shed_run += 1
+                self.sheds += 1
+                raise ServiceUnavailable(
+                    f"service {service!r} circuit open "
+                    f"({self.consecutive_failures} consecutive failures); "
+                    f"shedding load ({self._shed_run}/{self.probe_after} "
+                    f"before probe)")
+            # half_open: another caller's probe is in flight; let it race —
+            # both outcomes resolve the state below
+
+    def success(self):
+        with self._lock:
+            self.consecutive_failures = 0
+            self.state = "closed"
+            self._shed_run = 0
+
+    def failure(self, crashed: bool = False) -> bool:
+        """Record a handler failure. → True when the breaker trips (the
+        gateway then restarts the service if it can, else opens the
+        circuit)."""
+        with self._lock:
+            self.failures += 1
+            self.crashes += int(crashed)
+            self.consecutive_failures += 1
+            if self.state == "half_open":
+                self.state = "open"
+                self._shed_run = 0
+                return True
+            if self.state == "closed" \
+                    and self.consecutive_failures >= self.threshold:
+                return True
+            return False
+
+    def trip(self):
+        with self._lock:
+            self.state = "open"
+            self._shed_run = 0
+
+    def reset(self):
+        with self._lock:
+            self.state = "closed"
+            self.consecutive_failures = 0
+            self._shed_run = 0
+            self.restarts += 1
+
+    def snapshot(self) -> Dict[str, object]:
+        with self._lock:
+            return {"state": self.state,
+                    "consecutive_failures": self.consecutive_failures,
+                    "failures": self.failures, "crashes": self.crashes,
+                    "sheds": self.sheds, "restarts": self.restarts}
+
+
 @dataclass
 class _Service:
     sid: int
@@ -83,6 +173,20 @@ class _Service:
     domain: ProtectionDomain
     server_key: DomainKey
     allow: Optional[Set[str]]       # client-name allow-list; None = any cert
+    factory: Optional[Callable[[], Handler]] = None   # restart hook
+    health: ServiceHealth = field(default_factory=ServiceHealth)
+    # cid → (idempotency token → response payload): a retried request whose
+    # original DID execute is answered from here, never re-executed. The
+    # window is per-client so one client's traffic can never evict another
+    # client's pending-retry token (a client is serial: its own window only
+    # needs to cover its own last few calls)
+    done: "OrderedDict[int, OrderedDict[int, np.ndarray]]" = \
+        field(default_factory=OrderedDict)
+    done_lock: threading.Lock = field(default_factory=threading.Lock)
+
+
+_DONE_TOKENS = 16                   # dedup window depth per client
+_DONE_CLIENTS = 256                 # client buckets kept per service (LRU)
 
 
 @dataclass
@@ -121,7 +225,8 @@ class ServiceGateway:
         self._sid_counter = itertools.count(1)
         self._cid_counter = itertools.count(1)
         self.stats = {"requests": 0, "responses": 0, "macs_verified": 0,
-                      "rejected": 0}
+                      "rejected": 0, "deduped": 0, "sheds": 0,
+                      "restarts": 0, "crashes": 0}
 
         if isinstance(transport, str):
             from repro.core import TRANSPORTS
@@ -135,9 +240,18 @@ class ServiceGateway:
 
     # -- service lifecycle --------------------------------------------------
     def register_service(self, name: str, handler: Handler,
-                         allow: Optional[Set[str]] = None) -> int:
+                         allow: Optional[Set[str]] = None, *,
+                         factory: Optional[Callable[[], Handler]] = None,
+                         failure_threshold: int = 3,
+                         probe_after: int = 8) -> int:
         """Enroll a service with the CA and give it its own protection
-        domain. ``allow`` restricts which client names may open channels."""
+        domain. ``allow`` restricts which client names may open channels.
+        ``factory`` makes the service self-healing: after
+        ``failure_threshold`` consecutive handler failures the gateway
+        replaces the handler with ``factory()``, bumps the domain epoch and
+        lets still-certified clients re-key transparently. Without a
+        factory the circuit opens instead and requests are shed with
+        :class:`ServiceUnavailable` until a probe succeeds."""
         with self._glock:
             if name in self._services:
                 raise ValueError(f"service {name!r} already registered")
@@ -145,10 +259,34 @@ class ServiceGateway:
             dom = self.registry.allocate_domain(f"svc:{name}")
             svc = _Service(next(self._sid_counter), name, handler, dom,
                            self.registry.issue_key(dom, RW),
-                           set(allow) if allow is not None else None)
+                           set(allow) if allow is not None else None,
+                           factory=factory,
+                           health=ServiceHealth(failure_threshold,
+                                                probe_after))
             self._services[name] = svc
             self._by_sid[svc.sid] = svc
             return svc.sid
+
+    def restart_service(self, name: str) -> None:
+        """Self-healing restart: swap in a fresh handler (via the service's
+        factory, when present), bump the service-domain epoch so every
+        outstanding key/frame on the domain goes stale (the PKRU-flush
+        analogue), and re-key the service. Still-certified clients re-key
+        transparently on their next call."""
+        svc = self._services[name]
+        with self._glock:
+            if svc.factory is not None:
+                svc.handler = svc.factory()
+            self.registry.revoke(svc.server_key)          # epoch bump
+            svc.server_key = self.registry.issue_key(svc.domain, RW)
+            self.stats["restarts"] += 1
+        svc.health.reset()
+
+    def health(self) -> Dict[str, Dict[str, object]]:
+        """Per-service health snapshot (for supervisors/monitoring)."""
+        with self._glock:
+            services = list(self._services.values())
+        return {s.name: s.health.snapshot() for s in services}
 
     def start(self) -> "ServiceGateway":
         self.transport.start()
@@ -158,8 +296,10 @@ class ServiceGateway:
         self.transport.close()
 
     # -- client lifecycle ---------------------------------------------------
-    def connect(self, client_name: str) -> "GatewayClient":
-        return GatewayClient(self, client_name)
+    def connect(self, client_name: str, *, retries: int = 0,
+                backoff: float = 0.005) -> "GatewayClient":
+        return GatewayClient(self, client_name, retries=retries,
+                             backoff=backoff)
 
     def _open_channel(self, client: "GatewayClient", service: str) -> Channel:
         """Control plane: CA-checked issue of a client key on the service's
@@ -179,7 +319,10 @@ class ServiceGateway:
             ^ self.ca.session_seed(client._kp.private, service)
         chan = Channel(client.cid, svc.sid, service, seed, key)
         with self._glock:
+            old = self._channels.get((client.cid, svc.sid))
             self._channels[(client.cid, svc.sid)] = chan
+        if old is not None:             # re-key: retire the replaced grant
+            self.registry.retire(old.client_key)
         return chan
 
     def revoke(self, client: "GatewayClient", service: Optional[str] = None):
@@ -220,6 +363,70 @@ class ServiceGateway:
             for s in stats:
                 self.stats[s] += 1
 
+    def _service_failure(self, svc: _Service, crashed: bool = False):
+        """Record a handler failure; when the breaker trips, self-heal by
+        restarting (factory available) or open the circuit and shed."""
+        if crashed:
+            self._bump("crashes")
+        if svc.health.failure(crashed=crashed):
+            if svc.factory is not None:
+                self.restart_service(svc.name)
+            else:
+                svc.health.trip()
+
+    def note_wire_crash(self, sid: int):
+        """A transport-level crash was observed for a request routed to
+        ``sid`` before it reached dispatch (fault fabrics call this so the
+        gateway's health view includes wire-level kills)."""
+        svc = self._by_sid.get(sid)
+        if svc is not None:
+            self._service_failure(svc, crashed=True)
+
+    def _invoke(self, svc: _Service, chan: Channel, cid: int, token: int,
+                fseq: int, payload: np.ndarray) -> np.ndarray:
+        """Run the service handler behind the circuit breaker + dedup cache.
+        Returns the response payload; updates ``chan.server_seq``."""
+        if token:
+            with svc.done_lock:
+                bucket = svc.done.get(cid)
+                cached = bucket.get(token) if bucket is not None else None
+            if cached is not None:
+                # the original executed but its response was lost in flight:
+                # answer from the dedup window, never re-execute. The window
+                # only ever moves FORWARD — a replayed old envelope gets its
+                # (already-delivered) answer but cannot rewind the channel
+                # and desync legitimate in-order traffic
+                self._bump("deduped")
+                chan.server_seq = max(chan.server_seq,
+                                      (fseq + 1) & 0xFFFFFFFF)
+                return cached
+        if fseq != chan.server_seq:
+            raise framing.FrameError(
+                f"sequence mismatch (got {fseq}, want {chan.server_seq})")
+        svc.health.admit(svc.name)      # circuit breaker: shed, don't hang
+        try:
+            resp = _as_frameable(np.asarray(svc.handler(payload)))
+        except HandlerCrash:
+            # kills the transport service thread (by design) — record it,
+            # then let it propagate past the per-request except nets
+            self._service_failure(svc, crashed=True)
+            raise
+        except Exception:
+            self._service_failure(svc)
+            raise
+        svc.health.success()
+        if token:
+            with svc.done_lock:
+                bucket = svc.done.setdefault(cid, OrderedDict())
+                bucket[token] = resp
+                while len(bucket) > _DONE_TOKENS:
+                    bucket.popitem(last=False)
+                svc.done.move_to_end(cid)
+                while len(svc.done) > _DONE_CLIENTS:
+                    svc.done.popitem(last=False)
+        chan.server_seq = (fseq + 1) & 0xFFFFFFFF
+        return resp
+
     def _dispatch(self, req: np.ndarray) -> np.ndarray:
         sid = 0
         try:
@@ -230,7 +437,7 @@ class ServiceGateway:
             route = raw[:_ROUTE_BYTES].view("<u4")
             if int(route[0]) != GW_MAGIC:
                 raise framing.FrameError("not a gateway envelope (bad magic)")
-            sid, cid = int(route[1]), int(route[2])
+            sid, cid, token = int(route[1]), int(route[2]), int(route[3])
             svc = self._by_sid.get(sid)
             if svc is None:
                 raise AccessViolation(f"unknown service id {sid}")
@@ -243,24 +450,32 @@ class ServiceGateway:
                 # region, the service may read it (revocation/epoch enforced)
                 self.registry.check(chan.client_key, WRITE)
                 self.registry.check(svc.server_key, READ)
-                frame = raw[_ROUTE_BYTES:].view("<u4") \
-                    .reshape(-1, framing.LANES)
+                body = raw[_ROUTE_BYTES:]
+                if body.nbytes == 0 or body.nbytes % (framing.LANES * 4):
+                    raise framing.FrameError(
+                        "malformed frame — truncated or not lane-aligned")
+                frame = body.view("<u4").reshape(-1, framing.LANES)
+                # MAC/seed/header verification first (expect_seq=None: the
+                # sequence check is downstream so an idempotent retry of an
+                # already-executed request can be answered from the dedup
+                # window); the unverified sequence word is read afterwards
                 payload = framing.parse_frame(
-                    frame, seed=chan.seed, expect_seq=chan.server_seq,
+                    frame, seed=chan.seed, expect_seq=None,
                     mac_impl=self._mac)
+                fseq = int(frame[0][2])
                 self._bump("requests", "macs_verified")
-                resp = _as_frameable(np.asarray(svc.handler(payload)))
+                resp = self._invoke(svc, chan, cid, token, fseq, payload)
                 self.registry.check(svc.server_key, WRITE)
                 self.registry.check(chan.client_key, READ)
                 rframe = framing.build_frame(
-                    resp, seed=chan.seed, seq=chan.server_seq,
-                    mac_impl=self._mac)
-                chan.server_seq += 1
+                    resp, seed=chan.seed, seq=fseq, mac_impl=self._mac)
             self._bump("responses")
             return np.concatenate(
                 [_route(_OK, sid, 0), rframe.reshape(-1).view(np.uint8)])
         except Exception as e:
-            self._bump("rejected")
+            self._bump(*(("rejected", "sheds")
+                         if isinstance(e, ServiceUnavailable)
+                         else ("rejected",)))
             blob = _pack_error(e)
             return np.concatenate(
                 [_route(_ERR, sid, len(blob)), np.frombuffer(blob, np.uint8)])
@@ -269,17 +484,29 @@ class ServiceGateway:
 class GatewayClient:
     """One CA-enrolled client: its own transport session plus per-service
     channels. ``call()`` is thread-safe but serial per client — open one
-    client per concurrent caller (that's the session model)."""
+    client per concurrent caller (that's the session model).
 
-    def __init__(self, gw: ServiceGateway, name: str):
+    Resilience: every call carries an idempotency token; with ``retries``
+    > 0 a call that fails with a *liveness* error (session crash/response
+    timeout — never a security rejection) heals the transport session,
+    re-keys the channel and resends the SAME token, so a retried request
+    whose original did execute is answered from the gateway's dedup window
+    instead of running twice."""
+
+    def __init__(self, gw: ServiceGateway, name: str, *, retries: int = 0,
+                 backoff: float = 0.005):
         self.gw = gw
         self.name = name
+        self.retries = retries
+        self.backoff = backoff
         self._kp, _ = enroll(gw.ca, name)
         self.cid = next(gw._cid_counter)
         self._session = gw.transport.connect(f"gw:{name}")
         self._channels: Dict[str, Channel] = {}
         self._lock = threading.Lock()
+        self._tokens = itertools.count(1)   # 0 = "no token" on the wire
         self.macs_verified = 0          # response MACs this client checked
+        self.retried = 0                # liveness retries this client made
 
     def open(self, service: str) -> Channel:
         with self._lock:
@@ -296,23 +523,62 @@ class GatewayClient:
             self._channels.pop(service, None)
         return self.open(service)
 
+    def heal(self, service: Optional[str] = None):
+        """Recover from a dead/poisoned transport session: reconnect the
+        session and (optionally) re-open the service channel so both sides
+        restart from a fresh key + sequence 0."""
+        s = self._session
+        if s._crashed or s._closed or s._poisoned:
+            self._reconnect()
+        if service is not None:
+            self.reopen(service)
+
+    def _reconnect(self):
+        try:
+            self._session.close()
+        except Exception:
+            pass
+        self._session = self.gw.transport.connect(f"gw:{self.name}")
+
     def call(self, service: str, payload: np.ndarray) -> np.ndarray:
         payload = np.asarray(payload)
-        try:
-            return self._call_once(self.open(service), payload)
-        except AccessViolation as e:
-            # someone's revocation bumped the service-domain epoch; a still-
-            # certified client just re-keys through the CA and retries once
-            # (a banned client fails the certificate check in reopen())
-            if "stale key epoch" not in str(e):
-                raise
-            return self._call_once(self.reopen(service), payload)
+        token = next(self._tokens) & 0xFFFFFFFF or next(self._tokens)
+        attempts = 0
+        rekeyed = False
+        while True:
+            chan = self.open(service)
+            try:
+                return self._call_once(chan, payload, token)
+            except AccessViolation as e:
+                # someone's revocation (or a self-healing restart) bumped
+                # the service-domain epoch; a still-certified client just
+                # re-keys through the CA and retries once per attempt (a
+                # banned client fails the certificate check in reopen())
+                if "stale key epoch" not in str(e) or rekeyed:
+                    raise
+                rekeyed = True
+                self.reopen(service)
+            except ServiceUnavailable:
+                attempts += 1
+                if attempts > self.retries:
+                    raise
+                self.retried += 1
+                time.sleep(self.backoff * attempts)
+            except (ServiceCrashed, ResponseTimeout):
+                attempts += 1
+                if attempts > self.retries:
+                    raise
+                self.retried += 1
+                rekeyed = False
+                self.heal(service)      # fresh session + channel, same token
+                time.sleep(self.backoff * attempts)
 
-    def _call_once(self, chan: Channel, payload: np.ndarray) -> np.ndarray:
+    def _call_once(self, chan: Channel, payload: np.ndarray,
+                   token: int = 0) -> np.ndarray:
         with self._lock:
             frame = framing.build_frame(payload, seed=chan.seed,
                                         seq=chan.seq, mac_impl=self.gw._mac)
-            env = np.concatenate([_route(chan.sid, self.cid, 0),
+            env = np.concatenate([_route(chan.sid, self.cid, token),
                                   frame.reshape(-1).view(np.uint8)])
             resp = np.ascontiguousarray(np.asarray(self._session.request(env))) \
                 .view(np.uint8).reshape(-1)

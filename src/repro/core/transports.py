@@ -48,9 +48,11 @@ from __future__ import annotations
 
 import itertools
 import os
+import select
 import socket
 import struct
 import threading
+import time
 from typing import Callable, Dict, List, Optional
 
 import msgpack
@@ -73,10 +75,43 @@ class CapacityError(TransportError):
     """Raised when a fixed-capacity transport cannot hold the payload."""
 
 
+class ResponseTimeout(TransportError):
+    """The client-side response wait expired (the service may still be
+    alive — e.g. a dropped/late response). The session poisons itself."""
+
+
+class ServiceCrashed(TransportError):
+    """The service handler/thread died while a request was in flight —
+    distinguished from :class:`ResponseTimeout` so retry layers fail over
+    immediately instead of waiting out the full deadline on a dead peer."""
+
+
+class ServiceUnavailable(TransportError):
+    """A circuit breaker is shedding load for this service — the request
+    was rejected up-front instead of being allowed to hang."""
+
+
+class HandlerCrash(BaseException):
+    """Fault-injection signal: a handler failure that KILLS the service
+    thread instead of being propagated as a normal error response (a
+    BaseException so the per-request ``except Exception`` nets don't absorb
+    it). The session's crash path converts it into a typed
+    :class:`ServiceCrashed` for the waiting client."""
+
+
+class DropResponse(BaseException):
+    """Fault-injection signal: execute the handler but never send the
+    response — the client's bounded wait must expire. The service thread
+    itself keeps serving (the wire dropped the frame, the peer is alive)."""
+
+
 # exception types a service thread may propagate back to its client by name
 _REMOTE_ERRORS: Dict[str, type] = {
     "CapacityError": CapacityError,
     "TransportError": TransportError,
+    "ResponseTimeout": ResponseTimeout,
+    "ServiceCrashed": ServiceCrashed,
+    "ServiceUnavailable": ServiceUnavailable,
     "AccessViolation": AccessViolation,
     "FrameError": framing.FrameError,
 }
@@ -132,11 +167,43 @@ def _write_fd(fd: int, data: memoryview):
         data = data[n:]
 
 
-def _read_fd(fd: int, n: int) -> bytearray:
+def _write_fd_deadline(fd: int, data: memoryview, timeout: Optional[float]):
+    """Write all of ``data``; with ``timeout`` the fd must be non-blocking
+    and the whole write is select(2)-bounded — a full pipe against a dead
+    reader raises :class:`ResponseTimeout` instead of hanging forever."""
+    if timeout is None:
+        return _write_fd(fd, data)
+    deadline = time.monotonic() + timeout
+    while data:
+        remaining = deadline - time.monotonic()
+        if remaining <= 0:
+            raise ResponseTimeout(f"pipe write timed out after {timeout}s")
+        _, ready, _ = select.select([], [fd], [], remaining)
+        if not ready:
+            continue
+        try:
+            n = os.write(fd, data[: 1 << 20])
+        except BlockingIOError:
+            continue
+        data = data[n:]
+
+
+def _read_fd(fd: int, n: int, timeout: Optional[float] = None) -> bytearray:
+    """Read exactly n bytes; with ``timeout`` the whole read is bounded by a
+    select(2) deadline and raises :class:`ResponseTimeout` on expiry."""
     buf = bytearray(n)
     view = memoryview(buf)
     got = 0
+    deadline = None if timeout is None else time.monotonic() + timeout
     while got < n:
+        if deadline is not None:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise ResponseTimeout(
+                    f"pipe read timed out after {timeout}s")
+            ready, _, _ = select.select([fd], [], [], remaining)
+            if not ready:
+                continue
         chunk = os.read(fd, min(n - got, 1 << 20))
         if not chunk:
             raise TransportError("pipe closed")
@@ -161,10 +228,17 @@ class Session:
     def __init__(self, transport: "Transport", name: str):
         self.transport = transport
         self.name = name
-        self.handler = transport.handler
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
         self._closed = False
+        self._crashed = False
+        self._poisoned = False
+
+    @property
+    def handler(self) -> Handler:
+        # resolved per request so fault fabrics / gateway restarts that swap
+        # transport.handler take effect on live sessions too
+        return self.transport.handler
 
     # -- lifecycle --------------------------------------------------------
     def ensure_started(self):
@@ -193,7 +267,41 @@ class Session:
         pass
 
     def _serve(self):
+        """Thread body: run the transport's serve loop; if it dies with a
+        request possibly in flight (injected HandlerCrash, or any escaped
+        BaseException), mark the session crashed and push a typed
+        :class:`ServiceCrashed` to the waiting client IMMEDIATELY — the
+        client must never wait out its full deadline on a dead service."""
+        try:
+            self._serve_loop()
+        except BaseException as e:          # noqa: B036 — crash containment
+            if self._stop.is_set():
+                return
+            self._crashed = True
+            try:
+                self._notify_crash(ServiceCrashed(
+                    f"service thread for session {self.name!r} crashed: "
+                    f"{type(e).__name__}: {e}"))
+            except Exception:
+                pass
+
+    def _serve_loop(self):
         raise NotImplementedError
+
+    def _notify_crash(self, exc: ServiceCrashed):
+        """Deliver ``exc`` to a client blocked on this session's response."""
+
+    def _check_usable(self):
+        if self._crashed:
+            raise ServiceCrashed(
+                f"session {self.name!r}: service thread is dead — "
+                f"open a new session")
+        if self._poisoned:
+            raise TransportError(
+                "session poisoned by an earlier timeout (a stale response "
+                "may be in flight) — open a new session")
+        if self._closed:
+            raise TransportError(f"session {self.name!r} is closed")
 
     def request(self, payload: np.ndarray) -> np.ndarray:
         raise NotImplementedError
@@ -205,8 +313,9 @@ class Transport:
 
     name = "?"
 
-    def __init__(self, handler: Handler):
+    def __init__(self, handler: Handler, timeout: float = 120.0):
         self.handler = handler
+        self.timeout = timeout          # client-side response deadline
         self._sessions: List[Session] = []
         self._slock = threading.Lock()
         self._default: Optional[Session] = None
@@ -239,9 +348,9 @@ class Transport:
 
     def request(self, payload: np.ndarray) -> np.ndarray:
         d = self._default
-        if d is None or d._closed or getattr(d, "_poisoned", False):
+        if d is None or d._closed or d._crashed or d._poisoned:
             if d is not None and not d._closed:
-                d.close()                  # a poisoned session is done for
+                d.close()       # a poisoned/crashed session is done for
             self._default = self.connect("svc-client")
             self._on_new_default()
         self._default.ensure_started()
@@ -267,8 +376,16 @@ class PipeSession(Session):
         super().__init__(transport, name)
         self._c2s = os.pipe()
         self._s2c = os.pipe()
+        # client-side write end is non-blocking so request() sends can be
+        # deadline-bounded (a dead service thread stops draining the pipe)
+        os.set_blocking(self._c2s[1], False)
 
-    def _serve(self):
+    def _send_error(self, exc: BaseException):
+        blob = _pack_error(exc)
+        _write_fd(self._s2c[1], memoryview(_LEN.pack(len(blob) | _ERR_BIT)))
+        _write_fd(self._s2c[1], memoryview(blob))
+
+    def _serve_loop(self):
         while not self._stop.is_set():
             try:
                 n = _LEN.unpack(bytes(_read_fd(self._c2s[0], 8)))[0]
@@ -280,13 +397,19 @@ class PipeSession(Session):
             try:
                 resp = self.handler(req)
                 raw = np.ascontiguousarray(resp).view(np.uint8).reshape(-1)
+            except DropResponse:                   # injected wire drop
+                continue
             except Exception as e:                 # propagate, don't die
-                blob = _pack_error(e)
-                _write_fd(self._s2c[1], memoryview(_LEN.pack(len(blob) | _ERR_BIT)))
-                _write_fd(self._s2c[1], memoryview(blob))
+                self._send_error(e)
                 continue
             _write_fd(self._s2c[1], memoryview(_LEN.pack(raw.nbytes)))
             _write_fd(self._s2c[1], memoryview(raw))
+
+    def _notify_crash(self, exc: ServiceCrashed):
+        try:
+            self._send_error(exc)
+        except OSError:
+            pass
 
     def _wake(self):
         try:
@@ -295,13 +418,25 @@ class PipeSession(Session):
             pass
 
     def request(self, payload: np.ndarray) -> np.ndarray:
+        self._check_usable()
+        timeout = self.transport.timeout
         raw = np.ascontiguousarray(payload).view(np.uint8).reshape(-1)
-        _write_fd(self._c2s[1], memoryview(_LEN.pack(raw.nbytes)))
-        _write_fd(self._c2s[1], memoryview(raw))
-        n = _LEN.unpack(bytes(_read_fd(self._s2c[0], 8)))[0]
-        if n & _ERR_BIT:
-            _raise_remote(_read_fd(self._s2c[0], n & ~_ERR_BIT))
-        return np.frombuffer(_read_fd(self._s2c[0], n), np.uint8)
+        try:
+            _write_fd_deadline(self._c2s[1],
+                               memoryview(_LEN.pack(raw.nbytes)), timeout)
+            _write_fd_deadline(self._c2s[1], memoryview(raw), timeout)
+            n = _LEN.unpack(bytes(_read_fd(self._s2c[0], 8, timeout)))[0]
+            if n & _ERR_BIT:
+                _raise_remote(_read_fd(self._s2c[0], n & ~_ERR_BIT, timeout))
+            return np.frombuffer(_read_fd(self._s2c[0], n, timeout), np.uint8)
+        except ResponseTimeout:
+            # a late response may still arrive; never let it be read as the
+            # answer to a NEW request
+            self._poisoned = True
+            if self._crashed:
+                raise ServiceCrashed(
+                    f"session {self.name!r}: service thread died mid-request")
+            raise
 
     def _teardown(self):
         for fd in (*self._c2s, *self._s2c):
@@ -339,8 +474,14 @@ class UDSSession(Session):
         super().__init__(transport, name)
         self._client, self._server = socket.socketpair(
             socket.AF_UNIX, socket.SOCK_STREAM)
+        self._client.settimeout(transport.timeout)
 
-    def _serve(self):
+    def _send_error(self, exc: BaseException):
+        blob = _pack_error(exc)
+        self._server.sendall(_LEN.pack(len(blob) | _ERR_BIT))
+        self._server.sendall(blob)
+
+    def _serve_loop(self):
         while not self._stop.is_set():
             try:
                 n = _LEN.unpack(bytes(_recv_exact(self._server, 8)))[0]
@@ -352,13 +493,19 @@ class UDSSession(Session):
             try:
                 resp = np.ascontiguousarray(self.handler(req)) \
                     .view(np.uint8).reshape(-1)
+            except DropResponse:                   # injected wire drop
+                continue
             except Exception as e:
-                blob = _pack_error(e)
-                self._server.sendall(_LEN.pack(len(blob) | _ERR_BIT))
-                self._server.sendall(blob)
+                self._send_error(e)
                 continue
             self._server.sendall(_LEN.pack(resp.nbytes))
             self._server.sendall(resp)
+
+    def _notify_crash(self, exc: ServiceCrashed):
+        try:
+            self._send_error(exc)
+        except OSError:
+            pass
 
     def _wake(self):
         try:
@@ -367,13 +514,25 @@ class UDSSession(Session):
             pass
 
     def request(self, payload: np.ndarray) -> np.ndarray:
+        self._check_usable()
         raw = np.ascontiguousarray(payload).view(np.uint8).reshape(-1)
-        self._client.sendall(_LEN.pack(raw.nbytes))
-        self._client.sendall(raw)
-        n = _LEN.unpack(bytes(_recv_exact(self._client, 8)))[0]
-        if n & _ERR_BIT:
-            _raise_remote(_recv_exact(self._client, n & ~_ERR_BIT))
-        return np.frombuffer(_recv_exact(self._client, n), np.uint8)
+        try:
+            # sends are inside the timeout net too: a send-side stall (full
+            # socket buffer against a wedged peer) must poison the session
+            # — the stream is desynced mid-message — not escape untyped
+            self._client.sendall(_LEN.pack(raw.nbytes))
+            self._client.sendall(raw)
+            n = _LEN.unpack(bytes(_recv_exact(self._client, 8)))[0]
+            if n & _ERR_BIT:
+                _raise_remote(_recv_exact(self._client, n & ~_ERR_BIT))
+            return np.frombuffer(_recv_exact(self._client, n), np.uint8)
+        except socket.timeout:
+            self._poisoned = True
+            if self._crashed:
+                raise ServiceCrashed(
+                    f"session {self.name!r}: service thread died mid-request")
+            raise ResponseTimeout(
+                f"uds response timed out after {self.transport.timeout}s")
 
     def _teardown(self):
         self._client.close()
@@ -403,11 +562,10 @@ class ShmSession(Session):
         self._req_len = 0
         self._resp_len = 0
         self._error: Optional[BaseException] = None
-        self._poisoned = False
         self._req_ready = threading.Event()
         self._resp_ready = threading.Event()
 
-    def _serve(self):
+    def _serve_loop(self):
         while not self._stop.is_set():
             if not self._req_ready.wait(timeout=0.5):
                 continue
@@ -425,10 +583,19 @@ class ShmSession(Session):
                 self._error = None
                 self._resp[: resp.nbytes] = resp
                 self._resp_len = resp.nbytes
+            except DropResponse:                   # injected wire drop: the
+                continue                           # client wait must expire
             except Exception as e:                 # incl. CapacityError
                 self._error = e
                 self._resp_len = 0
             self._resp_ready.set()
+
+    def _notify_crash(self, exc: ServiceCrashed):
+        # wake the blocked waiter immediately with the typed crash — it must
+        # not sit out the full deadline against a dead service thread
+        self._error = exc
+        self._resp_len = 0
+        self._resp_ready.set()
 
     def _wake(self):
         # a waiter woken by close() must get an error, never the previous
@@ -438,10 +605,7 @@ class ShmSession(Session):
         self._resp_ready.set()
 
     def request(self, payload: np.ndarray) -> np.ndarray:
-        if self._poisoned:
-            raise TransportError(
-                "session poisoned by an earlier timeout (a stale response "
-                "may be in flight) — open a new session")
+        self._check_usable()
         raw = np.ascontiguousarray(payload).view(np.uint8).reshape(-1)
         if raw.nbytes > self.capacity:
             raise CapacityError(
@@ -453,7 +617,10 @@ class ShmSession(Session):
             # the service thread may still deliver later; never let that
             # stale response be mistaken for the answer to a NEW request
             self._poisoned = True
-            raise TransportError(
+            if self._crashed:
+                raise ServiceCrashed(
+                    f"session {self.name!r}: service thread died mid-request")
+            raise ResponseTimeout(
                 f"shm response timed out after {self.transport.timeout}s")
         self._resp_ready.clear()
         if self._error is not None:
@@ -475,9 +642,8 @@ class ShmTransport(Transport):
 
     def __init__(self, handler: Handler, capacity: int = DEFAULT_CAPACITY,
                  timeout: float = 120.0):
-        super().__init__(handler)
+        super().__init__(handler, timeout=timeout)
         self.capacity = capacity
-        self.timeout = timeout
 
     def _make_session(self, name):
         return ShmSession(self, name)
@@ -497,6 +663,7 @@ class GrpcSimSession(Session):
             socket.AF_UNIX, socket.SOCK_STREAM)
         for s in (self._client, self._server):
             s.setsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF, 1 << 20)
+        self._client.settimeout(transport.timeout)
 
     def _send_msg(self, sock: socket.socket, obj):
         body = msgpack.packb(obj, use_bin_type=True)
@@ -532,7 +699,7 @@ class GrpcSimSession(Session):
                 consumed = 0
         return msgpack.unpackb(b"".join(chunks), raw=False)
 
-    def _serve(self):
+    def _serve_loop(self):
         while not self._stop.is_set():
             try:
                 msg = self._recv_msg(self._server)
@@ -544,11 +711,19 @@ class GrpcSimSession(Session):
             try:
                 resp = np.ascontiguousarray(self.handler(req)) \
                     .view(np.uint8).reshape(-1)
+            except DropResponse:                   # injected wire drop
+                continue
             except Exception as e:
                 self._send_msg(self._server,
                                {"status": 1, "error": _pack_error(e)})
                 continue
             self._send_msg(self._server, {"status": 0, "data": resp.tobytes()})
+
+    def _notify_crash(self, exc: ServiceCrashed):
+        try:
+            self._send_msg(self._server, {"status": 1, "error": _pack_error(exc)})
+        except OSError:
+            pass
 
     def _wake(self):
         try:
@@ -557,9 +732,18 @@ class GrpcSimSession(Session):
             pass
 
     def request(self, payload: np.ndarray) -> np.ndarray:
+        self._check_usable()
         raw = np.ascontiguousarray(payload).view(np.uint8).reshape(-1)
-        self._send_msg(self._client, {"op": "count", "data": raw.tobytes()})
-        resp = self._recv_msg(self._client)
+        try:
+            self._send_msg(self._client, {"op": "count", "data": raw.tobytes()})
+            resp = self._recv_msg(self._client)
+        except socket.timeout:
+            self._poisoned = True
+            if self._crashed:
+                raise ServiceCrashed(
+                    f"session {self.name!r}: service thread died mid-request")
+            raise ResponseTimeout(
+                f"grpc_sim response timed out after {self.transport.timeout}s")
         if resp.get("status"):
             _raise_remote(resp["error"])
         return np.frombuffer(resp["data"], np.uint8)
@@ -613,7 +797,6 @@ class MPKLinkSession(Session):
         self._resp_ready = threading.Event()
         self._final = False                        # last chunk of a request?
         self._error: Optional[BaseException] = None
-        self._poisoned = False
         self._req_rows = 0
         self._resp_rows = 0
         self._seq = 0
@@ -630,7 +813,7 @@ class MPKLinkSession(Session):
         self._chunk_ack.wait()
         self._chunk_ack.clear()
 
-    def _serve(self):
+    def _serve_loop(self):
         while not self._stop.is_set():
             if not self._chunk_ready.wait(timeout=0.5):
                 continue
@@ -657,6 +840,8 @@ class MPKLinkSession(Session):
             try:
                 resp = np.ascontiguousarray(self.handler(req)) \
                     .view(np.uint8).reshape(-1)
+            except DropResponse:                   # injected wire drop: the
+                continue                           # client wait must expire
             except Exception as e:
                 self._error = e
                 self._resp_rows = 0
@@ -673,6 +858,13 @@ class MPKLinkSession(Session):
             self.transport._bump_sync()
             self._resp_ready.set()
 
+    def _notify_crash(self, exc: ServiceCrashed):
+        # wake both the chunk-sync and response waiters with the typed crash
+        self._error = exc
+        self._resp_rows = 0
+        self._chunk_ack.set()
+        self._resp_ready.set()
+
     def _wake(self):
         self._final = False
         self._chunk_ready.set()
@@ -685,10 +877,7 @@ class MPKLinkSession(Session):
         self.registry.free_domain(self.domain)
 
     def request(self, payload: np.ndarray) -> np.ndarray:
-        if self._poisoned:
-            raise TransportError(
-                "session poisoned by an earlier timeout (a stale response "
-                "may be in flight) — open a new session")
+        self._check_usable()
         frame = framing.build_frame(payload, seed=self.seed, seq=self._seq,
                                     mac_impl=self._mac)
         rows = frame.shape[0]
@@ -703,7 +892,10 @@ class MPKLinkSession(Session):
             self._sync_key(self.key_client, WRITE)
         if not self._resp_ready.wait(timeout=self.transport.timeout):
             self._poisoned = True       # a late response must never be
-            raise TransportError(       # read back as the next one's answer
+            if self._crashed:           # read back as the next one's answer
+                raise ServiceCrashed(
+                    f"session {self.name!r}: service thread died mid-request")
+            raise ResponseTimeout(
                 f"mpklink response timed out after {self.transport.timeout}s")
         self._resp_ready.clear()
         if self._resp_rows == 0:
@@ -755,10 +947,9 @@ class MPKLinkTransport(Transport):
                  max_keys: Optional[int] = None,
                  server_name: str = "svc-server",
                  timeout: float = 120.0):
-        super().__init__(handler)
+        super().__init__(handler, timeout=timeout)
         self.chunk = chunk or self.CHUNK
         self._mac = mac_impl
-        self.timeout = timeout
         self.server_name = server_name
         standalone = registry is None and ca is None
         self.registry = registry or KeyRegistry(max_keys=max_keys or 16, seed=7)

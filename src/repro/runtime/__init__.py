@@ -1,14 +1,16 @@
-from repro.runtime.elastic import elastic_restore, plan_remesh, remesh
-from repro.runtime.fault import (FailureInjector, GuardTripError,
-                                 HeartbeatMonitor, StragglerDetector)
+from repro.runtime.elastic import (elastic_restore, plan_gateway_recovery,
+                                   plan_remesh, remesh)
+from repro.runtime.fault import (FailureInjector, GatewaySupervisor,
+                                 GuardTripError, HeartbeatMonitor,
+                                 StragglerDetector)
 from repro.runtime.serve import (EngineService, Request, ServingEngine,
                                  encode_prompt)
 from repro.runtime.steps import (make_decode_step, make_prefill_step,
                                  make_train_step)
 from repro.runtime.train_loop import Trainer, TrainReport
 
-__all__ = ["elastic_restore", "plan_remesh", "remesh", "FailureInjector",
-           "GuardTripError", "HeartbeatMonitor", "StragglerDetector",
-           "EngineService", "Request", "ServingEngine", "encode_prompt",
-           "make_decode_step", "make_prefill_step", "make_train_step",
-           "Trainer", "TrainReport"]
+__all__ = ["elastic_restore", "plan_gateway_recovery", "plan_remesh",
+           "remesh", "FailureInjector", "GatewaySupervisor", "GuardTripError",
+           "HeartbeatMonitor", "StragglerDetector", "EngineService",
+           "Request", "ServingEngine", "encode_prompt", "make_decode_step",
+           "make_prefill_step", "make_train_step", "Trainer", "TrainReport"]

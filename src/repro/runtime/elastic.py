@@ -46,3 +46,26 @@ def elastic_restore(ckpt: Checkpointer, like_tree, mesh, spec_tree,
                              is_leaf=lambda x: isinstance(
                                  x, jax.sharding.PartitionSpec))
     return ckpt.restore_placed(like_tree, shardings, step)
+
+
+def plan_gateway_recovery(health: dict, restartable: set) -> list:
+    """Service-level remesh policy (pure decision, no side effects): given
+    a gateway health snapshot ({service: {"state", ...}}), decide per
+    service what the supervisor should actuate.
+
+      open circuit + restartable → ("restart", name)   epoch bump + re-key
+      open circuit, no factory   → ("shed", name)      keep shedding typed
+      half_open                  → ("probe", name)     a probe is in flight
+      closed                     → no action
+
+    Deterministic and order-stable (sorted by service name) so supervision
+    sweeps are replayable in chaos tests."""
+    actions = []
+    for name in sorted(health):
+        state = health[name]["state"]
+        if state == "open":
+            actions.append(("restart" if name in restartable else "shed",
+                            name))
+        elif state == "half_open":
+            actions.append(("probe", name))
+    return actions

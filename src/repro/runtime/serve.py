@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.transports import ServiceCrashed
 from repro.models import decode_step, init_decode_state
 from repro.models.transformer import Impl
 
@@ -132,6 +133,18 @@ class ServingEngine:
             self.tick()
         return self.completed
 
+    def reset(self) -> List[Request]:
+        """Crash recovery: drop all in-flight work and return to an empty
+        slot grid (caches/positions are re-zeroed per slot on admit).
+        → the requests that were lost (queued + slotted)."""
+        lost = [r for r in self.slots if r is not None] + list(self.queue)
+        self.slots = [None] * self.B
+        self.queue = []
+        self.current_token[:] = 0
+        self.prompt_cursor[:] = 0
+        self.state["pos"] = jnp.zeros((self.B,), jnp.int32)
+        return lost
+
 
 # ---------------------------------------------------------------------------
 # gateway-facing front-end
@@ -155,6 +168,12 @@ class EngineService:
     ``handler`` is the gateway/transport service handler: request payload is
     int32 ``[max_new, tok0, tok1, ...]`` (see :func:`encode_prompt`),
     response is the int32 generated-token array.
+
+    Self-healing: if the tick loop dies mid-decode (a crashed engine
+    worker), the loop marks every in-flight request failed with a typed
+    :class:`ServiceCrashed` (so gateway retry layers fail over immediately
+    instead of waiting out the deadline), resets the slot grid, and keeps
+    serving — the next submit decodes on the recovered engine.
     """
 
     def __init__(self, engine: ServingEngine, *, timeout: float = 300.0,
@@ -165,12 +184,15 @@ class EngineService:
         self._lock = threading.Lock()           # guards engine + tables
         self._events: Dict[int, threading.Event] = {}
         self._done: Dict[int, Request] = {}
+        self._failed: Dict[int, BaseException] = {}
         self._abandoned: set = set()            # timed-out rids: drop results
         self._rid = itertools.count()
         self._consumed = 0                      # engine.completed drained so far
         self._work = threading.Event()          # submit signal for idle loop
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
+        self.crashes = 0                        # tick-loop crashes survived
+        self._inject_crash = False              # test hook: die on next tick
 
     # -- lifecycle ---------------------------------------------------------
     def start(self) -> "EngineService":
@@ -194,21 +216,65 @@ class EngineService:
             ev.set()
 
     # -- tick loop (one thread owns the engine) -----------------------------
+    def inject_crash(self):
+        """Chaos hook: make the next engine tick die (deterministically)."""
+        self._inject_crash = True
+        self._work.set()
+
+    def _recover(self, cause: BaseException):
+        """Crash containment: deliver anything that finished during the
+        dying tick, fail every truly in-flight request with a typed
+        ServiceCrashed NOW (no deadline stall), reset the engine, keep
+        serving."""
+        with self._lock:
+            self.crashes += 1
+            events = []
+            # requests the crashing tick already retired completed honestly
+            # — deliver them, don't strand their callers for the deadline
+            for req in self.engine.completed[self._consumed:]:
+                if req.rid in self._abandoned:
+                    self._abandoned.discard(req.rid)
+                    continue
+                self._done[req.rid] = req
+                events.append(self._events.pop(req.rid, None))
+            del self.engine.completed[:]
+            self._consumed = 0
+            lost = self.engine.reset()
+            exc = ServiceCrashed(
+                f"engine worker crashed mid-decode ({type(cause).__name__}: "
+                f"{cause}); request lost — safe to retry")
+            for req in lost:
+                if req.rid in self._abandoned:
+                    self._abandoned.discard(req.rid)
+                    continue
+                self._failed[req.rid] = exc
+                events.append(self._events.pop(req.rid, None))
+        for ev in events:
+            if ev is not None:
+                ev.set()
+
     def _run(self):
         while not self._stop.is_set():
-            with self._lock:
-                progressed = self.engine.tick()
-                fresh = self.engine.completed[self._consumed:]
-                # drain: the service owns the engine, and an unbounded
-                # completed list is a leak at serving timescales
-                del self.engine.completed[:]
-                self._consumed = 0
-                for req in fresh:
-                    if req.rid in self._abandoned:   # caller timed out: drop
-                        self._abandoned.discard(req.rid)
-                        continue
-                    self._done[req.rid] = req
-                events = [self._events.pop(r.rid, None) for r in fresh]
+            try:
+                with self._lock:
+                    if self._inject_crash:
+                        self._inject_crash = False
+                        raise RuntimeError("injected engine crash")
+                    progressed = self.engine.tick()
+                    fresh = self.engine.completed[self._consumed:]
+                    # drain: the service owns the engine, and an unbounded
+                    # completed list is a leak at serving timescales
+                    del self.engine.completed[:]
+                    self._consumed = 0
+                    for req in fresh:
+                        if req.rid in self._abandoned:  # caller timed out
+                            self._abandoned.discard(req.rid)
+                            continue
+                        self._done[req.rid] = req
+                    events = [self._events.pop(r.rid, None) for r in fresh]
+            except Exception as e:      # a dead tick loop strands callers —
+                self._recover(e)        # heal and keep serving instead
+                continue
             for ev in events:
                 if ev is not None:
                     ev.set()
@@ -236,8 +302,11 @@ class EngineService:
         ev.wait(timeout=self.timeout)
         with self._lock:
             done = self._done.pop(rid, None)
+            failed = self._failed.pop(rid, None)
         if done is not None:
             return np.asarray(done.generated, np.int32)
+        if failed is not None:          # engine crashed mid-decode: typed,
+            raise failed                # immediate — retry layers fail over
         if self._stop.is_set():
             raise RuntimeError(
                 f"EngineService closed while request {rid} was in flight")

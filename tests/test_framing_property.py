@@ -1,0 +1,129 @@
+"""Seeded property-based round-trip tests for core/framing + fast_mac.
+
+No hypothesis dependency: trials are driven by a fixed-seed generator so
+every run (and every CI failure) is exactly reproducible — each assertion
+message carries the (seed, trial) pair that rebuilds the failing case.
+
+Properties:
+  * build → parse round-trips payloads of every boundary size (0, 1,
+    row-capacity-1, row-capacity, +1) and dtype;
+  * flipping ANY single bit anywhere in the frame — header metadata,
+    reserved lanes, MAC word, payload, padding — must raise FrameError
+    (the header-hardening property: metadata is folded into the MAC);
+  * fast_mac is bit-identical to the scan reference _mac_np for random
+    shapes/seeds, including the empty payload.
+"""
+import numpy as np
+import pytest
+
+from repro.core import framing
+from repro.core.transports import fast_mac
+
+ROW = framing.LANES * 4                 # payload bytes per frame row
+BOUNDARY_SIZES = [0, 1, 2, ROW - 1, ROW, ROW + 1, 3 * ROW - 1, 3 * ROW]
+DTYPES = [np.uint8, np.int32, np.uint32, np.float32, np.float64, np.int64,
+          np.uint16]
+
+MASTER_SEED = 0xC0FFEE
+N_TRIALS = 40
+
+
+def _random_payload(rng: np.random.Generator, nbytes: int, dtype) -> np.ndarray:
+    itemsize = np.dtype(dtype).itemsize
+    n = max(0, nbytes // itemsize)
+    raw = rng.integers(0, 256, size=n * itemsize, dtype=np.uint8)
+    return raw.view(dtype).reshape(-1)
+
+
+def _trial_params(trial: int):
+    rng = np.random.default_rng(MASTER_SEED + trial)
+    if trial < len(BOUNDARY_SIZES) * 2:
+        nbytes = BOUNDARY_SIZES[trial % len(BOUNDARY_SIZES)]
+    else:
+        nbytes = int(rng.integers(0, 4 * ROW))
+    dtype = DTYPES[trial % len(DTYPES)]
+    seed = int(rng.integers(0, 2 ** 32))
+    seq = int(rng.integers(0, 2 ** 31))
+    return rng, nbytes, dtype, seed, seq
+
+
+@pytest.mark.parametrize("trial", range(N_TRIALS))
+def test_roundtrip_then_any_single_bit_flip_fails(trial):
+    rng, nbytes, dtype, seed, seq = _trial_params(trial)
+    arr = _random_payload(rng, nbytes, dtype)
+    ctx = f"(master_seed={MASTER_SEED:#x}, trial={trial}, " \
+          f"nbytes={arr.nbytes}, dtype={np.dtype(dtype).name}, " \
+          f"seed={seed:#x}, seq={seq})"
+
+    frame = framing.build_frame(arr, seed=seed, seq=seq)
+    out = framing.parse_frame(frame, seed=seed, expect_seq=seq)
+    np.testing.assert_array_equal(out, arr, err_msg=f"roundtrip {ctx}")
+    assert out.dtype == arr.dtype, ctx
+    assert frame.shape[0] == framing.frame_rows(arr.nbytes), ctx
+
+    # one random single-BIT flip anywhere in the frame must be detected
+    flat = frame.reshape(-1)
+    for _ in range(8):
+        word = int(rng.integers(0, flat.size))
+        bit = int(rng.integers(0, 32))
+        mutated = frame.copy()
+        mutated.reshape(-1)[word] ^= np.uint32(1 << bit)
+        try:
+            framing.parse_frame(mutated, seed=seed, expect_seq=seq)
+        except framing.FrameError:
+            continue
+        pytest.fail(f"undetected flip word={word} bit={bit} {ctx}")
+
+
+@pytest.mark.parametrize("trial", range(N_TRIALS))
+def test_fast_mac_bit_identical_to_reference(trial):
+    rng = np.random.default_rng(MASTER_SEED ^ trial)
+    rows = int(rng.integers(0, 70))
+    seed = int(rng.integers(0, 2 ** 32))
+    p = rng.integers(0, 2 ** 32, (rows, framing.LANES),
+                     dtype=np.uint64).astype(np.uint32)
+    block = int(rng.integers(1, 80))
+    assert fast_mac(p, seed, block_rows=block) == framing._mac_np(p, seed), \
+        f"(master_seed={MASTER_SEED:#x}^{trial}, rows={rows}, " \
+        f"seed={seed:#x}, block_rows={block})"
+
+
+def test_empty_payload_mac_and_frame():
+    empty = np.zeros((0, framing.LANES), np.uint32)
+    assert fast_mac(empty, 7) == framing._mac_np(empty, 7)
+    arr = np.zeros(0, np.uint8)
+    frame = framing.build_frame(arr, seed=3, seq=0)
+    assert frame.shape[0] == 1                    # header only
+    out = framing.parse_frame(frame, seed=3, expect_seq=0)
+    assert out.size == 0 and out.dtype == np.uint8
+    # even an empty frame rejects header tampering (dtype_code flip)
+    bad = frame.copy()
+    bad[0, 4] ^= 1
+    with pytest.raises(framing.FrameError):
+        framing.parse_frame(bad, seed=3, expect_seq=0)
+
+
+def test_wrong_dtype_header_is_detected_not_misparsed():
+    """The classic silent-corruption case the meta-mix closes: float32 vs
+    int32 differ by one header bit and identical sizes — a flip must be a
+    FrameError, never a silently wrong-typed array."""
+    arr = np.arange(64, dtype=np.float32)
+    frame = framing.build_frame(arr, seed=9, seq=1)
+    flipped = frame.copy()
+    flipped[0, 4] ^= 1                             # dtype_code 0 ↔ 1
+    with pytest.raises(framing.FrameError, match="MAC|header"):
+        framing.parse_frame(flipped, seed=9, expect_seq=1)
+
+
+def test_truncated_and_padded_frames_rejected():
+    arr = np.arange(700, dtype=np.uint8)
+    frame = framing.build_frame(arr, seed=4, seq=2)
+    with pytest.raises(framing.FrameError):        # dropped payload row
+        framing.parse_frame(frame[:-1], seed=4, expect_seq=2)
+    with pytest.raises(framing.FrameError):        # header-only stub
+        framing.parse_frame(frame[:1], seed=4, expect_seq=2)
+    with pytest.raises(framing.FrameError):        # empty
+        framing.parse_frame(frame[:0], seed=4, expect_seq=2)
+    extra = np.concatenate([frame, np.zeros((1, framing.LANES), np.uint32)])
+    with pytest.raises(framing.FrameError):        # appended row
+        framing.parse_frame(extra, seed=4, expect_seq=2)
