@@ -10,11 +10,21 @@ one transport:
               throughput should scale strongly with client count until the
               slot grid saturates
 
+A second sweep measures the **pipelined data plane**: one client keeping
+k ∈ {1, 4, 16} messages in flight per round trip via ``call_batch`` (batch
+envelope + vectorized MAC + native engine batch submission) against the
+lockstep single-in-flight baseline — the JSON's ``batch_results`` /
+``batch_speedup_16_over_lockstep`` section, with the acceptance gate that
+batched mpklink_opt at 16 in flight sustains ≥ 2× lockstep throughput while
+every frame is still MAC-verified on both sides.
+
 Emits JSON: per-cell throughput (req/s), p50/p99 latency (ms), key-sync
 counts (mpklink variants), server/client MAC-verification counts, and a
 scaling summary (16-client vs 1-client throughput per transport/service).
+Methodology notes live in docs/benchmarks.md.
 
-  PYTHONPATH=src python benchmarks/gateway_bench.py [--quick] [--out f.json]
+  PYTHONPATH=src python benchmarks/gateway_bench.py [--quick] [--no-batch]
+      [--out f.json]
 """
 from __future__ import annotations
 
@@ -154,6 +164,122 @@ def sweep(transports: List[str], clients: List[int], reps_wordcount: int,
     return results
 
 
+BATCH_IN_FLIGHT = [1, 4, 16]
+
+
+def run_batch_cell(gw: ServiceGateway, service: str, in_flight: int,
+                   total_msgs: int, make_payload, mode: str) -> Dict:
+    """One client pushing ``total_msgs`` messages at ``in_flight`` per round
+    trip. ``mode='lockstep'`` issues them one call() at a time (the
+    single-in-flight baseline); ``mode='batched'`` sends them as
+    ``call_batch`` envelopes of ``in_flight`` messages."""
+    client = gw.connect(f"bench-batch-{service}-{mode}-{in_flight}")
+    client.open(service)                        # channel setup off the clock
+    stats0 = dict(gw.stats)
+    sync0 = getattr(gw.transport, "sync_count", 0)
+    lat: List[float] = []
+    errors: List[str] = []
+    sent = 0
+    t0 = time.perf_counter()
+    while sent < total_msgs:
+        k = min(in_flight, total_msgs - sent)
+        payloads = [make_payload(sent + j) for j in range(k)]
+        tb = time.perf_counter()
+        try:
+            if mode == "lockstep":
+                for p in payloads:
+                    client.call(service, p)
+            else:
+                client.call_batch(service, payloads)
+        except Exception as e:                  # pragma: no cover
+            errors.append(repr(e))
+            break
+        lat.append(time.perf_counter() - tb)
+        sent += k
+    wall = time.perf_counter() - t0
+    stats1 = dict(gw.stats)
+    sync1 = getattr(gw.transport, "sync_count", 0)
+    server_macs = stats1["macs_verified"] - stats0["macs_verified"]
+    client_macs = client.macs_verified
+    client.close()
+    lats = np.asarray(sorted(lat))
+    return {
+        "service": service,
+        "mode": mode,
+        "in_flight": in_flight,
+        "messages": sent,
+        "errors": errors,
+        "seconds": round(wall, 4),
+        "throughput_rps": round(sent / wall, 2) if wall > 0 else None,
+        "p50_batch_ms": round(float(np.percentile(lats, 50)) * 1e3, 3)
+        if lat else None,
+        "p99_batch_ms": round(float(np.percentile(lats, 99)) * 1e3, 3)
+        if lat else None,
+        "key_syncs": sync1 - sync0,
+        "macs_verified_server": server_macs,
+        "macs_verified_clients": client_macs,
+        "all_macs_verified": (not errors and server_macs == sent
+                              and client_macs == sent),
+        "rejected": stats1["rejected"] - stats0["rejected"],
+    }
+
+
+def sweep_batch(transports: List[str], total_msgs: int, infer_msgs: int,
+                engine_service) -> List[Dict]:
+    """Lockstep baseline + batched cells per transport (and the engine
+    service's native batch path when available)."""
+    results = []
+    for name in transports:
+        gw = ServiceGateway(name, max_keys=256)
+        gw.register_service("wordcount", wordcount_handler)
+        if engine_service is not None:
+            gw.register_service("infer", engine_service.handler,
+                                batch_handler=engine_service.handler_batch)
+        gw.start()
+        try:
+            cells = [("lockstep", 1)] + [("batched", k)
+                                         for k in BATCH_IN_FLIGHT]
+            for mode, k in cells:
+                cell = run_batch_cell(
+                    gw, "wordcount", k, total_msgs,
+                    lambda j: make_text(WORDS, seed=j), mode)
+                cell["transport"] = name
+                results.append(cell)
+                print(f"  {name:<12} wordcount {mode:<8} k={k:<3} "
+                      f"{cell['throughput_rps']:>9} msg/s "
+                      f"syncs={cell['key_syncs']}", flush=True)
+                if engine_service is not None:
+                    from repro.runtime import encode_prompt
+                    cell = run_batch_cell(
+                        gw, "infer", k, infer_msgs,
+                        lambda j: encode_prompt(
+                            [1 + j % 29, 2, 3, 4][:PROMPT_LEN],
+                            max_new=MAX_NEW), mode)
+                    cell["transport"] = name
+                    results.append(cell)
+                    print(f"  {name:<12} infer     {mode:<8} k={k:<3} "
+                          f"{cell['throughput_rps']:>9} msg/s", flush=True)
+        finally:
+            gw.close()
+    return results
+
+
+def batch_speedup(batch_results: List[Dict]) -> Dict[str, Optional[float]]:
+    """Batched 16-in-flight vs lockstep 1-in-flight throughput per
+    (transport, service) — the pipelining payoff."""
+    out = {}
+    by = {(r["transport"], r["service"], r["mode"], r["in_flight"]): r
+          for r in batch_results}
+    for (tr, svc, mode, k), r in sorted(by.items()):
+        if mode != "batched" or k != 16:
+            continue
+        base = by.get((tr, svc, "lockstep", 1))
+        if base and base["throughput_rps"]:
+            out[f"{tr}/{svc}"] = round(
+                r["throughput_rps"] / base["throughput_rps"], 2)
+    return out
+
+
 def scaling_summary(results: List[Dict]) -> Dict[str, Optional[float]]:
     """16-client vs 1-client aggregate throughput per (transport, service)."""
     out = {}
@@ -174,6 +300,8 @@ def main():
                     help="mpklink variants only, clients ≤ 16, fewer reps")
     ap.add_argument("--no-infer", action="store_true",
                     help="skip the ServingEngine-backed service")
+    ap.add_argument("--no-batch", action="store_true",
+                    help="skip the pipelined batch sweep")
     ap.add_argument("--out", default=None, help="write JSON here too")
     args = ap.parse_args()
 
@@ -182,21 +310,36 @@ def main():
     clients = [c for c in CLIENTS if c <= (16 if args.quick else 64)]
     reps_wc = 4 if args.quick else 8
     reps_inf = 2 if args.quick else 6
+    batch_msgs = 32 if args.quick else 64
+    infer_msgs = 8 if args.quick else 16
+    batch_transports = (["mpklink_opt"] if args.quick
+                        else ["mpklink", "mpklink_opt"])
 
     engine_service = None if args.no_infer else build_engine_service()
     try:
         results = sweep(transports, clients, reps_wc, reps_inf, engine_service)
+        batch_results = ([] if args.no_batch else
+                         sweep_batch(batch_transports, batch_msgs,
+                                     infer_msgs, engine_service))
     finally:
         if engine_service is not None:
             engine_service.close()
 
+    speedup = batch_speedup(batch_results)
     report = {
         "meta": {"clients": clients, "transports": transports,
                  "wordcount_words": WORDS, "prompt_len": PROMPT_LEN,
-                 "max_new": MAX_NEW},
+                 "max_new": MAX_NEW, "batch_in_flight": BATCH_IN_FLIGHT,
+                 "batch_msgs": batch_msgs},
         "results": results,
         "scaling_16c_over_1c": scaling_summary(results),
-        "all_macs_verified": all(r["all_macs_verified"] for r in results),
+        "batch_results": batch_results,
+        "batch_speedup_16_over_lockstep": speedup,
+        "batch_gate_mpklink_opt_2x": (
+            None if not batch_results
+            else speedup.get("mpklink_opt/wordcount", 0) >= 2.0),
+        "all_macs_verified": all(r["all_macs_verified"]
+                                 for r in results + batch_results),
     }
     blob = json.dumps(report, indent=2)
     print(blob)

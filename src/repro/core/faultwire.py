@@ -40,6 +40,8 @@ swallowed.
 
 Replay: ``FaultPlan.from_spec(plan.spec())`` reconstructs the identical
 schedule; ``plan.describe()`` is the one-liner chaos tests print on failure.
+The step-by-step replay recipe lives in docs/benchmarks.md; the error types
+each kind must surface as are normative in docs/protocol.md §6.
 """
 from __future__ import annotations
 
@@ -123,20 +125,26 @@ class FaultPlan:
 
     # -- replay -----------------------------------------------------------
     def spec(self) -> Dict[str, object]:
+        """JSON-safe plan parameters; ``from_spec(spec())`` rebuilds the
+        identical schedule (committed with every chaos_bench cell)."""
         return {"seed": self.seed, "n_requests": self.n_requests,
                 "rate": self.rate, "kinds": list(self.kinds),
                 "delay": self.delay}
 
     @classmethod
     def from_spec(cls, spec: Dict[str, object]) -> "FaultPlan":
+        """Reconstruct a plan from :meth:`spec` output — the replay path
+        for a failed CI seed (see docs/benchmarks.md)."""
         return cls(spec["seed"], spec["n_requests"], spec["rate"],
                    tuple(spec["kinds"]), spec["delay"])
 
     def describe(self) -> str:
+        """One-line replay recipe; chaos tests print this on failure."""
         return (f"FaultPlan.from_spec({self.spec()!r})  "
                 f"# {len(self.events)} faults over {self.n_requests} requests")
 
     def schedule(self) -> List[FaultEvent]:
+        """The planned fault events in firing (request-index) order."""
         return [self.events[i] for i in sorted(self.events)]
 
 
@@ -172,6 +180,9 @@ class FaultFabric:
         self._lock = threading.Lock()
 
     def attach(self, gw: ServiceGateway) -> "FaultFabric":
+        """Interpose on ``gw``'s wire handler (live sessions resolve the
+        handler per request, so the fabric takes effect immediately).
+        One fabric drives one gateway; returns self for chaining."""
         if self._inner is not None:
             raise RuntimeError("fabric already attached")
         self.gw = gw
@@ -180,6 +191,7 @@ class FaultFabric:
         return self
 
     def detach(self):
+        """Restore the gateway's original wire handler (idempotent)."""
         if self.gw is not None and self._inner is not None:
             self.gw.transport.handler = self._inner
         self._inner = None
@@ -344,6 +356,9 @@ class FaultyClient:
         return out
 
     def counts(self) -> Dict[str, int]:
+        """Outcome tally so far: ok / fault (injected, typed as required) /
+        recovered (delay faults that completed) / error (anything else —
+        chaos gates require this to stay 0)."""
         c: Dict[str, int] = {"ok": 0, "fault": 0, "recovered": 0, "error": 0}
         for o in self.outcomes:
             c[o.status] += 1

@@ -21,12 +21,20 @@ shape, nbytes, ...) fails verification exactly like a payload flip, and the
 reserved lanes (10, 12..127) must be zero. The payload MAC itself is
 unchanged and stays bit-identical to the guard kernel / fast_mac.
 
+Batch path (the pipelined data plane): :func:`seal_batch` /
+:func:`verify_batch` frame / verify N messages at once, with all N payload
+MACs computed in ONE fused vectorized pass (:func:`mac_batch`) instead of N
+Python-loop calls — same constants, bit-identical to the scalar MAC (and to
+the batched ``kernels/mpk_guard`` device kernel). :func:`split_frames`
+separates concatenated frames back into messages, which is how the gateway's
+batch envelope is carved up server-side.
+
 Works on both numpy (host transports) and jnp (device fabric) arrays.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Tuple
+from typing import List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -84,13 +92,12 @@ def unpack_payload(payload_u32: np.ndarray, meta: dict) -> np.ndarray:
     return raw.view(_DTYPES[meta["dtype_code"]]).reshape(meta["shape"])
 
 
-def build_frame(arr: np.ndarray, *, seed: int, seq: int, mac_impl=None) -> np.ndarray:
-    """array → full frame (header row + payload rows) uint32."""
-    payload, meta = pack_payload(arr)
+def _assemble(payload: np.ndarray, meta: dict, seed: int, seq: int,
+              mac: int) -> np.ndarray:
+    """Header row from (meta, seed, seq, precomputed payload MAC) + payload."""
     shape = list(meta["shape"])[:4] + [0] * (4 - min(4, len(meta["shape"])))
     if len(meta["shape"]) > 4:
         raise FrameError("rank > 4 payloads unsupported by frame header")
-    mac = (mac_impl or _mac_np)(payload, seed)
     header = np.zeros(LANES, np.uint32)
     header[:10] = [MAGIC, seed & 0xFFFFFFFF, seq & 0xFFFFFFFF,
                    meta["nbytes"] & 0xFFFFFFFF, meta["dtype_code"],
@@ -99,13 +106,18 @@ def build_frame(arr: np.ndarray, *, seed: int, seq: int, mac_impl=None) -> np.nd
     return np.concatenate([header[None], payload], axis=0)
 
 
-def parse_frame(frame: np.ndarray, *, seed: int, expect_seq=None, mac_impl=None) -> np.ndarray:
-    """Verify magic, seed, seq, header integrity, MAC; return the payload.
-    Raises FrameError on any mismatch — this is the receive-side guard."""
-    frame = np.asarray(frame)
-    if frame.ndim != 2 or frame.shape[0] < 1 or frame.shape[1] != LANES:
-        raise FrameError("malformed frame — truncated or not lane-aligned")
-    header, payload = frame[0], frame[1:]
+def build_frame(arr: np.ndarray, *, seed: int, seq: int, mac_impl=None) -> np.ndarray:
+    """array → full frame (header row + payload rows) uint32."""
+    payload, meta = pack_payload(arr)
+    mac = (mac_impl or _mac_np)(payload, seed)
+    return _assemble(payload, meta, seed, seq, mac)
+
+
+def _precheck(frame: np.ndarray, seed: int, expect_seq) -> None:
+    """The cheap receive-side rejects (no MAC): magic, seed, sequence,
+    reserved lanes. Run BEFORE paying for the payload Horner pass so
+    garbage/mis-routed frames are turned away after reading header words."""
+    header = frame[0]
     if int(header[0]) != MAGIC:
         raise FrameError("bad magic — not an MPKLink frame")
     if int(header[1]) != (seed & 0xFFFFFFFF):
@@ -114,7 +126,14 @@ def parse_frame(frame: np.ndarray, *, seed: int, expect_seq=None, mac_impl=None)
         raise FrameError(f"sequence mismatch (got {int(header[2])}, want {expect_seq})")
     if int(header[10]) != 0 or np.any(np.asarray(header[12:]) != 0):
         raise FrameError("nonzero reserved header lanes — header tampered")
-    mac = (mac_impl or _mac_np)(payload, seed)
+
+
+def _verify_with_mac(frame: np.ndarray, seed: int, mac: int) -> np.ndarray:
+    """The MAC + metadata half of the receive-side checks, given a
+    precomputed payload MAC. Callers MUST run :func:`_precheck` first (both
+    parse_frame and verify_batch do, before paying for the MAC). Shared by
+    the scalar and batch guards so they cannot diverge."""
+    header, payload = frame[0], frame[1:]
     if (mac ^ _meta_mix(header, seed)) & 0xFFFFFFFF != int(header[11]):
         raise FrameError("MAC mismatch — payload or header tampered/truncated")
     ndim = int(header[5])
@@ -134,6 +153,173 @@ def parse_frame(frame: np.ndarray, *, seed: int, expect_seq=None, mac_impl=None)
     return unpack_payload(payload, meta)
 
 
+def parse_frame(frame: np.ndarray, *, seed: int, expect_seq=None, mac_impl=None) -> np.ndarray:
+    """Verify magic, seed, seq, header integrity, MAC; return the payload.
+    Raises FrameError on any mismatch — this is the receive-side guard.
+    Cheap header checks run first so garbage frames never pay for a MAC."""
+    frame = np.asarray(frame)
+    if frame.ndim != 2 or frame.shape[0] < 1 or frame.shape[1] != LANES:
+        raise FrameError("malformed frame — truncated or not lane-aligned")
+    _precheck(frame, seed, expect_seq)
+    mac = (mac_impl or _mac_np)(frame[1:], seed)
+    return _verify_with_mac(frame, seed, mac)
+
+
 def frame_rows(nbytes: int) -> int:
     """Total frame rows (header + payload) for an nbytes message."""
     return 1 + (nbytes + LANES * 4 - 1) // (LANES * 4)
+
+
+# ---------------------------------------------------------------------------
+# batch path: N frames sealed/verified with ONE fused MAC pass
+# ---------------------------------------------------------------------------
+
+def _mac_batch_np(stack: np.ndarray, seed: int,
+                  block_rows: int = 65536) -> np.ndarray:
+    """Vectorized Horner MACs for a (G, rows, LANES) uint32 stack → (G,)
+    uint32. One fused pass over the row axis, broadcast across the G frames:
+    h = h·P^m + Σ_r row_r·P^(m-1-r) per block, exactly the fast_mac
+    recurrence. uint64 wraparound keeps the low 32 bits exact (2^32 | 2^64),
+    so the result is bit-identical to the scalar :func:`_mac_np`."""
+    from repro.kernels.ref import MAC_PRIME, MAC_INIT, _FOLD_POWERS
+    g, n = stack.shape[0], stack.shape[1]
+    h = np.full((g, LANES), MAC_INIT, np.uint64) + np.uint64(seed & 0xFFFFFFFF)
+    h &= np.uint64(0xFFFFFFFF)
+    with np.errstate(over="ignore"):
+        for s in range(0, n, block_rows):
+            blk = stack[:, s:s + block_rows].astype(np.uint64)
+            m = blk.shape[1]
+            pw = np.full(m, MAC_PRIME, np.uint64)       # [P^(m-1), ..., P, 1]
+            pw[0] = 1
+            pw = np.cumprod(pw)[::-1]
+            p_m = np.uint64((int(pw[0]) * MAC_PRIME) & 0xFFFFFFFFFFFFFFFF)
+            h = (h * p_m + (blk * pw[None, :, None]).sum(axis=1,
+                                                         dtype=np.uint64)) \
+                & np.uint64(0xFFFFFFFF)
+        return ((h * _FOLD_POWERS.astype(np.uint64)[None, :])
+                .sum(axis=1, dtype=np.uint64) & np.uint64(0xFFFFFFFF)) \
+            .astype(np.uint32)
+
+
+def mac_batch(payloads: Sequence[np.ndarray], seed: int) -> List[int]:
+    """Payload MACs for N (rows, LANES) uint32 matrices, vectorized.
+
+    Frames are grouped by row count and each group is hashed in one fused
+    pass (:func:`_mac_batch_np`) — the host twin of the batched
+    ``kernels/mpk_guard`` kernel. Bit-identical to calling :func:`_mac_np`
+    per payload (tests/test_batching.py asserts it)."""
+    out: List[Optional[int]] = [None] * len(payloads)
+    groups: dict = {}
+    for i, p in enumerate(payloads):
+        groups.setdefault(p.shape[0], []).append(i)
+    for rows, idx in groups.items():
+        if rows == 0:
+            for i in idx:
+                out[i] = _mac_np(payloads[i], seed)
+            continue
+        stack = np.stack([np.asarray(payloads[i]) for i in idx])
+        macs = _mac_batch_np(stack, seed)
+        for j, i in enumerate(idx):
+            out[i] = int(macs[j])
+    return out
+
+
+def seal_batch(arrays: Sequence[np.ndarray], *, seed: int,
+               start_seq: Optional[int] = None,
+               seqs: Optional[Sequence[int]] = None,
+               mac_impl=None) -> List[np.ndarray]:
+    """Frame N messages, MAC'ing all payloads in one vectorized pass.
+
+    Sequence numbers come from ``start_seq`` (consecutive:
+    ``start_seq..start_seq+N-1``) or an explicit ``seqs`` list (the
+    transport ring uses this to seal responses whose request seqs have gaps
+    from failed items). Equivalent to ``[build_frame(a, seed=seed, seq=...)
+    for a in arrays]`` but without N scalar MAC loops. ``mac_impl`` forces a
+    per-frame scalar impl (tests use it to cross-check the batched path)."""
+    if seqs is None:
+        if start_seq is None:
+            raise ValueError("seal_batch needs start_seq or seqs")
+        seqs = [start_seq + i for i in range(len(arrays))]
+    packed = [pack_payload(np.asarray(a)) for a in arrays]
+    if mac_impl is None:
+        macs = mac_batch([p for p, _ in packed], seed)
+    else:
+        macs = [mac_impl(p, seed) for p, _ in packed]
+    return [_assemble(p, meta, seed, seqs[i], macs[i])
+            for i, (p, meta) in enumerate(packed)]
+
+
+def verify_batch(frames: Sequence[np.ndarray], *, seed: int,
+                 seqs: Optional[Sequence[int]] = None,
+                 start_seq: Optional[int] = None, mac_impl=None,
+                 strict: bool = True) -> List[Union[np.ndarray, FrameError]]:
+    """Receive-side guard for N frames with one vectorized MAC pass.
+
+    ``seqs`` (or ``start_seq`` for consecutive numbering; neither skips the
+    sequence check) gives the expected sequence per frame. With
+    ``strict=True`` the first bad frame raises ``FrameError`` (message
+    prefixed with its batch index); with ``strict=False`` the returned list
+    carries the ``FrameError`` *object* in that frame's position so a batch
+    can drain partially — the transport-ring and gateway-batch paths use
+    this to keep per-message typed errors."""
+    frames = [np.asarray(f) for f in frames]
+    if seqs is None and start_seq is not None:
+        seqs = [start_seq + i for i in range(len(frames))]
+    out: List[Union[np.ndarray, FrameError]] = [None] * len(frames)
+    # cheap rejects first (shape/magic/seed/seq/reserved) — only survivors
+    # pay for the fused MAC pass
+    candidates: List[int] = []
+    for i, f in enumerate(frames):
+        try:
+            if f.ndim != 2 or f.shape[0] < 1 or f.shape[1] != LANES:
+                raise FrameError(
+                    "malformed frame — truncated or not lane-aligned")
+            _precheck(f, seed, None if seqs is None else seqs[i])
+            candidates.append(i)
+        except FrameError as e:
+            if strict:
+                raise FrameError(f"frame {i}: {e}") from None
+            out[i] = e
+    if mac_impl is None:
+        macs = mac_batch([frames[i][1:] for i in candidates], seed)
+    else:
+        macs = [mac_impl(frames[i][1:], seed) for i in candidates]
+    for i, mac in zip(candidates, macs):
+        try:
+            out[i] = _verify_with_mac(frames[i], seed, mac)
+        except FrameError as e:
+            if strict:
+                raise FrameError(f"frame {i}: {e}") from None
+            out[i] = e
+    return out
+
+
+def split_frames(flat_u32: np.ndarray, max_frames: int = 4096) -> List[np.ndarray]:
+    """Carve a row-concatenation of frames back into individual frames.
+
+    Each frame declares its own length (header ``nbytes`` → frame_rows), so
+    the walk needs no out-of-band index. The declared length is only trusted
+    for *splitting*; it is re-checked against the MAC during verify. A
+    corrupted length desyncs the walk and raises ``FrameError`` for the
+    whole concatenation — bounded, typed, never out-of-range reads."""
+    flat_u32 = np.asarray(flat_u32)
+    if flat_u32.ndim != 2 or flat_u32.shape[1] != LANES:
+        raise FrameError("malformed frame concatenation — not lane-aligned")
+    frames: List[np.ndarray] = []
+    row = 0
+    while row < flat_u32.shape[0]:
+        if len(frames) >= max_frames:
+            raise FrameError(f"more than {max_frames} frames in one batch")
+        header = flat_u32[row]
+        if int(header[0]) != MAGIC:
+            raise FrameError(
+                f"bad magic at row {row} — frame walk desynced (corrupted "
+                f"length in an earlier header?)")
+        rows = frame_rows(int(header[3]))
+        if row + rows > flat_u32.shape[0]:
+            raise FrameError(
+                f"frame at row {row} declares {rows} rows but only "
+                f"{flat_u32.shape[0] - row} remain")
+        frames.append(flat_u32[row: row + rows])
+        row += rows
+    return frames

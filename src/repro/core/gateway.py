@@ -6,15 +6,33 @@ microservice story needs on top: a single co-located process exposes N
 **named services**, each behind its own **protection domain**, and M
 concurrent clients call them through one transport.
 
-Wire format (one gateway envelope per transport message):
+Wire format (one gateway envelope per transport message; the normative
+spec lives in docs/protocol.md):
 
-  request   [GW_MAGIC, service_id, client_id, 0]  (4×u32 route words)
+  request   [GW_MAGIC, service_id, client_id, token]  (4×u32 route words)
             + MPKLink frame (framing.build_frame) MAC-seeded with the
               (client, service) channel seed and per-channel sequence
   response  [GW_MAGIC, status, service_id, err_len]
             + status 0: response frame under the same channel seed/seq
             + status 1: msgpack {"type", "msg"} error blob (typed re-raise
               client-side — AccessViolation / FrameError / CapacityError)
+
+Batch envelope (the pipelined data plane — N messages, ONE round trip,
+ONE vectorized MAC pass per side):
+
+  request   [GW_BATCH_MAGIC, service_id, client_id, n_items]
+            + n_items frames concatenated row-wise, sequence numbers
+              chan.seq .. chan.seq+n-1 (each frame is self-describing, so
+              the server carves the concatenation with framing.split_frames
+              and verifies all MACs in one framing.verify_batch pass)
+  response  [GW_MAGIC, 2 (batch-ok), service_id, n_items]
+            + per item: [GW_MAGIC, status, byte_len, 0] + body (status 0:
+              response frame, sealed batch-wide in one framing.seal_batch
+              pass; status 1: msgpack error blob, padded to 4B) — so one
+              failed message stays a typed per-item error while the rest of
+              the batch completes.
+            Whole-batch failures (unknown service, no channel, desynced
+            frame walk) use the plain single-message error envelope.
 
 Isolation model (the paper's §V, finally with >2 endpoints):
 
@@ -64,18 +82,26 @@ from repro.core.transports import (HandlerCrash, MPKLinkTransport,
 Handler = Callable[[np.ndarray], np.ndarray]
 
 GW_MAGIC = 0x4D504B47               # "MPKG"
+GW_BATCH_MAGIC = 0x4D504B42         # "MPKB" — batch request envelope
 _ROUTE_BYTES = 16                   # 4 × u32 route words
-_OK, _ERR = 0, 1
+_OK, _ERR, _BOK = 0, 1, 2           # _BOK: batch response follows
 
 
 def _route(a: int, b: int, c: int) -> np.ndarray:
     return np.array([GW_MAGIC, a, b, c], "<u4").view(np.uint8)
 
 
+def _batch_route(sid: int, cid: int, n: int) -> np.ndarray:
+    return np.array([GW_BATCH_MAGIC, sid, cid, n], "<u4").view(np.uint8)
+
+
 def _as_frameable(arr: np.ndarray) -> np.ndarray:
-    """Handlers may return any dtype; frame unsupported ones as raw bytes."""
+    """Handlers may return any dtype/rank; frame unsupported ones as raw
+    bytes. This must never fail: response sealing happens AFTER the
+    channel sequence has advanced, so a sealing error would desync the
+    channel permanently instead of surfacing as a typed per-item error."""
     arr = np.ascontiguousarray(arr)
-    if np.dtype(arr.dtype) not in framing._DTYPE_CODES:
+    if np.dtype(arr.dtype) not in framing._DTYPE_CODES or arr.ndim > 4:
         arr = arr.view(np.uint8).reshape(-1)
     return arr
 
@@ -174,6 +200,10 @@ class _Service:
     server_key: DomainKey
     allow: Optional[Set[str]]       # client-name allow-list; None = any cert
     factory: Optional[Callable[[], Handler]] = None   # restart hook
+    # optional native batch entry point: takes a list of payloads, returns a
+    # same-length list of responses (EngineService.handler_batch feeds the
+    # continuous-batching decode loop through this)
+    batch_handler: Optional[Callable] = None
     health: ServiceHealth = field(default_factory=ServiceHealth)
     # cid → (idempotency token → response payload): a retried request whose
     # original DID execute is answered from here, never re-executed. The
@@ -218,6 +248,10 @@ class ServiceGateway:
         self.registry = KeyRegistry(max_keys=max_keys, seed=0x6A7E)
         self.ca = CertificateAuthority(self.registry)
         self._mac = mac_impl
+        # batch-path MAC: None selects framing's fused vectorized pass
+        # (bit-identical to fast_mac); a custom impl is honored per frame
+        # so batched and single exchanges can never disagree
+        self._batch_mac = None if mac_impl is fast_mac else mac_impl
         self._services: Dict[str, _Service] = {}
         self._by_sid: Dict[int, _Service] = {}
         self._channels: Dict[Tuple[int, int], Channel] = {}
@@ -242,6 +276,7 @@ class ServiceGateway:
     def register_service(self, name: str, handler: Handler,
                          allow: Optional[Set[str]] = None, *,
                          factory: Optional[Callable[[], Handler]] = None,
+                         batch_handler: Optional[Callable] = None,
                          failure_threshold: int = 3,
                          probe_after: int = 8) -> int:
         """Enroll a service with the CA and give it its own protection
@@ -251,7 +286,11 @@ class ServiceGateway:
         replaces the handler with ``factory()``, bumps the domain epoch and
         lets still-certified clients re-key transparently. Without a
         factory the circuit opens instead and requests are shed with
-        :class:`ServiceUnavailable` until a probe succeeds."""
+        :class:`ServiceUnavailable` until a probe succeeds.
+        ``batch_handler`` (list of payloads → same-length list of
+        responses) lets a batch envelope execute as ONE native call —
+        EngineService passes its handler_batch here so a batched prompt
+        submission joins the decode slot grid as a single cohort."""
         with self._glock:
             if name in self._services:
                 raise ValueError(f"service {name!r} already registered")
@@ -260,7 +299,7 @@ class ServiceGateway:
             svc = _Service(next(self._sid_counter), name, handler, dom,
                            self.registry.issue_key(dom, RW),
                            set(allow) if allow is not None else None,
-                           factory=factory,
+                           factory=factory, batch_handler=batch_handler,
                            health=ServiceHealth(failure_threshold,
                                                 probe_after))
             self._services[name] = svc
@@ -363,6 +402,10 @@ class ServiceGateway:
             for s in stats:
                 self.stats[s] += 1
 
+    def _bump_n(self, stat: str, n: int):
+        with self._glock:
+            self.stats[stat] += n
+
     def _service_failure(self, svc: _Service, crashed: bool = False):
         """Record a handler failure; when the breaker trips, self-heal by
         restarting (factory available) or open the circuit and shed."""
@@ -427,6 +470,142 @@ class ServiceGateway:
         chan.server_seq = (fseq + 1) & 0xFFFFFFFF
         return resp
 
+    def _invoke_batch(self, svc: _Service, chan: Channel, parsed) -> list:
+        """Execute a verified batch. ``parsed`` holds payload arrays with
+        FrameError objects in failed positions (verify_batch strict=False);
+        those pass through untouched. Every consumed item advances
+        ``chan.server_seq`` positionally — success or failure — matching
+        the client's batch-wide sequence advance (unlike the single path,
+        where a failed exchange advances neither side). Health/circuit
+        accounting: per item on the loop path, once per batch on the
+        native ``batch_handler`` path."""
+        results = list(parsed)
+        good = [(i, p) for i, p in enumerate(parsed)
+                if not isinstance(p, framing.FrameError)]
+        if svc.batch_handler is not None and good:
+            try:
+                svc.health.admit(svc.name)
+                outs = svc.batch_handler([p for _, p in good])
+                if len(outs) != len(good):
+                    raise TransportError(
+                        f"batch handler returned {len(outs)} responses "
+                        f"for {len(good)} requests")
+                svc.health.success()
+                for (i, _), o in zip(good, outs):
+                    results[i] = _as_frameable(np.asarray(o))
+            except HandlerCrash:
+                self._service_failure(svc, crashed=True)
+                raise
+            except ServiceUnavailable as e:     # circuit shed, not a
+                self._bump("sheds")             # handler failure
+                for i, _ in good:
+                    results[i] = e
+            except Exception as e:
+                self._service_failure(svc)
+                for i, _ in good:
+                    results[i] = e
+        else:
+            for i, p in good:
+                try:
+                    svc.health.admit(svc.name)
+                    resp = _as_frameable(np.asarray(svc.handler(p)))
+                    svc.health.success()
+                    results[i] = resp
+                except HandlerCrash:
+                    self._service_failure(svc, crashed=True)
+                    raise
+                except ServiceUnavailable as e:
+                    self._bump("sheds")
+                    results[i] = e
+                except Exception as e:
+                    self._service_failure(svc)
+                    results[i] = e
+        chan.server_seq = (chan.server_seq + len(parsed)) & 0xFFFFFFFF
+        return results
+
+    def _dispatch_batch(self, raw: np.ndarray) -> np.ndarray:
+        """Serve one batch envelope: route/capability checks once, frame
+        walk (split_frames), ONE vectorized MAC verify, per-item execution,
+        ONE vectorized response seal. Per-item failures come back as typed
+        error blobs in that item's slot; whole-batch failures use the
+        single-message error envelope."""
+        sid = 0
+        try:
+            route = raw[:_ROUTE_BYTES].view("<u4")
+            sid, cid, n_items = int(route[1]), int(route[2]), int(route[3])
+            svc = self._by_sid.get(sid)
+            if svc is None:
+                raise AccessViolation(f"unknown service id {sid}")
+            chan = self._channels.get((cid, sid))
+            if chan is None:
+                raise AccessViolation(
+                    f"client {cid} holds no key for service {svc.name!r}")
+            with chan.slock:
+                self.registry.check(chan.client_key, WRITE)
+                self.registry.check(svc.server_key, READ)
+                body = raw[_ROUTE_BYTES:]
+                if body.nbytes == 0 or body.nbytes % (framing.LANES * 4):
+                    raise framing.FrameError(
+                        "malformed batch — truncated or not lane-aligned")
+                frames = framing.split_frames(
+                    body.view("<u4").reshape(-1, framing.LANES))
+                if len(frames) != n_items:
+                    raise framing.FrameError(
+                        f"batch declares {n_items} frames, found {len(frames)}")
+                start = chan.server_seq
+                seqs = [(start + i) & 0xFFFFFFFF for i in range(len(frames))]
+                parsed = framing.verify_batch(frames, seed=chan.seed,
+                                              seqs=seqs, strict=False,
+                                              mac_impl=self._batch_mac)
+                n_ok = sum(1 for p in parsed
+                           if not isinstance(p, framing.FrameError))
+                self._bump_n("requests", len(frames))
+                self._bump_n("macs_verified", n_ok)
+                self._bump_n("rejected", len(frames) - n_ok)
+                results = self._invoke_batch(svc, chan, parsed)
+                try:
+                    self.registry.check(svc.server_key, WRITE)
+                    self.registry.check(chan.client_key, READ)
+                except AccessViolation as e:
+                    # the epoch moved UNDER this batch (e.g. its own
+                    # failures tripped a self-healing restart). Handlers
+                    # already ran, so the client must NOT transparently
+                    # re-key and resend — tag the rejection so call_batch's
+                    # stale-epoch retry stands down (batches carry no
+                    # idempotency token; a resend would double-execute)
+                    raise AccessViolation(f"post-execution: {e}") from None
+                ok_idx = [i for i, r in enumerate(results)
+                          if not isinstance(r, BaseException)]
+                rframes = framing.seal_batch(
+                    [results[i] for i in ok_idx], seed=chan.seed,
+                    seqs=[seqs[i] for i in ok_idx],
+                    mac_impl=self._batch_mac) if ok_idx else []
+            parts = [_route(_BOK, sid, len(results))]
+            rit = iter(rframes)
+            for r in results:
+                if isinstance(r, BaseException):
+                    blob = _pack_error(r)
+                    pad = (-len(blob)) % 4
+                    parts.append(_route(_ERR, len(blob), 0))
+                    parts.append(np.frombuffer(blob + b"\0" * pad, np.uint8))
+                else:
+                    rf = next(rit).reshape(-1).view(np.uint8)
+                    parts.append(_route(_OK, rf.nbytes, 0))
+                    parts.append(rf)
+            self._bump_n("responses", len(ok_idx))
+            self._bump_n("rejected",
+                         len(results) - len(ok_idx)
+                         - sum(1 for p in parsed
+                               if isinstance(p, framing.FrameError)))
+            return np.concatenate(parts)
+        except Exception as e:
+            self._bump(*(("rejected", "sheds")
+                         if isinstance(e, ServiceUnavailable)
+                         else ("rejected",)))
+            blob = _pack_error(e)
+            return np.concatenate(
+                [_route(_ERR, sid, len(blob)), np.frombuffer(blob, np.uint8)])
+
     def _dispatch(self, req: np.ndarray) -> np.ndarray:
         sid = 0
         try:
@@ -435,6 +614,8 @@ class ServiceGateway:
             if raw.nbytes < _ROUTE_BYTES:
                 raise framing.FrameError("short gateway envelope")
             route = raw[:_ROUTE_BYTES].view("<u4")
+            if int(route[0]) == GW_BATCH_MAGIC:
+                return self._dispatch_batch(raw)
             if int(route[0]) != GW_MAGIC:
                 raise framing.FrameError("not a gateway envelope (bad magic)")
             sid, cid, token = int(route[1]), int(route[2]), int(route[3])
@@ -572,6 +753,96 @@ class GatewayClient:
                 rekeyed = False
                 self.heal(service)      # fresh session + channel, same token
                 time.sleep(self.backoff * attempts)
+
+    def call_batch(self, service: str, payloads,
+                   return_exceptions: bool = False) -> list:
+        """Pipelined batch call: N messages in ONE gateway envelope / ONE
+        transport round trip, sealed client-side and verified server-side
+        in one vectorized MAC pass each. Returns responses in payload
+        order; a failed message surfaces as its typed exception (in-place
+        with ``return_exceptions``, else the first one is raised after the
+        batch has drained). Batch calls carry no idempotency token and are
+        not auto-retried — a liveness failure (crash/timeout) poisons the
+        session as usual and ``heal()`` recovers; whole-batch security
+        rejections advance neither side's sequence. Like ``call()``, a
+        stale-key-epoch rejection (revocation / self-healing restart)
+        re-keys through the CA transparently and retries once."""
+        payloads = [np.asarray(p) for p in payloads]
+        if not payloads:
+            return []
+        rekeyed = False
+        while True:
+            chan = self.open(service)
+            try:
+                return self._call_batch_once(chan, payloads,
+                                             return_exceptions)
+            except AccessViolation as e:
+                # transparently re-key ONLY for pre-execution rejections:
+                # a "post-execution" tag means the batch already ran under
+                # the old epoch — resending it would double-execute
+                if "stale key epoch" not in str(e) or rekeyed \
+                        or "post-execution" in str(e):
+                    raise
+                rekeyed = True
+                self.reopen(service)
+
+    def _call_batch_once(self, chan: Channel, payloads,
+                         return_exceptions: bool) -> list:
+        with self._lock:
+            frames = framing.seal_batch(payloads, seed=chan.seed,
+                                        start_seq=chan.seq,
+                                        mac_impl=self.gw._batch_mac)
+            env = np.concatenate(
+                [_batch_route(chan.sid, self.cid, len(frames))]
+                + [f.reshape(-1).view(np.uint8) for f in frames])
+            resp = np.ascontiguousarray(np.asarray(self._session.request(env))) \
+                .view(np.uint8).reshape(-1)
+            if resp.nbytes < _ROUTE_BYTES:
+                raise TransportError("malformed gateway response (truncated)")
+            route = resp[:_ROUTE_BYTES].view("<u4")
+            if int(route[0]) != GW_MAGIC:
+                raise TransportError("malformed gateway response (bad magic)")
+            if int(route[1]) == _ERR:       # whole-batch failure: no item
+                _raise_remote(resp[_ROUTE_BYTES:         # consumed a seq
+                                   _ROUTE_BYTES + int(route[3])].tobytes())
+            if int(route[1]) != _BOK or int(route[3]) != len(frames):
+                raise TransportError("malformed gateway batch response")
+            start, ofs = chan.seq, _ROUTE_BYTES
+            results: list = [None] * len(frames)
+            ok_frames, ok_pos = [], []
+            for i in range(len(frames)):
+                if resp.nbytes < ofs + _ROUTE_BYTES:
+                    raise TransportError("truncated gateway batch response")
+                ih = resp[ofs: ofs + _ROUTE_BYTES].view("<u4")
+                if int(ih[0]) != GW_MAGIC:
+                    raise TransportError("desynced gateway batch response")
+                status, nb = int(ih[1]), int(ih[2])
+                body = resp[ofs + _ROUTE_BYTES: ofs + _ROUTE_BYTES + nb]
+                ofs += _ROUTE_BYTES + nb + ((-nb) % 4)
+                if status == _OK:
+                    ok_frames.append(body.view("<u4")
+                                     .reshape(-1, framing.LANES))
+                    ok_pos.append(i)
+                else:
+                    try:
+                        _raise_remote(body.tobytes())
+                    except Exception as e:
+                        results[i] = e
+            if ok_frames:                   # ONE vectorized verify pass
+                verified = framing.verify_batch(
+                    ok_frames, seed=chan.seed,
+                    seqs=[start + i for i in ok_pos], strict=False,
+                    mac_impl=self.gw._batch_mac)
+                for p, v in zip(ok_pos, verified):
+                    results[p] = v
+                    if not isinstance(v, framing.FrameError):
+                        self.macs_verified += 1
+            chan.seq += len(frames)         # every item consumed a sequence
+        if not return_exceptions:
+            for r in results:
+                if isinstance(r, BaseException):
+                    raise r
+        return results
 
     def _call_once(self, chan: Channel, payload: np.ndarray,
                    token: int = 0) -> np.ndarray:

@@ -31,10 +31,27 @@ per-endpoint isolation, finally exercised with more than one client.
 ``transport.request()`` keeps the old single-client API by lazily opening a
 default session.
 
+Pipelined data plane (this file's batching refactor): every session also
+speaks a **ring of message slots** — ``submit()`` stages a request into the
+next free slot and returns a ticket, ``flush()`` publishes all staged slots
+to the service in one step, ``poll(ticket)`` redeems a response, and
+``call_batch(payloads)`` runs the whole submit→flush→poll cycle for N
+messages. The shm/mpklink/mpklink_opt sessions back this with a real
+fixed-capacity slot ring (head/tail under one guarded control point), so a
+client keeps up to ``ring_slots`` requests in flight and the service drains
+them without per-message key-sync round-trips: one PKRU sync covers every
+frame published by a flush (chunk-scaled for paper-faithful mpklink), one
+more covers every response in a drain pass, and the MACs of a drained batch
+are verified/sealed in one vectorized pass (framing.verify_batch/
+seal_batch). Stream transports (pipe/uds/grpc_sim) keep the same API
+through a lockstep fallback so callers never special-case.
+
 Failure model: handler exceptions and capacity overflows are propagated to
 the *calling* client as typed exceptions (never swallowed in the service
 thread), and blocking-wait transports (shm, mpklink) bound their response
-waits with ``timeout`` so no transport can deadlock the process.
+waits with ``timeout`` so no transport can deadlock the process. Ring
+slots carry the same typed errors per ticket: a failed message surfaces on
+ITS poll() while the rest of the batch drains normally.
 
 Adaptation notes (single-core container):
   * the paper polls shared metadata; busy-spin on one core inverts results,
@@ -213,6 +230,54 @@ def _read_fd(fd: int, n: int, timeout: Optional[float] = None) -> bytearray:
 
 
 # ---------------------------------------------------------------------------
+# ring of message slots (the pipelined data plane)
+# ---------------------------------------------------------------------------
+
+# slot lifecycle: FREE → STAGED (submit) → PUBLISHED (flush) → DONE (service
+# wrote response/error; poll frees) — or DROPPED (injected wire drop: the
+# slot never completes and the client's bounded poll() expires)
+_FREE, _STAGED, _PUBLISHED, _DONE, _DROPPED = range(5)
+
+
+class _RingSlot:
+    """One message slot: request/response storage + status + typed error.
+    shm sessions fill ``req``/``resp`` byte buffers; mpklink sessions carry
+    whole MAC'd frames in ``frame``/``resp_frame``."""
+
+    __slots__ = ("state", "ticket", "req", "req_len", "resp", "resp_len",
+                 "frame", "resp_frame", "seq", "error")
+
+    def __init__(self):
+        self.state = _FREE
+        self.ticket = -1
+        self.req = None
+        self.req_len = 0
+        self.resp = None
+        self.resp_len = 0
+        self.frame = None
+        self.resp_frame = None
+        self.seq = 0
+        self.error: Optional[BaseException] = None
+
+
+class _Ring:
+    """Fixed-capacity ring of :class:`_RingSlot`.
+
+    Tickets are monotone ints; ticket → slot is ``ticket % capacity``, so at
+    most ``capacity`` messages are in flight per session. ``head`` is the
+    service's drain cursor (the next ticket it will serve); the client-side
+    tail is the session's ticket counter. Every state transition happens
+    under ``cv`` — the emulation's stand-in for the guarded head/tail
+    control word of the shared region."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self.slots = [_RingSlot() for _ in range(capacity)]
+        self.head = 0                   # service drain cursor (ticket)
+        self.cv = threading.Condition()
+
+
+# ---------------------------------------------------------------------------
 # session / transport base
 # ---------------------------------------------------------------------------
 
@@ -233,6 +298,13 @@ class Session:
         self._closed = False
         self._crashed = False
         self._poisoned = False
+        # pipelined API state: ring transports use a real _Ring; the
+        # lockstep fallback buffers payloads/results per ticket
+        self._tickets = 0
+        self._ring: Optional[_Ring] = None
+        self._outstanding: set = set()      # issued, not yet redeemed
+        self._lazy_pending: Dict[int, np.ndarray] = {}
+        self._lazy_results: Dict[int, tuple] = {}
 
     @property
     def handler(self) -> Handler:
@@ -296,6 +368,13 @@ class Session:
             raise ServiceCrashed(
                 f"session {self.name!r}: service thread is dead — "
                 f"open a new session")
+        self._check_pollable()
+
+    def _check_pollable(self):
+        """Like :meth:`_check_usable` minus the crash check: a crashed
+        service may still hold honestly-completed ring slots, which poll()
+        redeems; the crash surfaces per-ticket for everything that never
+        finished."""
         if self._poisoned:
             raise TransportError(
                 "session poisoned by an earlier timeout (a stale response "
@@ -304,7 +383,116 @@ class Session:
             raise TransportError(f"session {self.name!r} is closed")
 
     def request(self, payload: np.ndarray) -> np.ndarray:
+        """Synchronous single exchange: send ``payload``, block for the
+        response (or its typed error). One in flight per session."""
         raise NotImplementedError
+
+    # -- pipelined API (ring transports override; base = lockstep fallback) --
+    def submit(self, payload: np.ndarray) -> int:
+        """Stage one request; returns a ticket redeemable with
+        :meth:`poll`. The lockstep fallback buffers the payload and runs
+        the exchange lazily inside poll(); ring transports write the
+        message into the next free slot (raising :class:`CapacityError`
+        when all ``ring_slots`` are in flight)."""
+        self._check_usable()
+        t = self._tickets
+        self._tickets += 1
+        self._lazy_pending[t] = np.asarray(payload)
+        return t
+
+    def flush(self):
+        """Publish everything staged by :meth:`submit` to the service.
+        No-op for the lockstep fallback; ring transports flip staged slots
+        to published under ONE control-word update (one key-sync round trip
+        on the mpklink variants, however many messages were staged)."""
+
+    def poll(self, ticket: int, timeout: Optional[float] = None) -> np.ndarray:
+        """Redeem ``ticket``: return its response, or raise its typed
+        error. Ring transports block up to ``timeout`` (transport default
+        when None); this lockstep fallback runs the buffered exchange via
+        ``request()``, which is always bounded by the transport deadline —
+        a tighter per-poll ``timeout`` is not honored here."""
+        if ticket not in self._lazy_results and ticket not in self._lazy_pending:
+            raise TransportError(f"unknown or already-redeemed ticket {ticket}")
+        for t in sorted(self._lazy_pending):        # FIFO up to the ticket
+            if t > ticket:
+                break
+            payload = self._lazy_pending.pop(t)
+            try:
+                self._lazy_results[t] = (True, self.request(payload))
+            except Exception as e:
+                self._lazy_results[t] = (False, e)
+        ok, val = self._lazy_results.pop(ticket)
+        if not ok:
+            raise val
+        return val
+
+    def call_batch(self, payloads, return_exceptions: bool = False):
+        """Pipelined batch call: submit every payload, flush once, poll
+        every ticket. Returns responses in payload order. Per-message
+        failures stay typed: with ``return_exceptions`` the exception
+        object sits in that message's position; otherwise the first error
+        is raised after the whole batch has drained (later messages are
+        still consumed, so the session stays usable when it isn't
+        poisoned/crashed)."""
+        tickets = [self.submit(p) for p in payloads]
+        self.flush()
+        out, first = [], None
+        for t in tickets:
+            try:
+                out.append(self.poll(t))
+            except Exception as e:          # noqa: PERF203 — per-ticket fate
+                if first is None:
+                    first = e
+                out.append(e)
+        if first is not None and not return_exceptions:
+            raise first
+        return out
+
+    # -- shared ring redeem (the wait state machine exists ONCE) -----------
+    def _slot_take(self, slot: _RingSlot):
+        """Extract a completed slot's response payload (called under the
+        ring lock, just before the slot is freed). Ring sessions override."""
+        raise NotImplementedError
+
+    def _ring_redeem(self, ticket: int, timeout: Optional[float]):
+        """Wait (bounded) for ``ticket``'s slot to reach DONE, mark the
+        ticket redeemed and free the slot. Returns ``(error, extracted)``
+        — exactly one is meaningful. Typed outcomes: double-redeeming or a
+        never-issued ticket raises immediately (never a deadline wait on a
+        healthy session), a crash surfaces as ServiceCrashed for anything
+        not already completed, and a deadline expiry poisons the session
+        like a lockstep timeout."""
+        ring = self._ring
+        if ring is None or ticket >= self._tickets:
+            raise TransportError(f"unknown ticket {ticket}")
+        timeout = self.transport.timeout if timeout is None else timeout
+        deadline = time.monotonic() + timeout
+        slot = ring.slots[ticket % ring.capacity]
+        with ring.cv:
+            if ticket not in self._outstanding:
+                raise TransportError(f"ticket {ticket} already redeemed")
+            while True:
+                if slot.ticket == ticket and slot.state == _DONE:
+                    break
+                if self._crashed:
+                    raise ServiceCrashed(
+                        f"session {self.name!r}: service thread died with "
+                        f"ticket {ticket} in flight")
+                if self._closed:
+                    raise TransportError(f"session {self.name!r} is closed")
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    self._poisoned = True
+                    raise ResponseTimeout(
+                        f"ring response timed out after {timeout}s")
+                ring.cv.wait(remaining)
+            self._outstanding.discard(ticket)
+            err, slot.error = slot.error, None
+            extracted = None if err is not None else self._slot_take(slot)
+            slot.state = _FREE
+            ring.cv.notify_all()
+        return err, extracted
 
 
 class Transport:
@@ -312,10 +500,13 @@ class Transport:
     process — the paper's co-located microservice design)."""
 
     name = "?"
+    DEFAULT_RING_SLOTS = 8              # in-flight messages per session ring
 
-    def __init__(self, handler: Handler, timeout: float = 120.0):
+    def __init__(self, handler: Handler, timeout: float = 120.0,
+                 ring_slots: Optional[int] = None):
         self.handler = handler
         self.timeout = timeout          # client-side response deadline
+        self.ring_slots = ring_slots or self.DEFAULT_RING_SLOTS
         self._sessions: List[Session] = []
         self._slock = threading.Lock()
         self._default: Optional[Session] = None
@@ -554,6 +745,14 @@ class UDSTransport(Transport):
 # ---------------------------------------------------------------------------
 
 class ShmSession(Session):
+    """One client's pair of raw shared regions + a ring of message slots.
+
+    Lockstep ``request()`` uses the dedicated one-slot region pair (the
+    paper's baseline); the pipelined ``submit``/``flush``/``poll`` path uses
+    a lazily-created :class:`_Ring` whose slots each hold a capacity-sized
+    req/resp buffer — the service thread drains published slots in ticket
+    order between lockstep exchanges."""
+
     def __init__(self, transport, name):
         super().__init__(transport, name)
         self.capacity = transport.capacity
@@ -561,6 +760,7 @@ class ShmSession(Session):
         self._resp = np.zeros(self.capacity, np.uint8)
         self._req_len = 0
         self._resp_len = 0
+        self._req_pending = False       # lockstep request staged (vs ring wake)
         self._error: Optional[BaseException] = None
         self._req_ready = threading.Event()
         self._resp_ready = threading.Event()
@@ -572,23 +772,123 @@ class ShmSession(Session):
             self._req_ready.clear()
             if self._stop.is_set():
                 return
-            req = self._req[: self._req_len]
-            try:
+            if self._req_pending:
+                self._req_pending = False
+                self._serve_lockstep()
+            self._drain_ring()
+
+    def _serve_lockstep(self):
+        req = self._req[: self._req_len]
+        try:
+            resp = np.ascontiguousarray(self.handler(req)) \
+                .view(np.uint8).reshape(-1)
+            if resp.nbytes > self.capacity:
+                raise CapacityError(
+                    f"shm region ({self.capacity}B) cannot hold "
+                    f"{resp.nbytes}B response")
+            self._error = None
+            self._resp[: resp.nbytes] = resp
+            self._resp_len = resp.nbytes
+        except DropResponse:                   # injected wire drop: the
+            return                             # client wait must expire
+        except Exception as e:                 # incl. CapacityError
+            self._error = e
+            self._resp_len = 0
+        self._resp_ready.set()
+
+    # -- ring (pipelined) path --------------------------------------------
+    def _ring_obj(self) -> _Ring:
+        if self._ring is None:
+            ring = _Ring(self.transport.ring_slots)
+            for s in ring.slots:
+                s.req = np.zeros(self.capacity, np.uint8)
+                s.resp = np.zeros(self.capacity, np.uint8)
+            self._ring = ring
+        return self._ring
+
+    def submit(self, payload: np.ndarray) -> int:
+        self._check_usable()
+        raw = np.ascontiguousarray(np.asarray(payload)) \
+            .view(np.uint8).reshape(-1)
+        if raw.nbytes > self.capacity:
+            raise CapacityError(
+                f"shm region ({self.capacity}B) cannot hold {raw.nbytes}B payload")
+        ring = self._ring_obj()
+        with ring.cv:
+            t = self._tickets
+            slot = ring.slots[t % ring.capacity]
+            if slot.state != _FREE:
+                raise CapacityError(
+                    f"ring full ({ring.capacity} messages in flight) — "
+                    f"poll() before submitting more")
+            self._tickets += 1
+            self._outstanding.add(t)
+            slot.ticket = t
+            slot.req[: raw.nbytes] = raw
+            slot.req_len = raw.nbytes
+            slot.error = None
+            slot.state = _STAGED
+        return t
+
+    def flush(self):
+        ring = self._ring
+        if ring is None:
+            return
+        published = False
+        with ring.cv:
+            for s in ring.slots:
+                if s.state == _STAGED:
+                    s.state = _PUBLISHED
+                    published = True
+        if published:
+            self._req_ready.set()       # wake the service thread
+
+    def _drain_ring(self):
+        ring = self._ring
+        if ring is None:
+            return
+        while True:
+            with ring.cv:
+                slot = ring.slots[ring.head % ring.capacity]
+                if slot.state != _PUBLISHED or slot.ticket != ring.head:
+                    return
+                req = slot.req[: slot.req_len]
+            error = resp = None
+            try:                        # handler outside the ring lock
                 resp = np.ascontiguousarray(self.handler(req)) \
                     .view(np.uint8).reshape(-1)
                 if resp.nbytes > self.capacity:
                     raise CapacityError(
                         f"shm region ({self.capacity}B) cannot hold "
                         f"{resp.nbytes}B response")
-                self._error = None
-                self._resp[: resp.nbytes] = resp
-                self._resp_len = resp.nbytes
-            except DropResponse:                   # injected wire drop: the
-                continue                           # client wait must expire
-            except Exception as e:                 # incl. CapacityError
-                self._error = e
-                self._resp_len = 0
-            self._resp_ready.set()
+            except DropResponse:        # injected wire drop: this slot never
+                with ring.cv:           # completes; its poll() must expire
+                    slot.state = _DROPPED
+                    ring.head += 1
+                continue
+            except Exception as e:
+                error = e
+            with ring.cv:
+                if error is None:
+                    slot.resp[: resp.nbytes] = resp
+                    slot.resp_len = resp.nbytes
+                else:
+                    slot.error = error
+                    slot.resp_len = 0
+                slot.state = _DONE
+                ring.head += 1
+                ring.cv.notify_all()
+
+    def _slot_take(self, slot: _RingSlot):
+        return slot.resp[: slot.resp_len].copy()
+
+    def poll(self, ticket: int, timeout: Optional[float] = None) -> np.ndarray:
+        self._check_pollable()
+        self.flush()                    # poll implies publish
+        err, resp = self._ring_redeem(ticket, timeout)
+        if err is not None:
+            raise err
+        return resp
 
     def _notify_crash(self, exc: ServiceCrashed):
         # wake the blocked waiter immediately with the typed crash — it must
@@ -596,6 +896,9 @@ class ShmSession(Session):
         self._error = exc
         self._resp_len = 0
         self._resp_ready.set()
+        if self._ring is not None:
+            with self._ring.cv:
+                self._ring.cv.notify_all()
 
     def _wake(self):
         # a waiter woken by close() must get an error, never the previous
@@ -603,6 +906,9 @@ class ShmSession(Session):
         self._error = TransportError("session closed while request in flight")
         self._req_ready.set()
         self._resp_ready.set()
+        if self._ring is not None:
+            with self._ring.cv:
+                self._ring.cv.notify_all()
 
     def request(self, payload: np.ndarray) -> np.ndarray:
         self._check_usable()
@@ -612,6 +918,7 @@ class ShmSession(Session):
                 f"shm region ({self.capacity}B) cannot hold {raw.nbytes}B payload")
         self._req[: raw.nbytes] = raw
         self._req_len = raw.nbytes
+        self._req_pending = True
         self._req_ready.set()
         if not self._resp_ready.wait(timeout=self.transport.timeout):
             # the service thread may still deliver later; never let that
@@ -641,8 +948,8 @@ class ShmTransport(Transport):
     DEFAULT_CAPACITY = 512 * 1024      # ≈70k words of ~7 chars — fails at 100k
 
     def __init__(self, handler: Handler, capacity: int = DEFAULT_CAPACITY,
-                 timeout: float = 120.0):
-        super().__init__(handler, timeout=timeout)
+                 timeout: float = 120.0, ring_slots: Optional[int] = None):
+        super().__init__(handler, timeout=timeout, ring_slots=ring_slots)
         self.capacity = capacity
 
     def _make_session(self, name):
@@ -780,6 +1087,11 @@ class MPKLinkSession(Session):
         super().__init__(transport, name)
         self.chunk = transport.chunk
         self._mac = transport._mac
+        # batch-path MAC: None selects framing's fused vectorized pass
+        # (bit-identical to fast_mac); a custom scalar impl is honored
+        # per frame so batched and lockstep exchanges can never disagree
+        self._batch_mac = None if transport._mac is fast_mac \
+            else transport._mac
         self.registry = transport.registry
         # --- control plane: CA handshake (per client) ----------------------
         self._kp, _ = enroll(transport.ca, name)
@@ -810,7 +1122,18 @@ class MPKLinkSession(Session):
         self.sync_count += 1
         self.transport._bump_sync()
         self._chunk_ready.set()
-        self._chunk_ack.wait()
+        # bounded ack wait: a service thread that dies mid-exchange acks at
+        # most once (via _notify_crash), so an unbounded wait here could
+        # strand a multi-sync send/flush forever — surface the typed crash
+        # instead, preserving the 'no transport can deadlock' bound
+        while not self._chunk_ack.wait(timeout=0.5):
+            if self._crashed:
+                raise ServiceCrashed(
+                    f"session {self.name!r}: service thread died during a "
+                    f"key-sync round trip")
+            if self._closed or self._stop.is_set():
+                raise TransportError(
+                    f"session {self.name!r} closed during a key sync")
         self._chunk_ack.clear()
 
     def _serve_loop(self):
@@ -823,6 +1146,7 @@ class MPKLinkSession(Session):
                 return
             final = self._final                    # read before acking
             self._chunk_ack.set()                  # reader loads PKRU word
+            self._drain_ring()                     # published ring slots
             if not final:
                 continue
             # full frame visible → verify + handle + respond
@@ -864,12 +1188,18 @@ class MPKLinkSession(Session):
         self._resp_rows = 0
         self._chunk_ack.set()
         self._resp_ready.set()
+        if self._ring is not None:
+            with self._ring.cv:
+                self._ring.cv.notify_all()
 
     def _wake(self):
         self._final = False
         self._chunk_ready.set()
         self._chunk_ack.set()
         self._resp_ready.set()
+        if self._ring is not None:
+            with self._ring.cv:
+                self._ring.cv.notify_all()
 
     def _teardown(self):
         # give the pkey back (pkey_free) so long-lived transports can cycle
@@ -910,6 +1240,186 @@ class MPKLinkSession(Session):
         self._seq += 1
         return out
 
+    # -- ring (pipelined) path --------------------------------------------
+    def _ring_obj(self) -> _Ring:
+        if self._ring is None:
+            self._ring = _Ring(self.transport.ring_slots)
+        return self._ring
+
+    def _stage_frame(self, frame: np.ndarray) -> int:
+        """Write one sealed frame into the next free slot (STAGED — not yet
+        visible to the service; flush() publishes). The slot remembers the
+        frame's sequence number so the drain verifies exactly what the
+        client committed to."""
+        self._check_usable()
+        ring = self._ring_obj()
+        with ring.cv:
+            t = self._tickets
+            slot = ring.slots[t % ring.capacity]
+            if slot.state != _FREE:
+                raise CapacityError(
+                    f"ring full ({ring.capacity} messages in flight) — "
+                    f"poll() before submitting more")
+            self._tickets += 1
+            self._outstanding.add(t)
+            slot.ticket = t
+            slot.frame = frame
+            slot.seq = self._seq
+            slot.error = None
+            slot.resp_frame = None
+            slot.state = _STAGED
+        self._seq += 1
+        return t
+
+    def submit(self, payload: np.ndarray) -> int:
+        frame = framing.build_frame(np.asarray(payload), seed=self.seed,
+                                    seq=self._seq, mac_impl=self._mac)
+        return self._stage_frame(frame)
+
+    def flush(self):
+        """Publish all staged slots with ONE batched key-sync round trip
+        (chunk-scaled for paper-faithful mpklink: ceil(bytes/chunk) syncs
+        over the published frames — mpklink_opt's huge chunk makes that
+        exactly one). This is the 'batched epoch grant' that lets k frames
+        cross the region for O(1) synchronization instead of O(k)."""
+        ring = self._ring
+        if ring is None or self._crashed:   # a dead thread can't ack syncs
+            return
+        staged_bytes = 0
+        with ring.cv:
+            for s in ring.slots:
+                if s.state == _STAGED:
+                    s.state = _PUBLISHED
+                    staged_bytes += s.frame.nbytes
+        if not staged_bytes:
+            return
+        syncs = max(1, -(-staged_bytes // self.chunk))
+        for _ in range(syncs):
+            self._final = False         # never mistaken for a lockstep frame
+            self._sync_key(self.key_client, WRITE)
+
+    def _drain_ring(self):
+        """Service side: consume published slots in ticket order. The whole
+        drained batch is MAC-verified in one vectorized pass, handlers run
+        per message (typed per-slot errors), and all responses are sealed in
+        one vectorized pass under ONE response-side key sync."""
+        ring = self._ring
+        if ring is None:
+            return
+        while True:
+            batch: List[_RingSlot] = []
+            with ring.cv:
+                while True:
+                    slot = ring.slots[ring.head % ring.capacity]
+                    if slot.state != _PUBLISHED or slot.ticket != ring.head:
+                        break
+                    batch.append(slot)
+                    ring.head += 1
+            if not batch:
+                return
+            self.registry.check(self.key_server, READ)
+            parsed = framing.verify_batch(
+                [s.frame for s in batch], seed=self.seed,
+                seqs=[s.seq for s in batch], strict=False,
+                mac_impl=self._batch_mac)
+            self.registry.check(self.key_server, WRITE)
+            ok_slots, responses = [], []
+            for slot, res in zip(batch, parsed):
+                if isinstance(res, framing.FrameError):
+                    with ring.cv:
+                        slot.error = res
+                        slot.state = _DONE
+                        ring.cv.notify_all()
+                    continue
+                try:                    # handler errors stay per-slot typed;
+                    resp = np.ascontiguousarray(self.handler(res)) \
+                        .view(np.uint8).reshape(-1)
+                except DropResponse:    # injected wire drop: never completes
+                    with ring.cv:
+                        slot.state = _DROPPED
+                    continue
+                except Exception as e:
+                    with ring.cv:
+                        slot.error = e
+                        slot.state = _DONE
+                        ring.cv.notify_all()
+                    continue
+                ok_slots.append(slot)
+                responses.append(resp)
+            if ok_slots:
+                rframes = framing.seal_batch(
+                    responses, seed=self.seed,
+                    seqs=[s.seq for s in ok_slots],
+                    mac_impl=self._batch_mac)
+                self.sync_count += 1    # ONE response-side key sync for the
+                self.transport._bump_sync()      # whole drained batch
+                with ring.cv:
+                    for slot, rf in zip(ok_slots, rframes):
+                        slot.resp_frame = rf
+                        slot.state = _DONE
+                    ring.cv.notify_all()
+
+    def _slot_take(self, slot: _RingSlot):
+        rframe, slot.resp_frame = slot.resp_frame, None
+        return rframe, slot.seq
+
+    def _collect(self, ticket: int, timeout: Optional[float] = None):
+        """Wait for ``ticket``'s slot to complete; return its raw response
+        (frame, seq) — MAC not yet verified; poll()/call_batch() do that,
+        scalar or vectorized. Frees the slot."""
+        err, extracted = self._ring_redeem(ticket, timeout)
+        if err is not None:
+            raise err
+        return extracted
+
+    def poll(self, ticket: int, timeout: Optional[float] = None) -> np.ndarray:
+        self._check_pollable()
+        self.flush()                    # poll implies publish
+        rframe, seq = self._collect(ticket, timeout)
+        self.registry.check(self.key_client, READ)
+        return framing.parse_frame(rframe, seed=self.seed, expect_seq=seq,
+                                   mac_impl=self._mac)
+
+    def call_batch(self, payloads, return_exceptions: bool = False):
+        """Ring-pipelined batch: frames are sealed in one vectorized MAC
+        pass, staged into the ring, published with one flush (one key sync),
+        and the responses are verified in one vectorized pass. Batches
+        larger than the ring run in ring-sized windows (one sync each)."""
+        self._check_usable()
+        cap = self._ring_obj().capacity
+        out: List = []
+        first: Optional[BaseException] = None
+        for start in range(0, len(payloads), cap):
+            window = [np.asarray(p) for p in payloads[start:start + cap]]
+            frames = framing.seal_batch(window, seed=self.seed,
+                                        start_seq=self._seq,
+                                        mac_impl=self._batch_mac)
+            tickets = [self._stage_frame(f) for f in frames]
+            self.flush()
+            collected: List = []
+            for t in tickets:
+                try:
+                    collected.append(self._collect(t))
+                except Exception as e:  # noqa: PERF203 — per-ticket fate
+                    collected.append(e)
+            ok = [(i, fs) for i, fs in enumerate(collected)
+                  if not isinstance(fs, BaseException)]
+            if ok:
+                self.registry.check(self.key_client, READ)
+                verified = framing.verify_batch(
+                    [f for _, (f, _) in ok], seed=self.seed,
+                    seqs=[q for _, (_, q) in ok], strict=False,
+                    mac_impl=self._batch_mac)
+                for (i, _), v in zip(ok, verified):
+                    collected[i] = v
+            for item in collected:
+                if isinstance(item, BaseException) and first is None:
+                    first = item
+                out.append(item)
+        if first is not None and not return_exceptions:
+            raise first
+        return out
+
 
 class MPKLinkTransport(Transport):
     """Shared region + MPK emulation (paper-faithful).
@@ -946,8 +1456,9 @@ class MPKLinkTransport(Transport):
                  ca: Optional[CertificateAuthority] = None,
                  max_keys: Optional[int] = None,
                  server_name: str = "svc-server",
-                 timeout: float = 120.0):
-        super().__init__(handler, timeout=timeout)
+                 timeout: float = 120.0,
+                 ring_slots: Optional[int] = None):
+        super().__init__(handler, timeout=timeout, ring_slots=ring_slots)
         self.chunk = chunk or self.CHUNK
         self._mac = mac_impl
         self.server_name = server_name

@@ -20,6 +20,13 @@ measures exactly this delta — the paper's Table-X "security for free" claim).
 
 Grid is 1-D over row tiles, sequential; the MAC state is VMEM scratch.
 Validated in interpret mode against ref.mac_ref / ref.guard_copy_ref.
+
+Batch variant (the pipelined data plane): :func:`mac_batch_pallas` MACs a
+whole (N, rows, 128) stack of frames in one launch — grid (N, row-tiles),
+one VMEM Horner state per frame, N MAC words out. :func:`mac_batch_jnp` is
+the shape-polymorphic jnp twin. Both are bit-identical to
+``core.framing.mac_batch`` (the host path the transports use) and to the
+scalar ``ref.mac_ref`` — tests/test_batching.py asserts all four agree.
 """
 from __future__ import annotations
 
@@ -107,3 +114,74 @@ def guard_copy_pallas(payload_u32, tag, expected_mac, *, rows_per_tile=256,
         interpret=interpret,
     )(tag.reshape(1).astype(jnp.uint32), expected_mac.reshape(1).astype(jnp.uint32),
       jnp.asarray(FOLD_POWERS), payload_u32)
+
+
+# ---------------------------------------------------------------------------
+# batched MAC: N frames in one launch (the vectorized data-plane pass)
+# ---------------------------------------------------------------------------
+
+def _batch_mac_kernel(tag_ref, powers_ref, in_ref, mac_ref, h,
+                      *, rows_per_tile):
+    j = pl.program_id(1)
+    nt = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        h[...] = (jnp.full((1, LANES), MAC_INIT, jnp.uint32)
+                  + tag_ref[0].astype(jnp.uint32))
+
+    tile = in_ref[0]                                    # (rows, 128) uint32
+    acc = h[0, :]
+    for r in range(rows_per_tile):                      # static unroll
+        acc = acc * MAC_PRIME + tile[r, :]
+    h[0, :] = acc
+
+    @pl.when(j == nt - 1)
+    def _final():
+        mac_ref[0] = jnp.sum(h[0, :] * powers_ref[...], dtype=jnp.uint32)
+
+
+def mac_batch_pallas(stack_u32, tag, *, rows_per_tile=256, interpret=True):
+    """(N, rows, 128) uint32 stack → (N,) uint32 MACs, one kernel launch.
+
+    Grid is (frame, row-tile); the row-tile axis is innermost so each
+    frame's Horner state lives in VMEM scratch across its tiles exactly like
+    the scalar kernel — the batch axis just replays that schedule N times
+    without N dispatches. ``rows`` must divide by ``rows_per_tile`` (snapped
+    down here, never padded: padding rows would change the Horner MAC)."""
+    n, rows, lanes = stack_u32.shape
+    assert lanes == LANES and stack_u32.dtype == jnp.uint32
+    rt = min(rows_per_tile, max(1, rows))
+    while rows % rt:
+        rt -= 1
+    grid = (n, rows // rt)
+    kernel = functools.partial(_batch_mac_kernel, rows_per_tile=rt)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (0,)),          # tag
+            pl.BlockSpec((LANES,), lambda i, j: (0,)),      # fold powers
+            pl.BlockSpec((1, rt, LANES), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint32),
+        scratch_shapes=[pltpu.VMEM((1, LANES), jnp.uint32)],
+        interpret=interpret,
+    )(tag.reshape(1).astype(jnp.uint32), jnp.asarray(FOLD_POWERS),
+      stack_u32)
+
+
+def mac_batch_jnp(stack_u32, tag):
+    """jnp twin of :func:`mac_batch_pallas`: (N, rows, 128) → (N,) uint32.
+    One lax.scan over the row axis, vectorized across frames."""
+    assert stack_u32.dtype == jnp.uint32 and stack_u32.shape[-1] == LANES
+
+    def row_step(h, row):                               # h, row: (N, 128)
+        return h * jnp.uint32(MAC_PRIME) + row, None
+
+    n = stack_u32.shape[0]
+    h0 = jnp.full((n, LANES), MAC_INIT, jnp.uint32) + tag.astype(jnp.uint32)
+    h, _ = jax.lax.scan(row_step, h0, stack_u32.transpose(1, 0, 2))
+    return jnp.sum(h * jnp.asarray(FOLD_POWERS)[None, :], axis=1,
+                   dtype=jnp.uint32)

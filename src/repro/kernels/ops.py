@@ -93,3 +93,22 @@ def guard_copy(payload_u32, tag, expected_mac, *, rows_per_tile=256,
         rt -= 1
     return guard_copy_pallas(payload_u32, tag, expected_mac,
                              rows_per_tile=rt, interpret=interpret)
+
+
+def guard_mac_batch(stack_u32, tag, *, rows_per_tile=256, impl="pallas",
+                    interpret=True):
+    """(N, rows, 128) uint32 stack of frame payloads → (N,) uint32 MACs.
+
+    The device side of the batched data plane: N frames MAC'd in one fused
+    launch instead of N scalar kernel calls. ``impl="jnp"`` is the
+    shape-polymorphic twin (what the dry-run lowers); both are bit-identical
+    to the host path ``core.framing.mac_batch``. Zero-row frames (empty
+    payloads) fall through to the jnp twin — a zero-size grid would skip the
+    kernel epilogue entirely."""
+    from repro.kernels.mpk_guard import mac_batch_jnp, mac_batch_pallas
+    if impl == "jnp" or stack_u32.shape[1] == 0:
+        return mac_batch_jnp(stack_u32, tag)
+    if impl == "pallas":
+        return mac_batch_pallas(stack_u32, tag, rows_per_tile=rows_per_tile,
+                                interpret=interpret)
+    raise ValueError(f"unknown guard_mac_batch impl {impl!r}")

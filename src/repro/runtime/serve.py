@@ -283,23 +283,36 @@ class EngineService:
                 self._work.clear()
 
     # -- service handler (called from N transport/gateway threads) ----------
-    def handler(self, req: np.ndarray) -> np.ndarray:
+    @staticmethod
+    def _parse_req(req: np.ndarray):
+        """Wire payload int32 ``[max_new, tok0, ...]`` → (max_new, prompt)."""
         arr = np.asarray(req)
         if arr.dtype != np.int32:
             arr = np.frombuffer(np.ascontiguousarray(arr).tobytes(), np.int32)
         arr = arr.reshape(-1)
         if arr.size < 2:
             raise ValueError("inference request needs [max_new, tok0, ...]")
-        max_new, prompt = int(arr[0]), [int(t) for t in arr[1:]]
-        if self._stop.is_set():
-            raise RuntimeError("EngineService is closed")
-        ev = threading.Event()
-        with self._lock:
-            rid = next(self._rid)
-            self._events[rid] = ev
-            self.engine.submit(Request(rid=rid, prompt=prompt, max_new=max_new))
-        self._work.set()
-        ev.wait(timeout=self.timeout)
+        return int(arr[0]), [int(t) for t in arr[1:]]
+
+    def _cancel(self, rid: int):
+        """Forget an in-flight request: already finished → drop its result;
+        still queued → remove outright; already decoding in a slot → mark
+        abandoned so its result is dropped at retirement instead of leaking
+        into the done table."""
+        self._events.pop(rid, None)
+        if self._done.pop(rid, None) is not None \
+                or self._failed.pop(rid, None) is not None:
+            return                      # retired already — nothing to abandon
+        before = len(self.engine.queue)
+        self.engine.queue = [r for r in self.engine.queue if r.rid != rid]
+        if len(self.engine.queue) == before:
+            self._abandoned.add(rid)
+
+    def _await(self, rid: int, ev: threading.Event,
+               deadline: float) -> np.ndarray:
+        """Block until ``rid`` retires (bounded by ``deadline``); return its
+        generated tokens or raise its typed failure."""
+        ev.wait(timeout=max(0.0, deadline - time.monotonic()))
         with self._lock:
             done = self._done.pop(rid, None)
             failed = self._failed.pop(rid, None)
@@ -311,15 +324,59 @@ class EngineService:
             raise RuntimeError(
                 f"EngineService closed while request {rid} was in flight")
         with self._lock:
-            self._events.pop(rid, None)
-            # still queued → cancel outright; already in a slot → mark
-            # abandoned so the result is dropped at retirement
-            before = len(self.engine.queue)
-            self.engine.queue = [r for r in self.engine.queue
-                                 if r.rid != rid]
-            if len(self.engine.queue) == before:
-                self._abandoned.add(rid)
+            self._cancel(rid)
         raise TimeoutError(f"inference request {rid} timed out "
                            f"after {self.timeout}s")
+
+    def handler(self, req: np.ndarray) -> np.ndarray:
+        """One prompt in, one int32 token array out (the gateway/transport
+        service handler). Blocks until the request retires from the shared
+        decode batch or the service deadline expires."""
+        max_new, prompt = self._parse_req(req)
+        if self._stop.is_set():
+            raise RuntimeError("EngineService is closed")
+        ev = threading.Event()
+        with self._lock:
+            rid = next(self._rid)
+            self._events[rid] = ev
+            self.engine.submit(Request(rid=rid, prompt=prompt, max_new=max_new))
+        self._work.set()
+        return self._await(rid, ev, time.monotonic() + self.timeout)
+
+    def handler_batch(self, reqs) -> List[np.ndarray]:
+        """Batched prompt submission (the gateway's ``batch_handler``).
+
+        All N prompts enter the engine queue under ONE lock acquisition and
+        one wake signal, so they join the decode slot grid as a cohort and
+        share every decode step from the first tick — continuous batching
+        absorbs the whole batch instead of trickling it in per call.
+        Returns the N generated-token arrays in request order; if any
+        request fails (engine crash mid-decode, timeout) its typed error is
+        raised and the rest of the cohort is cancelled — the gateway turns
+        that into per-item typed errors for the whole batch."""
+        parsed = [self._parse_req(r) for r in reqs]
+        if self._stop.is_set():
+            raise RuntimeError("EngineService is closed")
+        waits = []
+        with self._lock:
+            for max_new, prompt in parsed:
+                rid = next(self._rid)
+                ev = threading.Event()
+                self._events[rid] = ev
+                self.engine.submit(
+                    Request(rid=rid, prompt=prompt, max_new=max_new))
+                waits.append((rid, ev))
+        self._work.set()
+        deadline = time.monotonic() + self.timeout
+        outs: List[np.ndarray] = []
+        for k, (rid, ev) in enumerate(waits):
+            try:
+                outs.append(self._await(rid, ev, deadline))
+            except BaseException:
+                with self._lock:        # don't strand the rest of the cohort
+                    for later_rid, _ in waits[k + 1:]:
+                        self._cancel(later_rid)
+                raise
+        return outs
 
     __call__ = handler

@@ -1,0 +1,520 @@
+"""Pipelined data plane: ring slots, batched calls, vectorized MAC.
+
+Covers the PR-3 surface end to end: ring wrap-around and partial drains at
+the transport layer, scalar/batch MAC equivalence in framing and kernels,
+the gateway batch envelope (per-item typed errors, sequence discipline),
+and fault injection mid-batch staying typed and bounded.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import TRANSPORTS, ServiceGateway, framing
+from repro.core.faultwire import FaultFabric, FaultPlan
+from repro.core.gateway import (GW_MAGIC, _BOK, _OK, _ROUTE_BYTES,
+                                _batch_route)
+from repro.core.transports import (CapacityError, HandlerCrash,
+                                   MPKLinkOptTransport, ResponseTimeout,
+                                   ServiceCrashed, ShmTransport,
+                                   TransportError)
+from repro.core.wordcount import make_text, parse_count, wordcount_handler
+
+TIME_BUDGET = 10.0                  # bounded-failure wall-clock ceiling
+
+
+# ---------------------------------------------------------------------------
+# framing + kernels: batched MAC is bit-identical to the scalar path
+# ---------------------------------------------------------------------------
+
+def _arrays():
+    rng = np.random.default_rng(7)
+    out = [rng.integers(0, 256, size=n, dtype=np.int64).astype(np.uint8)
+           for n in (1, 511, 512, 513, 4096, 1)]
+    out.append(np.arange(12, dtype=np.int32).reshape(3, 4))
+    out.append(np.zeros(0, np.uint8))           # empty payload frame
+    return out
+
+
+def test_mac_batch_matches_scalar():
+    seed = 0xBEEF1234
+    payloads = [framing.pack_payload(a)[0] for a in _arrays()]
+    batched = framing.mac_batch(payloads, seed)
+    scalar = [framing._mac_np(p, seed) for p in payloads]
+    assert batched == scalar
+
+
+def test_seal_batch_matches_build_frame():
+    seed, start = 0x5EED, 41
+    arrays = _arrays()
+    batched = framing.seal_batch(arrays, seed=seed, start_seq=start)
+    scalar = [framing.build_frame(a, seed=seed, seq=start + i)
+              for i, a in enumerate(arrays)]
+    for b, s in zip(batched, scalar):
+        np.testing.assert_array_equal(b, s)
+    # explicit (gappy) sequence numbers — the response-seal path
+    gappy = framing.seal_batch(arrays[:3], seed=seed, seqs=[3, 9, 12])
+    for f, q in zip(gappy, (3, 9, 12)):
+        assert int(f[0, 2]) == q
+
+
+def test_verify_batch_roundtrip_and_partial_failure():
+    seed = 0xA11CE
+    arrays = _arrays()
+    frames = [f.copy() for f in
+              framing.seal_batch(arrays, seed=seed, start_seq=0)]
+    outs = framing.verify_batch(frames, seed=seed, start_seq=0)
+    for o, a in zip(outs, arrays):
+        np.testing.assert_array_equal(
+            o.reshape(-1).view(np.uint8), a.reshape(-1).view(np.uint8))
+    # corrupt one frame: strict raises with the batch index, non-strict
+    # returns the FrameError in place and every other frame still verifies
+    frames[2][1, 5] ^= np.uint32(1 << 9)
+    with pytest.raises(framing.FrameError, match="frame 2"):
+        framing.verify_batch(frames, seed=seed, start_seq=0)
+    res = framing.verify_batch(frames, seed=seed, start_seq=0, strict=False)
+    assert isinstance(res[2], framing.FrameError)
+    assert sum(isinstance(r, framing.FrameError) for r in res) == 1
+
+
+def test_verify_batch_scalar_mac_impl_cross_check():
+    """mac_impl forces the per-frame scalar MAC — results must agree with
+    the default vectorized pass."""
+    seed = 77
+    frames = framing.seal_batch(_arrays(), seed=seed, start_seq=5,
+                                mac_impl=framing._mac_np)
+    a = framing.verify_batch(frames, seed=seed, start_seq=5)
+    b = framing.verify_batch(frames, seed=seed, start_seq=5,
+                             mac_impl=framing._mac_np)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_split_frames_roundtrip_and_desync():
+    seed = 3
+    frames = framing.seal_batch(_arrays(), seed=seed, start_seq=0)
+    flat = np.concatenate(frames, axis=0)
+    parts = framing.split_frames(flat)
+    assert len(parts) == len(frames)
+    for p, f in zip(parts, frames):
+        np.testing.assert_array_equal(p, f)
+    # corrupting a header length desyncs the walk → typed FrameError
+    bad = flat.copy()
+    bad[0, 3] = 0xFFFF                  # first frame lies about its size
+    with pytest.raises(framing.FrameError):
+        framing.split_frames(bad)
+
+
+def test_kernel_mac_batch_agrees_with_host():
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    from repro.kernels.ops import guard_mac_batch
+    from repro.kernels.ref import mac_ref
+
+    stack = np.asarray(jax.random.bits(jax.random.PRNGKey(2), (4, 8, 128),
+                                       dtype=jnp.uint32))
+    tag = 0x77
+    host = framing.mac_batch(list(stack), tag)
+    pallas = guard_mac_batch(jnp.asarray(stack), jnp.uint32(tag),
+                             rows_per_tile=4)
+    jnp_twin = guard_mac_batch(jnp.asarray(stack), jnp.uint32(tag),
+                               impl="jnp")
+    scalar = [int(mac_ref(jnp.asarray(s), jnp.uint32(tag))) for s in stack]
+    assert host == [int(x) for x in pallas] == [int(x) for x in jnp_twin] \
+        == scalar
+
+
+# ---------------------------------------------------------------------------
+# transport ring: wrap-around, partial drain, sync batching
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(TRANSPORTS))
+def test_call_batch_roundtrip_every_transport(name):
+    tr = TRANSPORTS[name](wordcount_handler)
+    tr.start()
+    s = tr.connect("batcher")
+    try:
+        ns = [1, 40, 400, 7]
+        outs = s.call_batch([make_text(n, seed=n) for n in ns])
+        assert [parse_count(np.asarray(o)) for o in outs] == ns
+    finally:
+        tr.close()
+
+
+@pytest.mark.parametrize("cls", [ShmTransport, MPKLinkOptTransport])
+def test_ring_wraparound(cls):
+    """More messages than ring slots: tickets wrap the slot array and every
+    response still lands on its own ticket."""
+    tr = cls(wordcount_handler, ring_slots=4)
+    s = tr.connect("wrap")
+    try:
+        for base in range(0, 12, 3):            # 12 messages through 4 slots
+            tickets = [s.submit(make_text(base + i + 1, seed=i))
+                       for i in range(3)]
+            s.flush()
+            got = [parse_count(np.asarray(s.poll(t))) for t in tickets]
+            assert got == [base + 1, base + 2, base + 3]
+        assert s._tickets == 12
+    finally:
+        tr.close()
+
+
+def test_ring_full_is_typed_capacity_error():
+    tr = ShmTransport(wordcount_handler, ring_slots=2)
+    s = tr.connect("full")
+    try:
+        t0 = s.submit(make_text(1, seed=0))
+        t1 = s.submit(make_text(2, seed=0))
+        with pytest.raises(CapacityError, match="ring full"):
+            s.submit(make_text(3, seed=0))
+        s.flush()
+        assert parse_count(np.asarray(s.poll(t0))) == 1
+        assert parse_count(np.asarray(s.poll(t1))) == 2
+        # slot freed — submitting works again
+        t2 = s.submit(make_text(3, seed=0))
+        assert parse_count(np.asarray(s.poll(t2))) == 3
+        # re-polling a redeemed ticket whose SLOT was since reused must
+        # fail typed immediately — never a deadline wait that poisons a
+        # healthy session
+        with pytest.raises(TransportError, match="already redeemed"):
+            s.poll(t0)
+        t3 = s.submit(make_text(4, seed=0))     # session still healthy
+        assert parse_count(np.asarray(s.poll(t3))) == 4
+    finally:
+        tr.close()
+
+
+def test_partial_batch_drain():
+    """The service drains only published slots: staged-but-unflushed
+    messages wait, and polling one ticket doesn't disturb the others."""
+    tr = MPKLinkOptTransport(wordcount_handler, ring_slots=8)
+    s = tr.connect("partial")
+    try:
+        first = [s.submit(make_text(n, seed=n)) for n in (5, 6)]
+        s.flush()
+        assert parse_count(np.asarray(s.poll(first[0]))) == 5
+        staged = s.submit(make_text(7, seed=7))     # staged, not flushed
+        assert parse_count(np.asarray(s.poll(first[1]))) == 6
+        assert parse_count(np.asarray(s.poll(staged))) == 7  # poll flushes
+        with pytest.raises(TransportError, match="already redeemed"):
+            s.poll(staged)
+    finally:
+        tr.close()
+
+
+def test_ring_key_syncs_are_batched():
+    """16 messages: lockstep pays 2 syncs each; one call_batch pays ~2
+    total — the 'drains them without per-message key-sync round-trips'
+    claim, measured."""
+    tr = MPKLinkOptTransport(wordcount_handler, ring_slots=16)
+    lock = tr.connect("lockstep")
+    base = tr.sync_count
+    for i in range(16):
+        lock.request(make_text(i + 1, seed=i))
+    lockstep_syncs = tr.sync_count - base
+
+    batch = tr.connect("batched")
+    base = tr.sync_count
+    outs = batch.call_batch([make_text(i + 1, seed=i) for i in range(16)])
+    batch_syncs = tr.sync_count - base
+    tr.close()
+    assert [parse_count(np.asarray(o)) for o in outs] == list(range(1, 17))
+    assert lockstep_syncs >= 32
+    assert batch_syncs <= 2
+
+
+def test_batched_mac_equals_scalar_on_the_wire():
+    """A ring batch (vectorized MAC) and a lockstep exchange (scalar MAC)
+    interleave on one session — both sides stay sequence- and
+    MAC-consistent, so the two paths are provably the same protocol."""
+    tr = MPKLinkOptTransport(wordcount_handler)
+    s = tr.connect("mixed")
+    try:
+        assert parse_count(np.asarray(s.request(make_text(3, seed=0)))) == 3
+        outs = s.call_batch([make_text(n, seed=n) for n in (4, 5)])
+        assert [parse_count(np.asarray(o)) for o in outs] == [4, 5]
+        assert parse_count(np.asarray(s.request(make_text(6, seed=0)))) == 6
+        assert s._seq == 4
+    finally:
+        tr.close()
+
+
+# ---------------------------------------------------------------------------
+# faults mid-batch: typed and bounded
+# ---------------------------------------------------------------------------
+
+def test_ring_corrupt_mac_mid_batch_stays_typed():
+    """A tampered frame staged into the ring fails ITS poll with FrameError;
+    its neighbours drain normally."""
+    tr = MPKLinkOptTransport(wordcount_handler, ring_slots=8)
+    s = tr.connect("tamper")
+    try:
+        good0 = s.submit(make_text(10, seed=0))
+        frame = framing.build_frame(make_text(11, seed=1), seed=s.seed,
+                                    seq=s._seq, mac_impl=tr._mac).copy()
+        frame[0, 11] ^= np.uint32(1)            # flip one MAC bit
+        bad = s._stage_frame(frame)
+        good1 = s.submit(make_text(12, seed=2))
+        s.flush()
+        assert parse_count(np.asarray(s.poll(good0))) == 10
+        with pytest.raises(framing.FrameError):
+            s.poll(bad)
+        assert parse_count(np.asarray(s.poll(good1))) == 12
+    finally:
+        tr.close()
+
+
+@pytest.mark.parametrize("cls", [ShmTransport, MPKLinkOptTransport])
+def test_ring_crash_handler_mid_batch_typed_and_bounded(cls):
+    """A handler that kills the service thread mid-drain: every poll
+    resolves typed well inside the deadline. shm publishes responses per
+    slot, so work completed before the crash is still delivered; mpklink
+    seals a drain pass's responses under ONE key sync, so a crash loses the
+    whole pass — in both cases never an untyped error or a deadline stall."""
+    calls = []
+
+    def crashy(req):
+        calls.append(1)
+        if len(calls) == 2:
+            raise HandlerCrash("boom mid-batch")
+        return wordcount_handler(req)
+
+    tr = cls(crashy, ring_slots=8, timeout=TIME_BUDGET * 3)
+    s = tr.connect("crash")
+    t0 = time.monotonic()
+    try:
+        tickets = [s.submit(make_text(n, seed=n)) for n in (5, 6, 7)]
+        s.flush()
+        if cls is ShmTransport:         # per-slot publication: first lands
+            assert parse_count(np.asarray(s.poll(tickets[0]))) == 5
+        else:                           # batch-sealed responses: pass lost
+            with pytest.raises(ServiceCrashed):
+                s.poll(tickets[0])
+        with pytest.raises(ServiceCrashed):
+            s.poll(tickets[1])
+        with pytest.raises(ServiceCrashed):
+            s.poll(tickets[2])
+    finally:
+        tr.close()
+    assert time.monotonic() - t0 < TIME_BUDGET
+
+
+def test_ring_drop_response_expires_only_its_ticket():
+    """An injected wire drop mid-batch: the dropped ticket's bounded poll
+    expires (ResponseTimeout → session poisoned), neighbours that were
+    polled first completed normally."""
+    from repro.core.transports import DropResponse
+
+    def droppy(req):
+        n = parse_count(wordcount_handler(req))
+        if n == 6:
+            raise DropResponse("dropped")
+        return wordcount_handler(req)
+
+    tr = MPKLinkOptTransport(droppy, ring_slots=8, timeout=0.4)
+    s = tr.connect("drop")
+    t0 = time.monotonic()
+    try:
+        tickets = [s.submit(make_text(n, seed=n)) for n in (5, 6, 7)]
+        s.flush()
+        assert parse_count(np.asarray(s.poll(tickets[0]))) == 5
+        assert parse_count(np.asarray(s.poll(tickets[2]))) == 7
+        with pytest.raises(ResponseTimeout):
+            s.poll(tickets[1])
+        with pytest.raises(TransportError, match="poisoned"):
+            s.poll(tickets[2])                  # poisoned session fails loudly
+    finally:
+        tr.close()
+    assert time.monotonic() - t0 < TIME_BUDGET
+
+
+# ---------------------------------------------------------------------------
+# gateway batch envelope
+# ---------------------------------------------------------------------------
+
+def _gw(transport="mpklink_opt", **kw):
+    gw = ServiceGateway(transport, **kw)
+    gw.register_service("wordcount", wordcount_handler)
+    return gw.start()
+
+
+@pytest.mark.parametrize("name", ["mpklink_opt", "uds", "shm"])
+def test_gateway_call_batch_roundtrip(name):
+    gw = _gw(name)
+    try:
+        c = gw.connect("batcher")
+        ns = [2, 30, 400]
+        outs = c.call_batch("wordcount", [make_text(n, seed=n) for n in ns])
+        assert [parse_count(o) for o in outs] == ns
+        # interleaves with single calls on the same channel sequence
+        assert parse_count(c.call("wordcount", make_text(8, seed=0))) == 8
+        outs = c.call_batch("wordcount", [make_text(9, seed=0)])
+        assert parse_count(outs[0]) == 9
+        assert gw.stats["macs_verified"] == 5
+        assert c.macs_verified == 5
+        assert gw.stats["rejected"] == 0
+        c.close()
+    finally:
+        gw.close()
+
+
+def test_gateway_batch_handler_errors_are_per_item():
+    def picky(req):
+        if np.asarray(req).size == 1:
+            raise ValueError("bad apple")
+        return np.asarray(req)
+
+    gw = ServiceGateway("mpklink_opt")
+    gw.register_service("picky", picky, failure_threshold=100)
+    gw.start()
+    try:
+        c = gw.connect("x")
+        res = c.call_batch(
+            "picky", [np.arange(4, dtype=np.int32), np.zeros(1, np.int32),
+                      np.arange(3, dtype=np.int32)], return_exceptions=True)
+        assert isinstance(res[1], TransportError)
+        assert "bad apple" in str(res[1])
+        np.testing.assert_array_equal(
+            np.asarray(res[0]).view(np.int32), np.arange(4, dtype=np.int32))
+        np.testing.assert_array_equal(
+            np.asarray(res[2]).view(np.int32), np.arange(3, dtype=np.int32))
+        # without return_exceptions the first per-item error is raised after
+        # the batch drained — and the channel sequence stays aligned
+        with pytest.raises(TransportError, match="bad apple"):
+            c.call_batch("picky", [np.zeros(1, np.int32)])
+        out = c.call_batch("picky", [np.arange(2, dtype=np.int32)])
+        np.testing.assert_array_equal(
+            np.asarray(out[0]).view(np.int32), np.arange(2, dtype=np.int32))
+    finally:
+        gw.close()
+
+
+def test_gateway_batch_corrupt_mac_mid_batch():
+    """Forged batch envelope with one tampered frame: the gateway answers
+    item-by-item — OK, FrameError blob, OK — and the wire count proves only
+    the intact frames were MAC-verified."""
+    gw = _gw()
+    try:
+        c = gw.connect("m")
+        chan = c.open("wordcount")
+        frames = framing.seal_batch(
+            [make_text(n, seed=n) for n in (3, 4, 5)],
+            seed=chan.seed, start_seq=chan.seq)
+        frames[1] = frames[1].copy()
+        frames[1][0, 11] ^= np.uint32(1 << 3)
+        env = np.concatenate([_batch_route(chan.sid, c.cid, 3)]
+                             + [f.reshape(-1).view(np.uint8) for f in frames])
+        resp = np.ascontiguousarray(np.asarray(c._session.request(env))) \
+            .view(np.uint8).reshape(-1)
+        route = resp[:_ROUTE_BYTES].view("<u4")
+        assert int(route[0]) == GW_MAGIC and int(route[1]) == _BOK
+        statuses, ofs = [], _ROUTE_BYTES
+        for _ in range(3):
+            ih = resp[ofs: ofs + _ROUTE_BYTES].view("<u4")
+            statuses.append(int(ih[1]))
+            nb = int(ih[2])
+            ofs += _ROUTE_BYTES + nb + ((-nb) % 4)
+        assert statuses == [_OK, 1, _OK]
+        assert gw.stats["macs_verified"] == 2
+        assert gw.stats["rejected"] == 1
+        chan.seq += 3                       # our hand-rolled envelope's seqs
+        assert parse_count(c.call("wordcount", make_text(6, seed=0))) == 6
+    finally:
+        gw.close()
+
+
+def test_gateway_batch_crash_handler_mid_batch_typed_and_bounded():
+    """faultwire crash_handler fired while a batch envelope is in flight:
+    the client gets ONE typed ServiceCrashed immediately (no deadline
+    stall), and a healed client resumes batching."""
+    gw = ServiceGateway("mpklink_opt",
+                        transport_kwargs={"timeout": TIME_BUDGET * 3})
+    gw.register_service("wordcount", wordcount_handler)
+    gw.start()
+    plan = FaultPlan(seed=99, n_requests=4, rate=0.25,
+                     kinds=("crash_handler",))
+    [ev] = plan.schedule()
+    fabric = FaultFabric(plan).attach(gw)
+    t0 = time.monotonic()
+    try:
+        c = gw.connect("b")
+        ns = [3, 4]
+        for idx in range(4):
+            if idx == ev.index:
+                with pytest.raises(ServiceCrashed):
+                    c.call_batch("wordcount",
+                                 [make_text(n, seed=n) for n in ns])
+                c.heal("wordcount")
+            else:
+                outs = c.call_batch("wordcount",
+                                    [make_text(n, seed=n) for n in ns])
+                assert [parse_count(o) for o in outs] == ns
+        assert [e.kind for e in fabric.fired] == ["crash_handler"]
+    finally:
+        fabric.detach()
+        gw.close()
+    assert time.monotonic() - t0 < TIME_BUDGET
+
+
+def test_gateway_batch_rekeys_after_epoch_bump():
+    """A revocation elsewhere on the domain bumps the epoch; a
+    still-certified batch client re-keys through the CA transparently —
+    the same recovery contract call() has."""
+    gw = _gw()
+    try:
+        a, b = gw.connect("alice"), gw.connect("bob")
+        assert parse_count(a.call("wordcount", make_text(3, seed=0))) == 3
+        assert parse_count(
+            b.call_batch("wordcount", [make_text(4, seed=0)])[0]) == 4
+        old_key = b._channels["wordcount"].client_key
+        gw.revoke(a, "wordcount")           # epoch bump stales bob's key
+        outs = b.call_batch("wordcount",
+                            [make_text(6, seed=0), make_text(7, seed=0)])
+        assert [parse_count(o) for o in outs] == [6, 7]
+        assert b._channels["wordcount"].client_key is not old_key
+    finally:
+        gw.close()
+
+
+def test_gateway_unframeable_handler_output_never_desyncs():
+    """Response sealing happens after the sequence advance, so it must
+    never fail: rank>4 handler output is flattened to bytes (a typed
+    answer), and the channel stays aligned for both call paths."""
+    gw = ServiceGateway("mpklink_opt")
+    gw.register_service("r5", lambda r: np.zeros((2, 2, 2, 2, 2), np.int32))
+    gw.register_service("wordcount", wordcount_handler)
+    gw.start()
+    try:
+        c = gw.connect("x")
+        out = c.call_batch("r5", [np.arange(3, dtype=np.int32)])[0]
+        assert out.dtype == np.uint8 and out.size == 32 * 4
+        c.call("r5", np.arange(3, dtype=np.int32))
+        assert parse_count(c.call("wordcount", make_text(5, seed=0))) == 5
+    finally:
+        gw.close()
+
+
+def test_gateway_batch_whole_envelope_rejections_are_typed():
+    gw = _gw()
+    try:
+        from repro.core.domains import AccessViolation
+        c = gw.connect("n")
+        chan = c.open("wordcount")
+        # unknown service id → AccessViolation, sequence NOT consumed
+        frames = framing.seal_batch([make_text(2, seed=0)],
+                                    seed=chan.seed, start_seq=chan.seq)
+        env = np.concatenate([_batch_route(0x7FFF, c.cid, 1)]
+                             + [f.reshape(-1).view(np.uint8) for f in frames])
+        resp = np.ascontiguousarray(np.asarray(c._session.request(env))) \
+            .view(np.uint8).reshape(-1)
+        route = resp[:_ROUTE_BYTES].view("<u4")
+        assert int(route[1]) == 1
+        with pytest.raises(AccessViolation):
+            from repro.core.transports import _raise_remote
+            _raise_remote(resp[_ROUTE_BYTES:
+                               _ROUTE_BYTES + int(route[3])].tobytes())
+        # channel still aligned: the real batch path works
+        outs = c.call_batch("wordcount", [make_text(5, seed=0)])
+        assert parse_count(outs[0]) == 5
+    finally:
+        gw.close()
