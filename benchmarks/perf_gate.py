@@ -1,0 +1,97 @@
+"""Perf-regression gate: quick re-measurement vs the committed JSON.
+
+Run by the CI ``perf`` job (and by hand before regenerating the committed
+artifacts):
+
+    PYTHONPATH=src python benchmarks/perf_gate.py [--tolerance 0.20]
+
+Re-measures the gated mpklink_opt cells of gateway_bench with short
+sweeps and fails (exit 1) when throughput regresses more than the
+tolerance (default 20%) against ``benchmarks/results/gateway_bench.json``.
+
+Comparisons are made on machine-independent SPEEDUP RATIOS — zero-copy vs
+the PR 3 legacy plane at the pipelined operating point, and the sharded
+scatter executor vs sequential calls — not on absolute req/s, because CI
+runners and the machine that produced the committed JSON differ in
+absolute speed while the ratios are properties of the code. The committed
+JSON's own boolean gates are re-asserted as well, so a regenerated
+artifact that fails its acceptance claims cannot be committed silently.
+``PERF_GATE_TOLERANCE`` overrides the tolerance for noisy runners.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+from gateway_bench import (PAYLOAD_IN_FLIGHT, payload_speedup,        # noqa: E402
+                           scatter_speedup, sweep_payload, sweep_scatter)
+
+COMMITTED = Path(__file__).resolve().parent / "results" / "gateway_bench.json"
+
+# the committed boolean acceptance gates that must still hold
+GATES = ("batch_gate_mpklink_opt_2x", "zero_copy_gate_mpklink_opt_1p5x",
+         "scatter_gate_workers4_2x")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tolerance", type=float,
+                    default=float(os.environ.get("PERF_GATE_TOLERANCE",
+                                                 "0.20")),
+                    help="allowed fractional regression vs committed ratios")
+    args = ap.parse_args()
+    committed = json.loads(COMMITTED.read_text())
+
+    failures = []
+    for gate in GATES:
+        ok = committed.get(gate) is True
+        print(f"committed gate {gate}: {'PASS' if ok else 'FAIL'}")
+        if not ok:
+            failures.append(f"committed gate {gate} is not true")
+
+    print("fresh zero-copy sweep (mpklink_opt, 64 KiB):", flush=True)
+    fresh_zc = payload_speedup(sweep_payload(["mpklink_opt"], [64 * 1024], 8))
+    print("fresh scatter sweep (mpklink_opt, 4 services):", flush=True)
+    fresh_sc = scatter_speedup(sweep_scatter("mpklink_opt", 4, 10, [0, 4]))
+
+    checks = [
+        (f"zero_copy_speedup[mpklink_opt/64KiB/k{PAYLOAD_IN_FLIGHT}]",
+         fresh_zc.get(f"mpklink_opt/64KiB/k{PAYLOAD_IN_FLIGHT}"),
+         committed.get("zero_copy_speedup", {})
+         .get(f"mpklink_opt/64KiB/k{PAYLOAD_IN_FLIGHT}")),
+        ("scatter_speedup_vs_sequential[workers4]",
+         fresh_sc.get("workers4"),
+         committed.get("scatter_speedup_vs_sequential", {}).get("workers4")),
+    ]
+    for name, fresh, base in checks:
+        if base is None:
+            failures.append(f"{name}: missing from committed JSON")
+            continue
+        if fresh is None:
+            failures.append(f"{name}: fresh measurement missing")
+            continue
+        floor = (1.0 - args.tolerance) * base
+        ok = fresh >= floor
+        print(f"{name}: fresh={fresh} committed={base} "
+              f"floor={floor:.2f} -> {'PASS' if ok else 'FAIL'}")
+        if not ok:
+            failures.append(
+                f"{name} regressed >{args.tolerance:.0%}: "
+                f"fresh {fresh} < floor {floor:.2f} (committed {base})")
+
+    if failures:
+        print("PERF GATE FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("perf gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -21,20 +21,43 @@ shape, nbytes, ...) fails verification exactly like a payload flip, and the
 reserved lanes (10, 12..127) must be zero. The payload MAC itself is
 unchanged and stays bit-identical to the guard kernel / fast_mac.
 
+Zero-copy path (the arena data plane): :func:`seal_into` writes the header
+and payload of a frame directly into a caller-provided buffer — typically a
+:class:`FrameArena` slot or a transport's shared region — and MACs the
+payload in place, so sealing a message costs exactly ONE write of the
+payload bytes (no pad/concat staging allocations). :func:`verify_view`
+is the receive-side twin: it runs the full guard and hands back the payload
+as a **read-only view** aliasing the frame storage — no copy-out. The
+legacy :func:`build_frame` / :func:`parse_frame` API is preserved
+bit-for-bit on top of these (``build_frame`` = ``seal_into`` a fresh
+buffer). :data:`STATS` counts bytes copied / concat calls so benchmarks can
+prove the hot path allocation-free.
+
 Batch path (the pipelined data plane): :func:`seal_batch` /
 :func:`verify_batch` frame / verify N messages at once, with all N payload
 MACs computed in ONE fused vectorized pass (:func:`mac_batch`) instead of N
 Python-loop calls — same constants, bit-identical to the scalar MAC (and to
-the batched ``kernels/mpk_guard`` device kernel). :func:`split_frames`
-separates concatenated frames back into messages, which is how the gateway's
-batch envelope is carved up server-side.
+the batched ``kernels/mpk_guard`` device kernel). :func:`seal_into_batch`
+is the arena twin: N frames sealed in place with one fused MAC pass.
+:func:`split_frames` separates concatenated frames back into messages,
+which is how the gateway's batch envelope is carved up server-side.
+
+Streaming MAC: :func:`mac_init_np` / :func:`mac_update_np` /
+:func:`mac_finalize_np` expose the block-Horner recurrence directly, so a
+large payload can be MAC'd chunk by chunk as it lands in a region — no
+staging copy. ``transports.fast_mac`` and the batch pass are thin
+compositions of these; ``kernels/mpk_guard`` carries the device twins
+(``mac_update_pallas`` / ``mac_update_jnp``). All are bit-identical to the
+scalar :func:`_mac_np`.
 
 Works on both numpy (host transports) and jnp (device fabric) arrays.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import List, Optional, Sequence, Tuple, Union
+import functools
+import threading
+import weakref
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -45,10 +68,51 @@ _DTYPES = {0: np.float32, 1: np.int32, 2: np.uint32, 3: np.uint8,
            4: np.dtype("<f8"), 5: np.int64, 6: np.uint16}
 _DTYPE_CODES = {np.dtype(v): k for k, v in _DTYPES.items()}
 
+# Benchmark/testing switch: False routes build paths through the PR 3 copy
+# pattern (pad concat + header concat) so the zero-copy win is measurable
+# in-run. Verification accepts frames from either path — they are
+# bit-identical (tests/test_zero_copy.py asserts it).
+ZERO_COPY = True
+
 
 class FrameError(ValueError):
     pass
 
+
+# ---------------------------------------------------------------------------
+# allocation/copy accounting (the gateway_bench stats hook)
+# ---------------------------------------------------------------------------
+
+class FrameStats:
+    """Process-wide framing counters. ``bytes_copied`` counts every byte the
+    framing layer writes or re-materializes (payload writes, pad/concat
+    staging, header concat); ``concat_calls`` counts ``np.concatenate``
+    invocations on the frame path. The zero-copy seal path adds exactly
+    ``payload nbytes`` per frame and zero concats — benchmarks assert the
+    delta. Increments ride the GIL (approximate under heavy concurrency,
+    exact single-threaded, which is how the bench reads them)."""
+
+    _FIELDS = ("frames_sealed", "frames_sealed_inplace", "frames_verified",
+               "views_returned", "bytes_copied", "concat_calls",
+               "arena_allocated", "arena_reused", "arena_released")
+
+    def __init__(self):
+        self.reset()
+
+    def reset(self):
+        for f in self._FIELDS:
+            setattr(self, f, 0)
+
+    def snapshot(self) -> Dict[str, int]:
+        return {f: getattr(self, f) for f in self._FIELDS}
+
+
+STATS = FrameStats()
+
+
+# ---------------------------------------------------------------------------
+# MAC: scalar reference, hoisted power tables, streaming block-Horner
+# ---------------------------------------------------------------------------
 
 def _mac_np(payload_u32: np.ndarray, seed: int) -> int:
     """Host twin of kernels.ref.mac_ref (same constants, same fold)."""
@@ -60,27 +124,111 @@ def _mac_np(payload_u32: np.ndarray, seed: int) -> int:
     return int((h * _FOLD_POWERS.astype(np.uint64)).sum() & 0xFFFFFFFF)
 
 
+@functools.lru_cache(maxsize=256)
+def _power_table(m: int) -> Tuple[np.ndarray, np.uint64]:
+    """``([P^(m-1), ..., P, 1] mod 2^64, P^m mod 2^64)`` for an m-row block.
+
+    Hoisted out of the block loops — the same table was being recomputed
+    (full cumprod) for every block of every message. uint64 wraparound keeps
+    the low 32 bits exact (2^32 | 2^64), so results are unchanged."""
+    from repro.kernels.ref import MAC_PRIME
+    with np.errstate(over="ignore"):
+        pw = np.full(max(m, 1), MAC_PRIME, np.uint64)
+        pw[0] = 1
+        pw = np.ascontiguousarray(np.cumprod(pw)[::-1])
+        if m == 0:
+            pw = pw[:0]
+            p_m = np.uint64(1)
+        else:
+            p_m = np.uint64((int(pw[0]) * MAC_PRIME) & 0xFFFFFFFFFFFFFFFF)
+    pw.setflags(write=False)
+    return pw, p_m
+
+
+@functools.lru_cache(maxsize=1)
+def _fold_powers_u32() -> np.ndarray:
+    from repro.kernels.ref import _FOLD_POWERS
+    fp = _FOLD_POWERS.astype(np.uint32)
+    fp.setflags(write=False)
+    return fp
+
+
+@functools.lru_cache(maxsize=256)
+def _power_table32(m: int) -> Tuple[np.ndarray, np.uint32]:
+    """uint32 twin of :func:`_power_table`. Every Horner quantity is only
+    ever needed mod 2^32, so the whole recurrence runs in native uint32 —
+    SIMD-friendly multiplies, no widening staging copies — and wraps to
+    exactly the same bits."""
+    pw, p_m = _power_table(m)
+    pw32 = (pw & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    pw32.setflags(write=False)
+    return pw32, np.uint32(int(p_m) & 0xFFFFFFFF)
+
+
+def mac_init_np(seed: int) -> np.ndarray:
+    """Fresh (LANES,) uint32 Horner state for ``seed`` (values < 2^32)."""
+    from repro.kernels.ref import MAC_INIT
+    return np.full(LANES, (MAC_INIT + (seed & 0xFFFFFFFF)) & 0xFFFFFFFF,
+                   np.uint32)
+
+
+def mac_update_np(h: np.ndarray, block_u32: np.ndarray) -> np.ndarray:
+    """Advance the Horner state over an (m, LANES) uint32 block in one
+    vectorized step: ``h' = h·P^m + Σ_r row_r·P^(m-1-r)`` (mod 2^32).
+    Pure uint32 arithmetic end to end (wraparound mod 2^32 IS the MAC's
+    modulus — no uint64 widening or staging copy), one einsum contraction
+    per block. Bit-identical to feeding the rows one by one into
+    :func:`_mac_np`'s loop — the streaming form lets large payloads be
+    MAC'd chunk by chunk as they land in a region."""
+    m = block_u32.shape[0]
+    if m == 0:
+        return h
+    pw32, p_m32 = _power_table32(m)
+    with np.errstate(over="ignore"):
+        acc = np.einsum("r,rl->l", pw32, block_u32, dtype=np.uint32,
+                        casting="unsafe")
+        return h * p_m32 + acc
+
+
+def mac_finalize_np(h: np.ndarray) -> int:
+    """Fold the (LANES,) Horner state to the 32-bit MAC word."""
+    with np.errstate(over="ignore"):
+        return int((h * _fold_powers_u32()).sum(dtype=np.uint32))
+
+
 def _meta_mix(header: np.ndarray, seed: int) -> int:
     """Horner mix of the ten metadata words (magic..shape[3]) — folded into
     the stored MAC word so header tampering fails exactly like payload
     tampering. Pure uint arithmetic, deterministic everywhere."""
     from repro.kernels.ref import MAC_PRIME
     h = (0x9E3779B9 ^ (seed & 0xFFFFFFFF)) & 0xFFFFFFFF
-    for w in header[:10]:
-        h = (h * MAC_PRIME + int(w)) & 0xFFFFFFFF
+    for w in np.asarray(header[:10]).tolist():     # python ints: fast loop
+        h = (h * MAC_PRIME + w) & 0xFFFFFFFF
     return h
 
 
+# ---------------------------------------------------------------------------
+# pack / unpack
+# ---------------------------------------------------------------------------
+
 def pack_payload(arr: np.ndarray) -> Tuple[np.ndarray, dict]:
-    """array → ((rows, 128) uint32, meta). Zero-pads to lane multiples."""
+    """array → ((rows, 128) uint32, meta). Zero-pads to lane multiples.
+
+    Lane-aligned inputs are returned as a zero-copy view; the pad path
+    writes into ONE preallocated output buffer (no full-payload
+    ``np.concatenate`` staging copy)."""
     arr = np.ascontiguousarray(arr)
     if arr.dtype not in _DTYPE_CODES:
         raise FrameError(f"unsupported dtype {arr.dtype}")
     raw = arr.view(np.uint8).reshape(-1)
     pad = (-raw.size) % (LANES * 4)
     if pad:
-        raw = np.concatenate([raw, np.zeros(pad, np.uint8)])
-    u32 = raw.view("<u4").reshape(-1, LANES)
+        rows = (raw.size + pad) // (LANES * 4)
+        u32 = np.zeros((rows, LANES), np.uint32)
+        u32.reshape(-1).view(np.uint8)[: raw.size] = raw
+        STATS.bytes_copied += raw.size
+    else:
+        u32 = raw.view("<u4").reshape(-1, LANES)
     meta = {"dtype_code": _DTYPE_CODES[arr.dtype], "nbytes": arr.nbytes,
             "shape": tuple(arr.shape)}
     return u32, meta
@@ -92,25 +240,313 @@ def unpack_payload(payload_u32: np.ndarray, meta: dict) -> np.ndarray:
     return raw.view(_DTYPES[meta["dtype_code"]]).reshape(meta["shape"])
 
 
-def _assemble(payload: np.ndarray, meta: dict, seed: int, seq: int,
-              mac: int) -> np.ndarray:
-    """Header row from (meta, seed, seq, precomputed payload MAC) + payload."""
+def _meta_of(arr: np.ndarray) -> dict:
+    if arr.dtype not in _DTYPE_CODES:
+        raise FrameError(f"unsupported dtype {arr.dtype}")
+    if arr.ndim > 4:
+        raise FrameError("rank > 4 payloads unsupported by frame header")
+    return {"dtype_code": _DTYPE_CODES[arr.dtype], "nbytes": arr.nbytes,
+            "shape": tuple(arr.shape)}
+
+
+def _write_header(hrow: np.ndarray, meta: dict, seed: int, seq: int,
+                  mac: int) -> None:
+    """Fill one 128-lane header row in place (reserved lanes zeroed — the
+    row may be a recycled arena slot holding stale words)."""
     shape = list(meta["shape"])[:4] + [0] * (4 - min(4, len(meta["shape"])))
     if len(meta["shape"]) > 4:
         raise FrameError("rank > 4 payloads unsupported by frame header")
+    hrow[10:] = 0
+    hrow[:10] = [MAGIC, seed & 0xFFFFFFFF, seq & 0xFFFFFFFF,
+                 meta["nbytes"] & 0xFFFFFFFF, meta["dtype_code"],
+                 len(meta["shape"]), *[s & 0xFFFFFFFF for s in shape]]
+    hrow[11] = (mac ^ _meta_mix(hrow, seed)) & 0xFFFFFFFF
+
+
+def _assemble(payload: np.ndarray, meta: dict, seed: int, seq: int,
+              mac: int) -> np.ndarray:
+    """Header row from (meta, seed, seq, precomputed payload MAC) + payload,
+    materialized into ONE preallocated frame buffer."""
+    frame = np.empty((payload.shape[0] + 1, LANES), np.uint32)
+    _write_header(frame[0], meta, seed, seq, mac)
+    frame[1:] = payload
+    STATS.bytes_copied += payload.nbytes
+    return frame
+
+
+# ---------------------------------------------------------------------------
+# zero-copy seal / verify (the arena data plane)
+# ---------------------------------------------------------------------------
+
+def _check_buf(buf: np.ndarray, rows: int) -> None:
+    if (buf.ndim != 2 or buf.shape[1] != LANES
+            or buf.dtype != np.dtype(np.uint32)):
+        raise FrameError("seal buffer must be a (rows, 128) uint32 matrix")
+    if not buf.flags.c_contiguous or not buf.flags.writeable:
+        raise FrameError("seal buffer must be C-contiguous and writable")
+    if buf.shape[0] < rows:
+        raise FrameError(
+            f"seal buffer too small ({buf.shape[0]} rows for a {rows}-row "
+            f"frame)")
+
+
+def seal_into(buf: np.ndarray, arr: np.ndarray, *, seed: int, seq: int,
+              mac_impl=None, _inplace: bool = True) -> int:
+    """Seal ``arr`` as a frame directly into ``buf`` (no staging buffers).
+
+    ``buf`` is any C-contiguous writable ``(>= frame_rows(nbytes), 128)``
+    uint32 buffer — a FrameArena slot, a transport's shared region, or a
+    byte-slice of an outgoing envelope. The payload bytes are written once,
+    the pad tail is zeroed (it is MAC-covered), the MAC runs over the
+    payload *in place*, and the header row is written last. Returns the
+    number of rows used; ``buf[rows:]`` is untouched. Bit-identical to
+    :func:`build_frame` (tests/test_zero_copy.py asserts it for every
+    dtype)."""
+    arr = np.ascontiguousarray(np.asarray(arr))
+    meta = _meta_of(arr)
+    rows = frame_rows(meta["nbytes"])
+    _check_buf(buf, rows)
+    payload = buf[1:rows]
+    pbytes = payload.reshape(-1).view(np.uint8)
+    pbytes[: meta["nbytes"]] = arr.view(np.uint8).reshape(-1)
+    pbytes[meta["nbytes"]:] = 0
+    mac = (mac_impl or _mac_np)(payload, seed)
+    _write_header(buf[0], meta, seed, seq, mac)
+    STATS.frames_sealed += 1
+    if _inplace:                # build_frame seals a FRESH buffer: counted
+        STATS.frames_sealed_inplace += 1    # as sealed, not as in-place
+    STATS.bytes_copied += meta["nbytes"]
+    return rows
+
+
+def seal_into_batch(bufs: Sequence[np.ndarray], arrays: Sequence[np.ndarray],
+                    *, seed: int, seqs: Sequence[int],
+                    mac_impl=None) -> List[int]:
+    """Seal N frames in place with ONE fused vectorized MAC pass.
+
+    The arena twin of :func:`seal_batch`: payload bytes land directly in
+    each ``bufs[i]`` and all MACs are computed by :func:`mac_batch` over the
+    in-place payload views. Returns rows-used per frame."""
+    arrays = [np.ascontiguousarray(np.asarray(a)) for a in arrays]
+    metas = [_meta_of(a) for a in arrays]
+    rows_list = [frame_rows(m["nbytes"]) for m in metas]
+    payloads = []
+    for buf, arr, meta, rows in zip(bufs, arrays, metas, rows_list):
+        _check_buf(buf, rows)
+        payload = buf[1:rows]
+        pbytes = payload.reshape(-1).view(np.uint8)
+        pbytes[: meta["nbytes"]] = arr.view(np.uint8).reshape(-1)
+        pbytes[meta["nbytes"]:] = 0
+        payloads.append(payload)
+        STATS.bytes_copied += meta["nbytes"]
+    if mac_impl is None:
+        macs = mac_batch(payloads, seed)
+    else:
+        macs = [mac_impl(p, seed) for p in payloads]
+    for buf, meta, seq, mac in zip(bufs, metas, seqs, macs):
+        _write_header(buf[0], meta, seed, seq, mac)
+    STATS.frames_sealed += len(arrays)
+    STATS.frames_sealed_inplace += len(arrays)
+    return rows_list
+
+
+def seal_prefilled(buf: np.ndarray, nbytes: int, *, seed: int, seq: int,
+                   mac_impl=None) -> int:
+    """Seal a frame whose payload bytes the caller ALREADY wrote into
+    ``buf``'s payload area (``buf[1:]`` viewed as bytes) — the fully
+    zero-copy producer path: an upper layer assembles its message directly
+    in a region/arena slot and this only zeroes the pad tail, MACs in
+    place and writes the header. The frame is declared as a flat uint8
+    payload of ``nbytes`` (the bytes ARE the message). Bit-identical to
+    ``seal_into(buf, <those bytes>, ...)``."""
+    rows = frame_rows(nbytes)
+    _check_buf(buf, rows)
+    payload = buf[1:rows]
+    pbytes = payload.reshape(-1).view(np.uint8)
+    pbytes[nbytes:] = 0
+    mac = (mac_impl or _mac_np)(payload, seed)
+    meta = {"dtype_code": _DTYPE_CODES[np.dtype(np.uint8)],
+            "nbytes": int(nbytes), "shape": (int(nbytes),)}
+    _write_header(buf[0], meta, seed, seq, mac)
+    STATS.frames_sealed += 1
+    STATS.frames_sealed_inplace += 1
+    return rows
+
+
+def _payload_view(frame: np.ndarray, meta: dict) -> np.ndarray:
+    """Read-only payload view aliasing ``frame`` storage — zero copy."""
+    raw = frame[1:].reshape(-1).view(np.uint8)[: meta["nbytes"]]
+    out = raw.view(_DTYPES[meta["dtype_code"]]).reshape(meta["shape"])
+    out.flags.writeable = False
+    return out
+
+
+def verify_view(frame: np.ndarray, *, seed: int, expect_seq=None,
+                mac_impl=None) -> np.ndarray:
+    """Full receive-side guard (magic/seed/seq/reserved/MAC/metadata), then
+    return the payload as a **read-only view** aliasing ``frame`` — the
+    zero-copy twin of :func:`parse_frame`. The view's lifetime is the
+    frame buffer's: callers that outlive the slot (see FrameArena) must
+    copy. Mutating the underlying buffer after sealing is caught by the
+    MAC; mutating through the view raises (read-only)."""
+    frame = np.asarray(frame)
+    if frame.ndim != 2 or frame.shape[0] < 1 or frame.shape[1] != LANES:
+        raise FrameError("malformed frame — truncated or not lane-aligned")
+    if not frame.flags.c_contiguous:
+        raise FrameError("verify_view needs a contiguous frame")
+    _precheck(frame, seed, expect_seq)
+    mac = (mac_impl or _mac_np)(frame[1:], seed)
+    meta = _check_meta(frame, seed, mac)
+    STATS.frames_verified += 1
+    STATS.views_returned += 1
+    return _payload_view(frame, meta)
+
+
+class FrameArena:
+    """Recycling pool of slot-sized ``(rows, 128)`` uint32 frame buffers.
+
+    The transports stage frames straight into arena slots (``seal_into``)
+    and hand responses back as views (``verify_view``), so the steady-state
+    data plane allocates nothing: a slot is acquired per message, sealed in
+    place, and recycled through a free list when released.
+
+    Slots are size-classed (rows rounded up to the next power of two above
+    ``min_rows``) so mixed payload sizes recycle without fragmentation.
+    ``release_on_collect(view, buf)`` parks the slot on a *pending* list;
+    pending slots re-enter the free list only during a later sweep (at
+    ``acquire`` time — a settled state, never mid-deallocation) and only
+    once the handed-out view is dead AND nothing else references the
+    buffer. numpy collapses view base chains, so a DERIVED sub-view of
+    the handed-out view references ``buf`` directly and keeps its
+    refcount elevated — the sweep sees that and leaves the slot parked.
+    A slot with any live alias is therefore NEVER reused, so recycling
+    cannot corrupt data a caller still holds (the aliasing invariant
+    tests/test_zero_copy.py locks in). Thread-safe."""
+
+    def __init__(self, min_rows: int = 16):
+        self.min_rows = max(1, min_rows)
+        self._free: Dict[int, List[np.ndarray]] = {}
+        # (weakref-to-view, buf): swept into _free when view is dead and
+        # buf's refcount says nobody else aliases it
+        self._pending: List[Tuple[object, np.ndarray]] = []
+        self._lock = threading.Lock()
+
+    def _class_rows(self, rows: int) -> int:
+        c = self.min_rows
+        while c < rows:
+            c <<= 1
+        return c
+
+    def _sweep_locked(self) -> None:
+        import sys
+        if not self._pending:
+            return
+        keep = []
+        for wr, buf in self._pending:
+            if wr() is None \
+                    and sys.getrefcount(buf) <= _PENDING_BASELINE_REFS:
+                self._free.setdefault(buf.shape[0], []).append(buf)
+                STATS.arena_released += 1
+            else:
+                keep.append((wr, buf))
+        self._pending = keep
+
+    def acquire(self, rows: int) -> np.ndarray:
+        """A writable (class_rows, 128) uint32 buffer with class_rows ≥
+        rows — recycled when the free list has one, freshly allocated
+        otherwise. Contents are undefined; seal_into fully initializes the
+        frame region."""
+        c = self._class_rows(max(1, int(rows)))
+        with self._lock:
+            self._sweep_locked()
+            lst = self._free.get(c)
+            buf = lst.pop() if lst else None
+        if buf is None:
+            buf = np.empty((c, LANES), np.uint32)
+            STATS.arena_allocated += 1
+        else:
+            STATS.arena_reused += 1
+        return buf
+
+    def release(self, buf: Optional[np.ndarray]) -> None:
+        """Return a slot to its size-class free list. The caller promises no
+        live views of ``buf`` remain (use :meth:`release_on_collect` to tie
+        the release to a view's lifetime instead)."""
+        if buf is None:
+            return
+        with self._lock:
+            self._free.setdefault(buf.shape[0], []).append(buf)
+        STATS.arena_released += 1
+
+    def release_on_collect(self, view, buf: np.ndarray) -> None:
+        """Recycle ``buf`` once ``view`` has been garbage-collected AND
+        nothing else (e.g. a derived sub-view) still aliases it — checked
+        by a sweep in a settled state, not a GC callback."""
+        with self._lock:
+            self._pending.append((weakref.ref(view), buf))
+
+    def free_slots(self) -> int:
+        with self._lock:
+            self._sweep_locked()
+            return sum(len(v) for v in self._free.values())
+
+
+def _measure_pending_baseline() -> int:
+    """Refcount a pending buffer has during the sweep when NOTHING else
+    references it (the pending tuple + the loop binding + getrefcount's
+    argument) — measured on this interpreter instead of hard-coding
+    CPython internals."""
+    import sys
+    pending = [(None, np.empty(0, np.uint32))]
+    for _, buf in pending:
+        return sys.getrefcount(buf)
+    raise AssertionError("unreachable")
+
+
+_PENDING_BASELINE_REFS = _measure_pending_baseline()
+
+
+# ---------------------------------------------------------------------------
+# build / parse (legacy API — now thin wrappers over the in-place path)
+# ---------------------------------------------------------------------------
+
+def _build_frame_legacy(arr: np.ndarray, *, seed: int, seq: int,
+                        mac_impl=None) -> np.ndarray:
+    """The PR 3 copy pattern (pad concat + header concat), kept only for
+    A/B benchmarking (``framing.ZERO_COPY = False``) — byte-identical
+    output, 3–4× the copies."""
+    arr = np.ascontiguousarray(arr)
+    meta = _meta_of(arr)
+    raw = arr.view(np.uint8).reshape(-1)
+    pad = (-raw.size) % (LANES * 4)
+    if pad:
+        raw = np.concatenate([raw, np.zeros(pad, np.uint8)])
+        STATS.concat_calls += 1
+        STATS.bytes_copied += raw.size
+    payload = raw.view("<u4").reshape(-1, LANES)
+    mac = (mac_impl or _mac_np)(payload, seed)
     header = np.zeros(LANES, np.uint32)
-    header[:10] = [MAGIC, seed & 0xFFFFFFFF, seq & 0xFFFFFFFF,
-                   meta["nbytes"] & 0xFFFFFFFF, meta["dtype_code"],
-                   len(meta["shape"]), *[s & 0xFFFFFFFF for s in shape]]
-    header[11] = (mac ^ _meta_mix(header, seed)) & 0xFFFFFFFF
-    return np.concatenate([header[None], payload], axis=0)
+    _write_header(header, meta, seed, seq, mac)
+    STATS.concat_calls += 1
+    STATS.bytes_copied += payload.nbytes + header.nbytes
+    STATS.frames_sealed += 1
+    return np.concatenate([header[None], payload.view(np.uint32)], axis=0)
 
 
 def build_frame(arr: np.ndarray, *, seed: int, seq: int, mac_impl=None) -> np.ndarray:
-    """array → full frame (header row + payload rows) uint32."""
-    payload, meta = pack_payload(arr)
-    mac = (mac_impl or _mac_np)(payload, seed)
-    return _assemble(payload, meta, seed, seq, mac)
+    """array → full frame (header row + payload rows) uint32.
+
+    One buffer, one payload write (``seal_into`` into a fresh allocation).
+    With ``framing.ZERO_COPY = False`` the PR 3 concat pattern is used
+    instead — identical bytes, for benchmark baselines."""
+    if not ZERO_COPY:
+        return _build_frame_legacy(arr, seed=seed, seq=seq, mac_impl=mac_impl)
+    arr = np.ascontiguousarray(np.asarray(arr))
+    meta = _meta_of(arr)
+    frame = np.empty((frame_rows(meta["nbytes"]), LANES), np.uint32)
+    seal_into(frame, arr, seed=seed, seq=seq, mac_impl=mac_impl,
+              _inplace=False)
+    return frame
 
 
 def _precheck(frame: np.ndarray, seed: int, expect_seq) -> None:
@@ -128,11 +564,12 @@ def _precheck(frame: np.ndarray, seed: int, expect_seq) -> None:
         raise FrameError("nonzero reserved header lanes — header tampered")
 
 
-def _verify_with_mac(frame: np.ndarray, seed: int, mac: int) -> np.ndarray:
+def _check_meta(frame: np.ndarray, seed: int, mac: int) -> dict:
     """The MAC + metadata half of the receive-side checks, given a
-    precomputed payload MAC. Callers MUST run :func:`_precheck` first (both
-    parse_frame and verify_batch do, before paying for the MAC). Shared by
-    the scalar and batch guards so they cannot diverge."""
+    precomputed payload MAC. Callers MUST run :func:`_precheck` first (all
+    of parse_frame, verify_view and verify_batch do, before paying for the
+    MAC). Shared by every guard so they cannot diverge. Returns the
+    validated meta dict."""
     header, payload = frame[0], frame[1:]
     if (mac ^ _meta_mix(header, seed)) & 0xFFFFFFFF != int(header[11]):
         raise FrameError("MAC mismatch — payload or header tampered/truncated")
@@ -149,8 +586,12 @@ def _verify_with_mac(frame: np.ndarray, seed: int, mac: int) -> np.ndarray:
         raise FrameError(
             f"frame length mismatch ({payload.shape[0]} payload rows for "
             f"{nbytes} bytes)")
-    meta = {"dtype_code": dtype_code, "nbytes": nbytes, "shape": shape}
-    return unpack_payload(payload, meta)
+    return {"dtype_code": dtype_code, "nbytes": nbytes, "shape": shape}
+
+
+def _verify_with_mac(frame: np.ndarray, seed: int, mac: int) -> np.ndarray:
+    meta = _check_meta(frame, seed, mac)
+    return unpack_payload(frame[1:], meta)
 
 
 def parse_frame(frame: np.ndarray, *, seed: int, expect_seq=None, mac_impl=None) -> np.ndarray:
@@ -162,6 +603,7 @@ def parse_frame(frame: np.ndarray, *, seed: int, expect_seq=None, mac_impl=None)
         raise FrameError("malformed frame — truncated or not lane-aligned")
     _precheck(frame, seed, expect_seq)
     mac = (mac_impl or _mac_np)(frame[1:], seed)
+    STATS.frames_verified += 1
     return _verify_with_mac(frame, seed, mac)
 
 
@@ -179,8 +621,27 @@ def _mac_batch_np(stack: np.ndarray, seed: int,
     """Vectorized Horner MACs for a (G, rows, LANES) uint32 stack → (G,)
     uint32. One fused pass over the row axis, broadcast across the G frames:
     h = h·P^m + Σ_r row_r·P^(m-1-r) per block, exactly the fast_mac
-    recurrence. uint64 wraparound keeps the low 32 bits exact (2^32 | 2^64),
-    so the result is bit-identical to the scalar :func:`_mac_np`."""
+    recurrence (power tables hoisted via :func:`_power_table32` — they were
+    being recomputed per block), in native uint32 (wraparound mod 2^32 is
+    the MAC's modulus). Bit-identical to the scalar :func:`_mac_np`."""
+    from repro.kernels.ref import MAC_INIT
+    g, n = stack.shape[0], stack.shape[1]
+    h = np.full((g, LANES), (MAC_INIT + (seed & 0xFFFFFFFF)) & 0xFFFFFFFF,
+                np.uint32)
+    with np.errstate(over="ignore"):
+        for s in range(0, n, block_rows):
+            blk = stack[:, s:s + block_rows]
+            pw32, p_m32 = _power_table32(blk.shape[1])
+            h = h * p_m32 + np.einsum("r,grl->gl", pw32, blk,
+                                      dtype=np.uint32, casting="unsafe")
+        return (h * _fold_powers_u32()[None, :]).sum(axis=1, dtype=np.uint32)
+
+
+def _mac_batch_np_legacy(stack: np.ndarray, seed: int,
+                         block_rows: int = 65536) -> np.ndarray:
+    """The PR 3 fused batch MAC, verbatim (uint64 arithmetic, per-block
+    cumprod power recomputation). Bit-identical to :func:`_mac_batch_np`;
+    kept ONLY as the measured baseline when ``ZERO_COPY=False``."""
     from repro.kernels.ref import MAC_PRIME, MAC_INIT, _FOLD_POWERS
     g, n = stack.shape[0], stack.shape[1]
     h = np.full((g, LANES), MAC_INIT, np.uint64) + np.uint64(seed & 0xFFFFFFFF)
@@ -189,7 +650,7 @@ def _mac_batch_np(stack: np.ndarray, seed: int,
         for s in range(0, n, block_rows):
             blk = stack[:, s:s + block_rows].astype(np.uint64)
             m = blk.shape[1]
-            pw = np.full(m, MAC_PRIME, np.uint64)       # [P^(m-1), ..., P, 1]
+            pw = np.full(m, MAC_PRIME, np.uint64)
             pw[0] = 1
             pw = np.cumprod(pw)[::-1]
             p_m = np.uint64((int(pw[0]) * MAC_PRIME) & 0xFFFFFFFFFFFFFFFF)
@@ -206,8 +667,12 @@ def mac_batch(payloads: Sequence[np.ndarray], seed: int) -> List[int]:
 
     Frames are grouped by row count and each group is hashed in one fused
     pass (:func:`_mac_batch_np`) — the host twin of the batched
-    ``kernels/mpk_guard`` kernel. Bit-identical to calling :func:`_mac_np`
-    per payload (tests/test_batching.py asserts it)."""
+    ``kernels/mpk_guard`` kernel. A singleton group is passed as a
+    broadcast view (no stacking copy), so a single large payload is MAC'd
+    strictly in place. Bit-identical to calling :func:`_mac_np` per
+    payload (tests/test_batching.py asserts it). With ``ZERO_COPY=False``
+    the PR 3 fused pass is used instead — same bits, the A/B baseline."""
+    fused = _mac_batch_np if ZERO_COPY else _mac_batch_np_legacy
     out: List[Optional[int]] = [None] * len(payloads)
     groups: dict = {}
     for i, p in enumerate(payloads):
@@ -217,8 +682,11 @@ def mac_batch(payloads: Sequence[np.ndarray], seed: int) -> List[int]:
             for i in idx:
                 out[i] = _mac_np(payloads[i], seed)
             continue
-        stack = np.stack([np.asarray(payloads[i]) for i in idx])
-        macs = _mac_batch_np(stack, seed)
+        if len(idx) == 1:
+            stack = np.asarray(payloads[idx[0]])[None]      # view, no copy
+        else:
+            stack = np.stack([np.asarray(payloads[i]) for i in idx])
+        macs = fused(stack, seed)
         for j, i in enumerate(idx):
             out[i] = int(macs[j])
     return out
@@ -245,6 +713,7 @@ def seal_batch(arrays: Sequence[np.ndarray], *, seed: int,
         macs = mac_batch([p for p, _ in packed], seed)
     else:
         macs = [mac_impl(p, seed) for p, _ in packed]
+    STATS.frames_sealed += len(packed)
     return [_assemble(p, meta, seed, seqs[i], macs[i])
             for i, (p, meta) in enumerate(packed)]
 
@@ -284,6 +753,7 @@ def verify_batch(frames: Sequence[np.ndarray], *, seed: int,
         macs = mac_batch([frames[i][1:] for i in candidates], seed)
     else:
         macs = [mac_impl(frames[i][1:], seed) for i in candidates]
+    STATS.frames_verified += len(candidates)
     for i, mac in zip(candidates, macs):
         try:
             out[i] = _verify_with_mac(frames[i], seed, mac)

@@ -34,6 +34,28 @@ ONE vectorized MAC pass per side):
             Whole-batch failures (unknown service, no channel, desynced
             frame walk) use the plain single-message error envelope.
 
+Scatter envelope (the sharded parallel executor — N messages for N
+*different* services, ONE round trip, handlers executed concurrently
+across the gateway's worker shards):
+
+  request   [GW_SCAT_MAGIC, client_id, n_items, 0]
+            + per item: [GW_MAGIC, service_id, token, 0] + one frame
+              (self-sizing via its header) sealed with THAT service's
+              channel seed; same-channel items carry consecutive sequences
+              in item order
+  response  [GW_MAGIC, 3 (scatter-ok), client_id, n_items]
+            + per item: the batch envelope's item layout (status 0 frame /
+              status 1 typed error blob)
+
+With ``workers=N`` the gateway runs N shard threads; each service is
+pinned to shard ``sid % N``, so one scatter envelope's items fan out
+across shards and a slow service no longer head-of-line blocks its
+neighbours — while per-channel order, sequence discipline, idempotency
+dedup and breaker semantics stay EXACTLY the single-call ones (a channel's
+items replay the single-call pipeline serially on its service's shard).
+Scatter items use the batch envelope's positional sequence discipline:
+every consumed item advances its channel, success or failure.
+
 Isolation model (the paper's §V, finally with >2 endpoints):
 
 * every service gets its own :class:`ProtectionDomain` in the gateway's
@@ -61,11 +83,12 @@ putting link-level channel domains and service domains in ONE key table
 from __future__ import annotations
 
 import itertools
+import queue
 import threading
 import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Optional, Set, Tuple, Union
+from typing import Callable, Dict, List, Optional, Set, Tuple, Union
 
 import numpy as np
 
@@ -83,8 +106,10 @@ Handler = Callable[[np.ndarray], np.ndarray]
 
 GW_MAGIC = 0x4D504B47               # "MPKG"
 GW_BATCH_MAGIC = 0x4D504B42         # "MPKB" — batch request envelope
+GW_SCAT_MAGIC = 0x4D504B53          # "MPKS" — scatter (multi-service) envelope
 _ROUTE_BYTES = 16                   # 4 × u32 route words
-_OK, _ERR, _BOK = 0, 1, 2           # _BOK: batch response follows
+_OK, _ERR, _BOK, _SOK = 0, 1, 2, 3  # _BOK/_SOK: batch/scatter response follows
+_MAX_SCATTER = 1024                 # items per scatter envelope
 
 
 def _route(a: int, b: int, c: int) -> np.ndarray:
@@ -93,6 +118,103 @@ def _route(a: int, b: int, c: int) -> np.ndarray:
 
 def _batch_route(sid: int, cid: int, n: int) -> np.ndarray:
     return np.array([GW_BATCH_MAGIC, sid, cid, n], "<u4").view(np.uint8)
+
+
+def _scatter_route(cid: int, n: int) -> np.ndarray:
+    return np.array([GW_SCAT_MAGIC, cid, n, 0], "<u4").view(np.uint8)
+
+
+def _seal_envelope(route4, arr: np.ndarray, *, seed: int, seq: int,
+                   mac_impl) -> np.ndarray:
+    """``[4 route words] + sealed frame`` assembled in ONE preallocated
+    buffer — the frame is sealed in place behind the route words, so an
+    envelope costs exactly one payload write (no build/concat chain).
+    Honors ``framing.ZERO_COPY`` for A/B benchmarking."""
+    if not framing.ZERO_COPY:
+        frame = framing.build_frame(arr, seed=seed, seq=seq,
+                                    mac_impl=mac_impl)
+        return np.concatenate([np.array(route4, "<u4").view(np.uint8),
+                               frame.reshape(-1).view(np.uint8)])
+    arr = np.ascontiguousarray(np.asarray(arr))
+    rows = framing.frame_rows(arr.nbytes)
+    env = np.empty(_ROUTE_BYTES + rows * framing.LANES * 4, np.uint8)
+    u = env.view("<u4")
+    u[:4] = route4
+    framing.seal_into(u[4:].reshape(rows, framing.LANES), arr, seed=seed,
+                      seq=seq, mac_impl=mac_impl)
+    return env
+
+
+class _Shard:
+    """One executor worker of the sharded gateway: a FIFO queue drained by
+    a dedicated thread. Services are pinned to shards (``sid % workers``),
+    so one service's work keeps its arrival order (per-channel ordering)
+    while different services execute concurrently on different shards.
+
+    Fault-injection signals (``HandlerCrash``/``DropResponse``) and any
+    other ``BaseException`` are captured and re-raised on the *dispatching*
+    session thread, so crash semantics are identical to inline execution
+    (the session thread dies, the client gets an immediate typed
+    ``ServiceCrashed``) and the shard itself keeps serving."""
+
+    def __init__(self, idx: int):
+        self.idx = idx
+        self.executed = 0
+        self._q: "queue.Queue" = queue.Queue()
+        self._closed = False
+        self._lock = threading.Lock()
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name=f"gw-shard-{idx}")
+        self._thread.start()
+
+    def _exec(self, item):
+        fn, box, done = item
+        try:
+            box.append((True, fn()))
+        except BaseException as e:          # noqa: B036 — relayed, not eaten
+            box.append((False, e))
+        finally:
+            self.executed += 1
+            done.set()
+
+    def _run(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                # shutdown sentinel: drain anything already enqueued so no
+                # dispatcher is left waiting on a dead shard forever
+                while True:
+                    try:
+                        item = self._q.get_nowait()
+                    except queue.Empty:
+                        return
+                    if item is not None:
+                        self._exec(item)
+            else:
+                self._exec(item)
+
+    def submit(self, fn):
+        """Enqueue ``fn``; returns (box, done) — wait on ``done``, then
+        ``box[0]`` is (ok, result-or-exception). A scatter racing
+        ``close()`` executes inline on the caller (same semantics, no
+        parallelism) instead of queueing behind the shutdown sentinel."""
+        box: list = []
+        done = threading.Event()
+        item = (fn, box, done)
+        with self._lock:
+            if not self._closed:
+                self._q.put(item)
+                return box, done
+        self._exec(item)                    # shard gone: run on the caller
+        return box, done
+
+    def close(self):
+        with self._lock:
+            self._closed = True
+            self._q.put(None)
+
+    def queued(self) -> int:
+        return self._q.qsize()
 
 
 def _as_frameable(arr: np.ndarray) -> np.ndarray:
@@ -244,6 +366,7 @@ class ServiceGateway:
 
     def __init__(self, transport: Union[str, type] = "mpklink_opt", *,
                  max_keys: int = 256, mac_impl: Callable = fast_mac,
+                 workers: int = 0,
                  transport_kwargs: Optional[dict] = None):
         self.registry = KeyRegistry(max_keys=max_keys, seed=0x6A7E)
         self.ca = CertificateAuthority(self.registry)
@@ -258,9 +381,15 @@ class ServiceGateway:
         self._glock = threading.Lock()
         self._sid_counter = itertools.count(1)
         self._cid_counter = itertools.count(1)
+        # workers=N: the sharded parallel executor — scatter envelopes fan
+        # their items across N shard threads (service sid % N). workers=0
+        # executes scatter items inline (sequentially) on the dispatching
+        # session thread; single/batch envelopes are unaffected either way
+        self.workers = workers
+        self._shards: List[_Shard] = [_Shard(i) for i in range(workers)]
         self.stats = {"requests": 0, "responses": 0, "macs_verified": 0,
                       "rejected": 0, "deduped": 0, "sheds": 0,
-                      "restarts": 0, "crashes": 0}
+                      "restarts": 0, "crashes": 0, "scatter_envelopes": 0}
 
         if isinstance(transport, str):
             from repro.core import TRANSPORTS
@@ -333,6 +462,13 @@ class ServiceGateway:
 
     def close(self):
         self.transport.close()
+        for sh in self._shards:
+            sh.close()
+
+    def shard_stats(self) -> List[Dict[str, int]]:
+        """Executor observability: per-shard executed/queued counts."""
+        return [{"shard": sh.idx, "executed": sh.executed,
+                 "queued": sh.queued()} for sh in self._shards]
 
     # -- client lifecycle ---------------------------------------------------
     def connect(self, client_name: str, *, retries: int = 0,
@@ -425,27 +561,35 @@ class ServiceGateway:
         if svc is not None:
             self._service_failure(svc, crashed=True)
 
-    def _invoke(self, svc: _Service, chan: Channel, cid: int, token: int,
-                fseq: int, payload: np.ndarray) -> np.ndarray:
-        """Run the service handler behind the circuit breaker + dedup cache.
-        Returns the response payload; updates ``chan.server_seq``."""
-        if token:
-            with svc.done_lock:
-                bucket = svc.done.get(cid)
-                cached = bucket.get(token) if bucket is not None else None
-            if cached is not None:
-                # the original executed but its response was lost in flight:
-                # answer from the dedup window, never re-execute. The window
-                # only ever moves FORWARD — a replayed old envelope gets its
-                # (already-delivered) answer but cannot rewind the channel
-                # and desync legitimate in-order traffic
-                self._bump("deduped")
-                chan.server_seq = max(chan.server_seq,
-                                      (fseq + 1) & 0xFFFFFFFF)
-                return cached
-        if fseq != chan.server_seq:
-            raise framing.FrameError(
-                f"sequence mismatch (got {fseq}, want {chan.server_seq})")
+    def _dedup_get(self, svc: _Service, cid: int, token: int):
+        if not token:
+            return None
+        with svc.done_lock:
+            bucket = svc.done.get(cid)
+            return bucket.get(token) if bucket is not None else None
+
+    def _dedup_put(self, svc: _Service, cid: int, token: int,
+                   resp: np.ndarray):
+        if not token:
+            return
+        if resp.base is not None or not resp.flags.owndata:
+            # the window may outlive the transport region / arena slot the
+            # response views — snapshot it so a recycled slot can never
+            # mutate a cached answer
+            resp = resp.copy()
+        with svc.done_lock:
+            bucket = svc.done.setdefault(cid, OrderedDict())
+            bucket[token] = resp
+            while len(bucket) > _DONE_TOKENS:
+                bucket.popitem(last=False)
+            svc.done.move_to_end(cid)
+            while len(svc.done) > _DONE_CLIENTS:
+                svc.done.popitem(last=False)
+
+    def _run_guarded(self, svc: _Service, payload: np.ndarray) -> np.ndarray:
+        """Run the handler behind the circuit breaker with failure
+        accounting — the one execution core shared by the single, batch
+        and scatter paths, so breaker semantics cannot diverge."""
         svc.health.admit(svc.name)      # circuit breaker: shed, don't hang
         try:
             resp = _as_frameable(np.asarray(svc.handler(payload)))
@@ -458,15 +602,28 @@ class ServiceGateway:
             self._service_failure(svc)
             raise
         svc.health.success()
-        if token:
-            with svc.done_lock:
-                bucket = svc.done.setdefault(cid, OrderedDict())
-                bucket[token] = resp
-                while len(bucket) > _DONE_TOKENS:
-                    bucket.popitem(last=False)
-                svc.done.move_to_end(cid)
-                while len(svc.done) > _DONE_CLIENTS:
-                    svc.done.popitem(last=False)
+        return resp
+
+    def _invoke(self, svc: _Service, chan: Channel, cid: int, token: int,
+                fseq: int, payload: np.ndarray) -> np.ndarray:
+        """Run the service handler behind the circuit breaker + dedup cache.
+        Returns the response payload; updates ``chan.server_seq``."""
+        cached = self._dedup_get(svc, cid, token)
+        if cached is not None:
+            # the original executed but its response was lost in flight:
+            # answer from the dedup window, never re-execute. The window
+            # only ever moves FORWARD — a replayed old envelope gets its
+            # (already-delivered) answer but cannot rewind the channel
+            # and desync legitimate in-order traffic
+            self._bump("deduped")
+            chan.server_seq = max(chan.server_seq,
+                                  (fseq + 1) & 0xFFFFFFFF)
+            return cached
+        if fseq != chan.server_seq:
+            raise framing.FrameError(
+                f"sequence mismatch (got {fseq}, want {chan.server_seq})")
+        resp = self._run_guarded(svc, payload)
+        self._dedup_put(svc, cid, token, resp)
         chan.server_seq = (fseq + 1) & 0xFFFFFFFF
         return resp
 
@@ -507,18 +664,11 @@ class ServiceGateway:
         else:
             for i, p in good:
                 try:
-                    svc.health.admit(svc.name)
-                    resp = _as_frameable(np.asarray(svc.handler(p)))
-                    svc.health.success()
-                    results[i] = resp
-                except HandlerCrash:
-                    self._service_failure(svc, crashed=True)
-                    raise
+                    results[i] = self._run_guarded(svc, p)
                 except ServiceUnavailable as e:
                     self._bump("sheds")
                     results[i] = e
-                except Exception as e:
-                    self._service_failure(svc)
+                except Exception as e:      # failure already recorded
                     results[i] = e
         chan.server_seq = (chan.server_seq + len(parsed)) & 0xFFFFFFFF
         return results
@@ -606,6 +756,174 @@ class ServiceGateway:
             return np.concatenate(
                 [_route(_ERR, sid, len(blob)), np.frombuffer(blob, np.uint8)])
 
+    def _scatter_group(self, cid: int, sid: int, members) -> list:
+        """Execute one channel's scatter items serially — the single-call
+        pipeline (capability checks, MAC verify, dedup window, breaker) —
+        with the batch envelope's positional sequence discipline: every
+        consumed item advances the channel, success or failure, so one bad
+        item cannot desync its neighbours. ``members`` is [(item_index,
+        token, frame), ...] in envelope order; returns [(item_index,
+        response_frame | exception), ...]. Runs on the service's shard
+        (concurrently with other services' groups) or inline when
+        workers=0 — same semantics either way."""
+        svc = self._by_sid.get(sid)
+        if svc is None:
+            e = AccessViolation(f"unknown service id {sid}")
+            return [(idx, e) for idx, _, _ in members]
+        chan = self._channels.get((cid, sid))
+        if chan is None:
+            e = AccessViolation(
+                f"client {cid} holds no key for service {svc.name!r}")
+            return [(idx, e) for idx, _, _ in members]
+        out = []
+        ok: list = []                   # (idx, seq, response payload)
+        with chan.slock:
+            base = chan.server_seq
+            saw_fresh = False
+            parseable = 0
+            try:
+                for k, (idx, token, frame) in enumerate(members):
+                    try:
+                        self.registry.check(chan.client_key, WRITE)
+                        self.registry.check(svc.server_key, READ)
+                        # MAC first, sequence word read afterwards: like
+                        # the single path, the dedup window is consulted
+                        # BEFORE the sequence check, so a replayed
+                        # envelope (lost response + same-token retry) is
+                        # answered from the window instead of tripping a
+                        # mismatch
+                        payload = framing.parse_frame(
+                            frame, seed=chan.seed, expect_seq=None,
+                            mac_impl=self._mac)
+                        fseq = int(frame[0][2])
+                        parseable += 1
+                        if fseq == (base + k) & 0xFFFFFFFF:
+                            saw_fresh = True    # at-position item: this is
+                        self._bump("macs_verified")     # a FRESH envelope
+                        cached = self._dedup_get(svc, cid, token)
+                        if cached is not None:
+                            self._bump("deduped")
+                            ok.append((idx, fseq, cached))
+                            continue
+                        if fseq != (base + k) & 0xFFFFFFFF:
+                            raise framing.FrameError(
+                                f"sequence mismatch (got {fseq}, want "
+                                f"{(base + k) & 0xFFFFFFFF})")
+                        resp = self._run_guarded(svc, payload)
+                        self._dedup_put(svc, cid, token, resp)
+                        self.registry.check(svc.server_key, WRITE)
+                        self.registry.check(chan.client_key, READ)
+                        ok.append((idx, fseq, resp))
+                    except ServiceUnavailable as e:
+                        self._bump("sheds")
+                        out.append((idx, e))
+                    except Exception as e:
+                        out.append((idx, e))
+            finally:
+                # positional discipline, decided per ENVELOPE: any item
+                # sitting at its expected position marks the envelope
+                # fresh, and a fresh envelope consumes len(members) slots
+                # unconditionally — success, handler failure, or a corrupt
+                # item ANYWHERE (the client advances for every item, so a
+                # failing tail must not leave the server behind). A pure
+                # replay (every parseable item stale) moves nothing:
+                # forward-only, a resend can never rewind or further
+                # desync the channel. Also runs on a crash unwinding,
+                # where the session dies and the client re-keys via heal()
+                if saw_fresh or parseable == 0:
+                    chan.server_seq = (base + len(members)) & 0xFFFFFFFF
+            if ok:                      # ONE fused seal pass per group
+                rframes = framing.seal_batch(
+                    [r for _, _, r in ok], seed=chan.seed,
+                    seqs=[q for _, q, _ in ok], mac_impl=self._batch_mac)
+                out.extend((idx, rf) for (idx, _, _), rf in zip(ok, rframes))
+        return out
+
+    def _dispatch_scatter(self, raw: np.ndarray) -> np.ndarray:
+        """Serve one scatter envelope: carve the per-item (route + frame)
+        walk, group items by (client, service) channel preserving envelope
+        order, execute every group on its service's shard — concurrently
+        across shards, inline when workers=0 — and assemble per-item
+        responses in the batch envelope's item layout. Whole-envelope
+        failures (desynced walk, bad counts) use the single error
+        envelope and consume no sequence numbers."""
+        cid = 0
+        try:
+            u = raw.view("<u4")
+            cid, n_items = int(u[1]), int(u[2])
+            if n_items <= 0 or n_items > _MAX_SCATTER:
+                raise framing.FrameError(
+                    f"scatter envelope declares {n_items} items")
+            items = []
+            ofs = 4
+            for _ in range(n_items):
+                if ofs + 4 + framing.LANES > u.size:
+                    raise framing.FrameError("truncated scatter envelope")
+                if int(u[ofs]) != GW_MAGIC:
+                    raise framing.FrameError(
+                        f"scatter item walk desynced at word {ofs}")
+                sid, token = int(u[ofs + 1]), int(u[ofs + 2])
+                hdr = ofs + 4
+                if int(u[hdr]) != framing.MAGIC:
+                    raise framing.FrameError(
+                        "scatter item is not an MPKLink frame")
+                rows = framing.frame_rows(int(u[hdr + 3]))
+                end = hdr + rows * framing.LANES
+                if end > u.size:
+                    raise framing.FrameError(
+                        f"scatter item declares {rows} rows past envelope end")
+                items.append((sid, token,
+                              u[hdr:end].reshape(rows, framing.LANES)))
+                ofs = end
+            if ofs != u.size:
+                raise framing.FrameError("trailing bytes after scatter items")
+            self._bump("scatter_envelopes")
+            self._bump_n("requests", n_items)
+            groups: "OrderedDict[int, list]" = OrderedDict()
+            for idx, (sid, token, frame) in enumerate(items):
+                groups.setdefault(sid, []).append((idx, token, frame))
+            results: list = [None] * n_items
+            pending = []
+            for sid, members in groups.items():
+                fn = (lambda s=sid, m=members: self._scatter_group(cid, s, m))
+                if self._shards:
+                    pending.append(
+                        self._shards[sid % len(self._shards)].submit(fn))
+                else:
+                    pending.append(([(True, fn())], None))
+            for box, done in pending:
+                if done is not None:
+                    done.wait()
+                ok, val = box[0]
+                if not ok:
+                    raise val       # HandlerCrash / DropResponse relayed
+                for idx, r in val:
+                    results[idx] = r
+            parts = [np.array([GW_MAGIC, _SOK, cid, n_items], "<u4")
+                     .view(np.uint8)]
+            n_ok = 0
+            for r in results:
+                if isinstance(r, BaseException):
+                    blob = _pack_error(r)
+                    pad = (-len(blob)) % 4
+                    parts.append(_route(_ERR, len(blob), 0))
+                    parts.append(np.frombuffer(blob + b"\0" * pad, np.uint8))
+                else:
+                    rf = r.reshape(-1).view(np.uint8)
+                    parts.append(_route(_OK, rf.nbytes, 0))
+                    parts.append(rf)
+                    n_ok += 1
+            self._bump_n("responses", n_ok)
+            self._bump_n("rejected", n_items - n_ok)
+            return np.concatenate(parts)
+        except Exception as e:
+            self._bump(*(("rejected", "sheds")
+                         if isinstance(e, ServiceUnavailable)
+                         else ("rejected",)))
+            blob = _pack_error(e)
+            return np.concatenate(
+                [_route(_ERR, cid, len(blob)), np.frombuffer(blob, np.uint8)])
+
     def _dispatch(self, req: np.ndarray) -> np.ndarray:
         sid = 0
         try:
@@ -616,6 +934,8 @@ class ServiceGateway:
             route = raw[:_ROUTE_BYTES].view("<u4")
             if int(route[0]) == GW_BATCH_MAGIC:
                 return self._dispatch_batch(raw)
+            if int(route[0]) == GW_SCAT_MAGIC:
+                return self._dispatch_scatter(raw)
             if int(route[0]) != GW_MAGIC:
                 raise framing.FrameError("not a gateway envelope (bad magic)")
             sid, cid, token = int(route[1]), int(route[2]), int(route[3])
@@ -648,11 +968,13 @@ class ServiceGateway:
                 resp = self._invoke(svc, chan, cid, token, fseq, payload)
                 self.registry.check(svc.server_key, WRITE)
                 self.registry.check(chan.client_key, READ)
-                rframe = framing.build_frame(
-                    resp, seed=chan.seed, seq=fseq, mac_impl=self._mac)
+                # response frame sealed in place behind the route words —
+                # ONE buffer, no build/concat chain
+                env = _seal_envelope([GW_MAGIC, _OK, sid, 0], resp,
+                                     seed=chan.seed, seq=fseq,
+                                     mac_impl=self._mac)
             self._bump("responses")
-            return np.concatenate(
-                [_route(_OK, sid, 0), rframe.reshape(-1).view(np.uint8)])
+            return env
         except Exception as e:
             self._bump(*(("rejected", "sheds")
                          if isinstance(e, ServiceUnavailable)
@@ -723,7 +1045,8 @@ class GatewayClient:
 
     def call(self, service: str, payload: np.ndarray) -> np.ndarray:
         payload = np.asarray(payload)
-        token = next(self._tokens) & 0xFFFFFFFF or next(self._tokens)
+        token = next(self._tokens) & 0xFFFFFFFF \
+            or (next(self._tokens) & 0xFFFFFFFF)
         attempts = 0
         rekeyed = False
         while True:
@@ -786,16 +1109,184 @@ class GatewayClient:
                 rekeyed = True
                 self.reopen(service)
 
+    def mint_tokens(self, n: int) -> list:
+        """``n`` fresh idempotency tokens — pass the SAME list back to
+        :meth:`call_many` on a manual retry so already-executed items are
+        answered from the dedup window instead of running twice."""
+        with self._lock:
+            # both draws masked: an unmasked wraparound fallback would
+            # truncate on the u32 wire word to a possibly-live token
+            return [next(self._tokens) & 0xFFFFFFFF
+                    or (next(self._tokens) & 0xFFFFFFFF)
+                    for _ in range(n)]
+
+    def call_many(self, items, return_exceptions: bool = False,
+                  tokens=None) -> list:
+        """Scatter call: N (service, payload) pairs in ONE envelope / ONE
+        transport round trip, executed across the gateway's worker shards —
+        with ``workers=N`` the items' handlers run concurrently per
+        service, so a slow service no longer head-of-line blocks the rest
+        of the scatter (the sequential alternative is N ``call()`` round
+        trips). Returns responses in item order; a failed item surfaces as
+        its typed exception (in place with ``return_exceptions``, else the
+        first one is raised after the scatter has drained). Every item
+        consumes a sequence number on its channel, success or failure —
+        batch discipline. Scatter calls are NOT auto-retried; to make a
+        manual retry idempotent, pre-mint tokens (:meth:`mint_tokens`) and
+        pass the same ``tokens`` list to every attempt — items whose
+        original executed are then answered from the gateway's dedup
+        window, never re-executed (omitting ``tokens`` mints fresh ones,
+        so a bare re-issue re-executes). A stale-epoch rejection surfaces
+        per item; recovery is ``reopen(service)`` + reissue."""
+        items = [(s, np.ascontiguousarray(np.asarray(p))) for s, p in items]
+        if not items:
+            return []
+        if tokens is not None and len(tokens) != len(items):
+            raise ValueError(f"{len(tokens)} tokens for {len(items)} items")
+        for service, _ in items:            # channel setup (CA-checked)
+            self.open(service)
+        if tokens is None:
+            tokens = self.mint_tokens(len(items))
+        with self._lock:
+            chans = {s: self._channels[s] for s, _ in items}
+            counts: Dict[str, int] = {}
+            seqs = []
+            for service, _ in items:
+                k = counts.get(service, 0)
+                seqs.append((chans[service].seq + k) & 0xFFFFFFFF)
+                counts[service] = k + 1
+            if framing.ZERO_COPY:
+                # whole envelope staged straight into the transport (the
+                # shared region on mpklink): route words + per-item route
+                # + frames sealed in place, with ONE fused MAC pass per
+                # channel (seeds differ across services, so the fusion is
+                # per-group)
+                rows_list = [framing.frame_rows(p.nbytes) for _, p in items]
+                total = _ROUTE_BYTES + sum(
+                    _ROUTE_BYTES + r * framing.LANES * 4 for r in rows_list)
+
+                def fill(dst, items=items, seqs=seqs, tokens=tokens,
+                         rows_list=rows_list, chans=chans):
+                    u = dst.view("<u4")
+                    u[:4] = [GW_SCAT_MAGIC, self.cid, len(items), 0]
+                    ofs = 4
+                    groups: Dict[str, list] = {}
+                    for (service, p), seq, token, rows in zip(
+                            items, seqs, tokens, rows_list):
+                        chan = chans[service]
+                        u[ofs:ofs + 4] = [GW_MAGIC, chan.sid, token, 0]
+                        buf = u[ofs + 4: ofs + 4 + rows * framing.LANES] \
+                            .reshape(rows, framing.LANES)
+                        groups.setdefault(service, []).append((buf, p, seq))
+                        ofs += 4 + rows * framing.LANES
+                    for service, members in groups.items():
+                        framing.seal_into_batch(
+                            [b for b, _, _ in members],
+                            [p for _, p, _ in members],
+                            seed=chans[service].seed,
+                            seqs=[q for _, _, q in members],
+                            mac_impl=self.gw._batch_mac)
+
+                raw = self._session.request_into(total, fill)
+            else:
+                parts = [_scatter_route(self.cid, len(items))]
+                for (service, p), seq, token in zip(items, seqs, tokens):
+                    chan = chans[service]
+                    parts.append(np.array([GW_MAGIC, chan.sid, token, 0],
+                                          "<u4").view(np.uint8))
+                    frame = framing.build_frame(p, seed=chan.seed, seq=seq,
+                                                mac_impl=self.gw._mac)
+                    parts.append(frame.reshape(-1).view(np.uint8))
+                raw = self._session.request(np.concatenate(parts))
+            resp = np.ascontiguousarray(np.asarray(raw)) \
+                .view(np.uint8).reshape(-1)
+            if resp.nbytes < _ROUTE_BYTES:
+                raise TransportError("malformed gateway response (truncated)")
+            route = resp[:_ROUTE_BYTES].view("<u4")
+            if int(route[0]) != GW_MAGIC:
+                raise TransportError("malformed gateway response (bad magic)")
+            if int(route[1]) == _ERR:       # whole-envelope failure: no item
+                _raise_remote(resp[_ROUTE_BYTES:         # consumed a seq
+                                   _ROUTE_BYTES + int(route[3])].tobytes())
+            if int(route[1]) != _SOK or int(route[3]) != len(items):
+                raise TransportError("malformed gateway scatter response")
+            results: list = [None] * len(items)
+            ofs = _ROUTE_BYTES
+            ok_by_svc: Dict[str, list] = {}     # service → (i, rframe, seq)
+            for i, ((service, _), seq) in enumerate(zip(items, seqs)):
+                if resp.nbytes < ofs + _ROUTE_BYTES:
+                    raise TransportError("truncated gateway scatter response")
+                ih = resp[ofs: ofs + _ROUTE_BYTES].view("<u4")
+                if int(ih[0]) != GW_MAGIC:
+                    raise TransportError("desynced gateway scatter response")
+                status, nb = int(ih[1]), int(ih[2])
+                body = resp[ofs + _ROUTE_BYTES: ofs + _ROUTE_BYTES + nb]
+                ofs += _ROUTE_BYTES + nb + ((-nb) % 4)
+                if status == _OK:
+                    ok_by_svc.setdefault(service, []).append(
+                        (i, body.view("<u4").reshape(-1, framing.LANES), seq))
+                else:
+                    try:
+                        _raise_remote(body.tobytes())
+                    except Exception as e:
+                        results[i] = e
+            # ONE fused verify pass per channel; a corrupted item becomes
+            # ITS typed FrameError (strict=False) — the rest of the scatter
+            # drains and the sequence advance below keeps every channel
+            # aligned with the server's positional discipline
+            for service, members in ok_by_svc.items():
+                verified = framing.verify_batch(
+                    [f for _, f, _ in members], seed=chans[service].seed,
+                    seqs=[q for _, _, q in members], strict=False,
+                    mac_impl=self.gw._batch_mac)
+                for (i, _, _), v in zip(members, verified):
+                    results[i] = v
+                    if not isinstance(v, framing.FrameError):
+                        self.macs_verified += 1
+            for service, k in counts.items():   # every item consumed a seq
+                chans[service].seq += k
+        if not return_exceptions:
+            for r in results:
+                if isinstance(r, BaseException):
+                    raise r
+        return results
+
     def _call_batch_once(self, chan: Channel, payloads,
                          return_exceptions: bool) -> list:
         with self._lock:
-            frames = framing.seal_batch(payloads, seed=chan.seed,
-                                        start_seq=chan.seq,
-                                        mac_impl=self.gw._batch_mac)
-            env = np.concatenate(
-                [_batch_route(chan.sid, self.cid, len(frames))]
-                + [f.reshape(-1).view(np.uint8) for f in frames])
-            resp = np.ascontiguousarray(np.asarray(self._session.request(env))) \
+            n = len(payloads)
+            if framing.ZERO_COPY:
+                # whole batch envelope staged straight into the transport
+                # (the shared region on mpklink): route words + N frames
+                # sealed in place with ONE fused MAC pass
+                ps = [np.ascontiguousarray(np.asarray(p)) for p in payloads]
+                rows_list = [framing.frame_rows(p.nbytes) for p in ps]
+                env_nbytes = _ROUTE_BYTES + sum(
+                    r * framing.LANES * 4 for r in rows_list)
+
+                def fill(dst, ps=ps, rows_list=rows_list, chan=chan):
+                    u = dst.view("<u4")
+                    u[:4] = [GW_BATCH_MAGIC, chan.sid, self.cid, n]
+                    bufs, ofs = [], 4
+                    for r in rows_list:
+                        bufs.append(u[ofs: ofs + r * framing.LANES]
+                                    .reshape(r, framing.LANES))
+                        ofs += r * framing.LANES
+                    framing.seal_into_batch(
+                        bufs, ps, seed=chan.seed,
+                        seqs=[chan.seq + i for i in range(n)],
+                        mac_impl=self.gw._batch_mac)
+
+                raw = self._session.request_into(env_nbytes, fill)
+            else:
+                frames = framing.seal_batch(payloads, seed=chan.seed,
+                                            start_seq=chan.seq,
+                                            mac_impl=self.gw._batch_mac)
+                env = np.concatenate(
+                    [_batch_route(chan.sid, self.cid, n)]
+                    + [f.reshape(-1).view(np.uint8) for f in frames])
+                raw = self._session.request(env)
+            resp = np.ascontiguousarray(np.asarray(raw)) \
                 .view(np.uint8).reshape(-1)
             if resp.nbytes < _ROUTE_BYTES:
                 raise TransportError("malformed gateway response (truncated)")
@@ -805,12 +1296,12 @@ class GatewayClient:
             if int(route[1]) == _ERR:       # whole-batch failure: no item
                 _raise_remote(resp[_ROUTE_BYTES:         # consumed a seq
                                    _ROUTE_BYTES + int(route[3])].tobytes())
-            if int(route[1]) != _BOK or int(route[3]) != len(frames):
+            if int(route[1]) != _BOK or int(route[3]) != n:
                 raise TransportError("malformed gateway batch response")
             start, ofs = chan.seq, _ROUTE_BYTES
-            results: list = [None] * len(frames)
+            results: list = [None] * n
             ok_frames, ok_pos = [], []
-            for i in range(len(frames)):
+            for i in range(n):
                 if resp.nbytes < ofs + _ROUTE_BYTES:
                     raise TransportError("truncated gateway batch response")
                 ih = resp[ofs: ofs + _ROUTE_BYTES].view("<u4")
@@ -837,7 +1328,7 @@ class GatewayClient:
                     results[p] = v
                     if not isinstance(v, framing.FrameError):
                         self.macs_verified += 1
-            chan.seq += len(frames)         # every item consumed a sequence
+            chan.seq += n                   # every item consumed a sequence
         if not return_exceptions:
             for r in results:
                 if isinstance(r, BaseException):
@@ -847,11 +1338,29 @@ class GatewayClient:
     def _call_once(self, chan: Channel, payload: np.ndarray,
                    token: int = 0) -> np.ndarray:
         with self._lock:
-            frame = framing.build_frame(payload, seed=chan.seed,
-                                        seq=chan.seq, mac_impl=self.gw._mac)
-            env = np.concatenate([_route(chan.sid, self.cid, token),
-                                  frame.reshape(-1).view(np.uint8)])
-            resp = np.ascontiguousarray(np.asarray(self._session.request(env))) \
+            if framing.ZERO_COPY:
+                # fully zero-copy send: route words + the sealed gateway
+                # frame are written straight into the transport's staging
+                # storage (the shared region on mpklink) — the envelope is
+                # never materialized in its own buffer
+                p = np.ascontiguousarray(np.asarray(payload))
+                frows = framing.frame_rows(p.nbytes)
+                env_nbytes = _ROUTE_BYTES + frows * framing.LANES * 4
+
+                def fill(dst, p=p, frows=frows, chan=chan, token=token):
+                    u = dst.view("<u4")
+                    u[:4] = [GW_MAGIC, chan.sid, self.cid, token]
+                    framing.seal_into(
+                        u[4:].reshape(frows, framing.LANES), p,
+                        seed=chan.seed, seq=chan.seq, mac_impl=self.gw._mac)
+
+                raw = self._session.request_into(env_nbytes, fill)
+            else:
+                env = _seal_envelope([GW_MAGIC, chan.sid, self.cid, token],
+                                     payload, seed=chan.seed, seq=chan.seq,
+                                     mac_impl=self.gw._mac)
+                raw = self._session.request(env)
+            resp = np.ascontiguousarray(np.asarray(raw)) \
                 .view(np.uint8).reshape(-1)
             if resp.nbytes < _ROUTE_BYTES:
                 raise TransportError("malformed gateway response (truncated)")

@@ -46,6 +46,15 @@ are verified/sealed in one vectorized pass (framing.verify_batch/
 seal_batch). Stream transports (pipe/uds/grpc_sim) keep the same API
 through a lockstep fallback so callers never special-case.
 
+Zero-copy data plane (this file's arena refactor): each transport owns a
+shared :class:`framing.FrameArena`; the shm/mpklink/mpklink_opt sessions
+stage messages straight into recycled arena slots (submit seals in place
+— one payload write), hand responses back as read-only views whose slots
+recycle only after the view dies, and seal lockstep frames directly into
+the shared regions (``request_into`` even lets the caller assemble its
+message inside the region). ``framing.ZERO_COPY = False`` restores the
+PR 3 copy pattern for A/B benchmarking — bit-identical frames either way.
+
 Failure model: handler exceptions and capacity overflows are propagated to
 the *calling* client as typed exceptions (never swallowed in the service
 thread), and blocking-wait transports (shm, mpklink) bound their response
@@ -79,8 +88,6 @@ from repro.core import framing
 from repro.core.ca import CertificateAuthority, enroll
 from repro.core.domains import (AccessViolation, KeyRegistry, READ, WRITE,
                                 RW, mac_seed)
-from repro.kernels.ref import MAC_PRIME, MAC_INIT, _FOLD_POWERS
-
 Handler = Callable[[np.ndarray], np.ndarray]
 
 
@@ -151,19 +158,38 @@ def _raise_remote(blob: bytes):
 
 def fast_mac(payload_u32: np.ndarray, seed: int, block_rows: int = 65536) -> int:
     """Horner hash over rows, vectorized: h_n = INIT·P^n + Σ row_r·P^(n-1-r).
-    uint64 wraparound keeps the low 32 bits exact (2^32 | 2^64).
-    Bit-identical to framing._mac_np (tests/test_framing.py asserts it)."""
+    A thin composition of framing's streaming helpers (init → block updates
+    with hoisted power tables → fold), so the one-shot and chunked paths
+    cannot diverge. All arithmetic runs natively in uint32 (wraparound mod
+    2^32 IS the MAC's modulus). Bit-identical to framing._mac_np (tests
+    assert it)."""
+    if not framing.ZERO_COPY:       # A/B baseline: the full PR 3 data plane
+        return legacy_fast_mac(payload_u32, seed, block_rows)
     n = payload_u32.shape[0]
-    h = (np.full(framing.LANES, MAC_INIT, np.uint64) + np.uint64(seed & 0xFFFFFFFF))
+    h = framing.mac_init_np(seed)
+    for s in range(0, n, block_rows):
+        h = framing.mac_update_np(h, payload_u32[s:s + block_rows])
+    return framing.mac_finalize_np(h)
+
+
+def legacy_fast_mac(payload_u32: np.ndarray, seed: int,
+                    block_rows: int = 65536) -> int:
+    """The PR 3 fast_mac, verbatim: per-block cumprod power recomputation
+    and a materialized (m, LANES) uint64 product. Bit-identical to
+    :func:`fast_mac`, which routes here when ``framing.ZERO_COPY=False``
+    (the measured PR 3 baseline for the A/B cells in gateway_bench)."""
+    from repro.kernels.ref import MAC_PRIME, MAC_INIT, _FOLD_POWERS
+    n = payload_u32.shape[0]
+    h = (np.full(framing.LANES, MAC_INIT, np.uint64)
+         + np.uint64(seed & 0xFFFFFFFF))
     with np.errstate(over="ignore"):
         for s in range(0, n, block_rows):
             blk = payload_u32[s:s + block_rows].astype(np.uint64)
             m = blk.shape[0]
-            # pw = [P^(m-1), ..., P, 1]
             pw = np.full(m, MAC_PRIME, np.uint64)
             pw[0] = 1
             pw = np.cumprod(pw)[::-1]
-            p_m = np.uint64((int(pw[0]) * MAC_PRIME) & 0xFFFFFFFFFFFFFFFF)  # P^m
+            p_m = np.uint64((int(pw[0]) * MAC_PRIME) & 0xFFFFFFFFFFFFFFFF)
             h = (h * p_m + (blk * pw[:, None]).sum(axis=0, dtype=np.uint64)) \
                 & np.uint64(0xFFFFFFFF)
     return int((h * _FOLD_POWERS.astype(np.uint64)).sum(dtype=np.uint64)
@@ -241,8 +267,10 @@ _FREE, _STAGED, _PUBLISHED, _DONE, _DROPPED = range(5)
 
 class _RingSlot:
     """One message slot: request/response storage + status + typed error.
-    shm sessions fill ``req``/``resp`` byte buffers; mpklink sessions carry
-    whole MAC'd frames in ``frame``/``resp_frame``."""
+    shm sessions fill ``req``/``resp`` with arena slot buffers holding raw
+    bytes; mpklink sessions carry whole MAC'd frames in
+    ``frame``/``resp_frame`` (views into the arena buffers in
+    ``req``/``resp`` on the zero-copy path)."""
 
     __slots__ = ("state", "ticket", "req", "req_len", "resp", "resp_len",
                  "frame", "resp_frame", "seq", "error")
@@ -387,6 +415,18 @@ class Session:
         response (or its typed error). One in flight per session."""
         raise NotImplementedError
 
+    def request_into(self, nbytes: int, fill) -> np.ndarray:
+        """Zero-copy producer exchange: the caller's ``fill(dst)`` writes
+        the ``nbytes`` message directly into the transport's staging
+        storage (a uint8 view of the shared region on mpklink — the
+        message is never materialized in a separate buffer), then the
+        exchange proceeds like :meth:`request`. This base fallback
+        materializes one buffer for transports without in-place staging,
+        so callers never special-case."""
+        buf = np.empty(nbytes, np.uint8)
+        fill(buf)
+        return self.request(buf)
+
     # -- pipelined API (ring transports override; base = lockstep fallback) --
     def submit(self, payload: np.ndarray) -> int:
         """Stage one request; returns a ticket redeemable with
@@ -497,7 +537,13 @@ class Session:
 
 class Transport:
     """Base: a service handler plus N client sessions (threads of one
-    process — the paper's co-located microservice design)."""
+    process — the paper's co-located microservice design).
+
+    ``arena`` is the transport-wide :class:`framing.FrameArena`: a
+    recycling pool of slot-sized frame buffers shared by every session's
+    ring, so the steady-state pipelined data plane stages requests and
+    responses without allocating (shm slots hold raw bytes in arena
+    buffers; mpklink slots hold sealed frames)."""
 
     name = "?"
     DEFAULT_RING_SLOTS = 8              # in-flight messages per session ring
@@ -507,6 +553,7 @@ class Transport:
         self.handler = handler
         self.timeout = timeout          # client-side response deadline
         self.ring_slots = ring_slots or self.DEFAULT_RING_SLOTS
+        self.arena = framing.FrameArena()
         self._sessions: List[Session] = []
         self._slock = threading.Lock()
         self._default: Optional[Session] = None
@@ -796,15 +843,15 @@ class ShmSession(Session):
             self._resp_len = 0
         self._resp_ready.set()
 
-    # -- ring (pipelined) path --------------------------------------------
+    # -- ring (pipelined) path: slots are recycled arena buffers -----------
     def _ring_obj(self) -> _Ring:
         if self._ring is None:
-            ring = _Ring(self.transport.ring_slots)
-            for s in ring.slots:
-                s.req = np.zeros(self.capacity, np.uint8)
-                s.resp = np.zeros(self.capacity, np.uint8)
-            self._ring = ring
+            self._ring = _Ring(self.transport.ring_slots)
         return self._ring
+
+    @staticmethod
+    def _bytes_rows(nbytes: int) -> int:
+        return -(-nbytes // (framing.LANES * 4))
 
     def submit(self, payload: np.ndarray) -> int:
         self._check_usable()
@@ -814,17 +861,25 @@ class ShmSession(Session):
             raise CapacityError(
                 f"shm region ({self.capacity}B) cannot hold {raw.nbytes}B payload")
         ring = self._ring_obj()
+        with ring.cv:                   # cheap backpressure reject BEFORE
+            if ring.slots[self._tickets % ring.capacity].state != _FREE:
+                raise CapacityError(    # paying for a slot + payload copy
+                    f"ring full ({ring.capacity} messages in flight) — "
+                    f"poll() before submitting more")
+        buf = self.transport.arena.acquire(self._bytes_rows(raw.nbytes))
+        buf.reshape(-1).view(np.uint8)[: raw.nbytes] = raw
         with ring.cv:
             t = self._tickets
             slot = ring.slots[t % ring.capacity]
-            if slot.state != _FREE:
+            if slot.state != _FREE:     # re-check: sessions are serial per
+                self.transport.arena.release(buf)   # client, but stay safe
                 raise CapacityError(
                     f"ring full ({ring.capacity} messages in flight) — "
                     f"poll() before submitting more")
             self._tickets += 1
             self._outstanding.add(t)
             slot.ticket = t
-            slot.req[: raw.nbytes] = raw
+            slot.req = buf
             slot.req_len = raw.nbytes
             slot.error = None
             slot.state = _STAGED
@@ -847,13 +902,14 @@ class ShmSession(Session):
         ring = self._ring
         if ring is None:
             return
+        arena = self.transport.arena
         while True:
             with ring.cv:
                 slot = ring.slots[ring.head % ring.capacity]
                 if slot.state != _PUBLISHED or slot.ticket != ring.head:
                     return
-                req = slot.req[: slot.req_len]
-            error = resp = None
+                req = slot.req.reshape(-1).view(np.uint8)[: slot.req_len]
+            error = resp = rbuf = None
             try:                        # handler outside the ring lock
                 resp = np.ascontiguousarray(self.handler(req)) \
                     .view(np.uint8).reshape(-1)
@@ -861,16 +917,22 @@ class ShmSession(Session):
                     raise CapacityError(
                         f"shm region ({self.capacity}B) cannot hold "
                         f"{resp.nbytes}B response")
+                rbuf = arena.acquire(self._bytes_rows(resp.nbytes))
+                rbuf.reshape(-1).view(np.uint8)[: resp.nbytes] = resp
             except DropResponse:        # injected wire drop: this slot never
                 with ring.cv:           # completes; its poll() must expire
+                    arena.release(slot.req)
+                    slot.req = None
                     slot.state = _DROPPED
                     ring.head += 1
                 continue
             except Exception as e:
                 error = e
             with ring.cv:
+                arena.release(slot.req)     # request consumed by the handler
+                slot.req = None
                 if error is None:
-                    slot.resp[: resp.nbytes] = resp
+                    slot.resp = rbuf
                     slot.resp_len = resp.nbytes
                 else:
                     slot.error = error
@@ -880,7 +942,14 @@ class ShmSession(Session):
                 ring.cv.notify_all()
 
     def _slot_take(self, slot: _RingSlot):
-        return slot.resp[: slot.resp_len].copy()
+        """Hand the response back as a read-only view of the arena buffer;
+        the buffer recycles when the view is garbage-collected, so a live
+        view can never alias a reused slot."""
+        buf, slot.resp = slot.resp, None
+        out = buf.reshape(-1).view(np.uint8)[: slot.resp_len]
+        out.flags.writeable = False
+        self.transport.arena.release_on_collect(out, buf)
+        return out
 
     def poll(self, ticket: int, timeout: Optional[float] = None) -> np.ndarray:
         self._check_pollable()
@@ -1149,10 +1218,13 @@ class MPKLinkSession(Session):
             self._drain_ring()                     # published ring slots
             if not final:
                 continue
-            # full frame visible → verify + handle + respond
+            # full frame visible → verify + handle + respond. The request
+            # is handed to the handler as a read-only zero-copy view of the
+            # region; the response is sealed directly into the response
+            # region (no intermediate frame buffer)
             self.registry.check(self.key_server, READ)
             try:
-                req = framing.parse_frame(self._region_req[: self._req_rows],
+                req = framing.verify_view(self._region_req[: self._req_rows],
                                           seed=self.seed, expect_seq=self._seq,
                                           mac_impl=self._mac)
             except framing.FrameError:
@@ -1171,12 +1243,15 @@ class MPKLinkSession(Session):
                 self._resp_rows = 0
                 self._resp_ready.set()
                 continue
-            rframe = framing.build_frame(resp, seed=self.seed, seq=self._seq,
-                                         mac_impl=self._mac)
-            rows = rframe.shape[0]
+            rows = framing.frame_rows(resp.nbytes)
             if self._region_resp.shape[0] < rows:
                 self._region_resp = np.zeros((rows, framing.LANES), np.uint32)
-            self._region_resp[:rows] = rframe
+            if framing.ZERO_COPY:
+                framing.seal_into(self._region_resp, resp, seed=self.seed,
+                                  seq=self._seq, mac_impl=self._mac)
+            else:
+                self._region_resp[:rows] = framing.build_frame(
+                    resp, seed=self.seed, seq=self._seq, mac_impl=self._mac)
             self._resp_rows = rows
             self.sync_count += 1                   # response-side key sync
             self.transport._bump_sync()
@@ -1206,17 +1281,54 @@ class MPKLinkSession(Session):
         # through many more sessions than the key-table size
         self.registry.free_domain(self.domain)
 
-    def request(self, payload: np.ndarray) -> np.ndarray:
-        self._check_usable()
-        frame = framing.build_frame(payload, seed=self.seed, seq=self._seq,
-                                    mac_impl=self._mac)
-        rows = frame.shape[0]
+    def _grow_req(self, rows: int):
         if self._region_req.shape[0] < rows:
             self._region_req = np.zeros((rows, framing.LANES), np.uint32)
+
+    def request(self, payload: np.ndarray) -> np.ndarray:
+        self._check_usable()
+        payload = np.ascontiguousarray(np.asarray(payload))
+        rows = framing.frame_rows(payload.nbytes)
+        self._grow_req(rows)
+        if framing.ZERO_COPY:
+            # zero-copy seal: header + payload + MAC land directly in the
+            # shared region — no intermediate frame materialization. The
+            # per-chunk key-sync schedule is unchanged (the paper's
+            # measured cost model is the sync COUNT, not the copy schedule)
+            framing.seal_into(self._region_req, payload, seed=self.seed,
+                              seq=self._seq, mac_impl=self._mac)
+            return self._exchange(rows)
+        frame = framing.build_frame(payload, seed=self.seed,
+                                    seq=self._seq, mac_impl=self._mac)
+        return self._exchange(rows, legacy_frame=frame)
+
+    def request_into(self, nbytes: int, fill) -> np.ndarray:
+        """Fully zero-copy producer path: ``fill(dst)`` writes the message
+        straight into the request region's payload bytes, which are then
+        pad-zeroed, MAC'd in place and headed (framing.seal_prefilled) —
+        the message is never materialized outside the shared region."""
+        self._check_usable()
+        if not framing.ZERO_COPY:
+            buf = np.empty(nbytes, np.uint8)
+            fill(buf)
+            return self.request(buf)
+        rows = framing.frame_rows(nbytes)
+        self._grow_req(rows)
+        body = self._region_req[1:rows].reshape(-1).view(np.uint8)[:nbytes]
+        fill(body)      # the filler accounts its own writes (STATS)
+        framing.seal_prefilled(self._region_req, nbytes, seed=self.seed,
+                               seq=self._seq, mac_impl=self._mac)
+        return self._exchange(rows)
+
+    def _exchange(self, rows: int,
+                  legacy_frame: Optional[np.ndarray] = None) -> np.ndarray:
+        """The chunk-sync publish loop + bounded response wait + response
+        guard, shared by request()/request_into()."""
         chunk_rows = max(1, self.chunk // (framing.LANES * 4))
         for s in range(0, rows, chunk_rows):
             e = min(rows, s + chunk_rows)
-            self._region_req[s:e] = frame[s:e]
+            if legacy_frame is not None:
+                self._region_req[s:e] = legacy_frame[s:e]
             self._req_rows = rows
             self._final = e >= rows
             self._sync_key(self.key_client, WRITE)
@@ -1234,7 +1346,9 @@ class MPKLinkSession(Session):
                 raise err
             raise TransportError("server rejected frame (guard failure)")
         self.registry.check(self.key_client, READ)
-        out = framing.parse_frame(self._region_resp[: self._resp_rows],
+        # read-only view into the response region — valid until the next
+        # exchange on this session overwrites it (the session is serial)
+        out = framing.verify_view(self._region_resp[: self._resp_rows],
                                   seed=self.seed, expect_seq=self._seq,
                                   mac_impl=self._mac)
         self._seq += 1
@@ -1246,17 +1360,21 @@ class MPKLinkSession(Session):
             self._ring = _Ring(self.transport.ring_slots)
         return self._ring
 
-    def _stage_frame(self, frame: np.ndarray) -> int:
+    def _stage_frame(self, frame: np.ndarray, buf=None) -> int:
         """Write one sealed frame into the next free slot (STAGED — not yet
         visible to the service; flush() publishes). The slot remembers the
         frame's sequence number so the drain verifies exactly what the
-        client committed to."""
+        client committed to. ``buf`` is the arena buffer backing ``frame``
+        (recycled once the service has consumed the request); externally
+        built frames pass None."""
         self._check_usable()
         ring = self._ring_obj()
         with ring.cv:
             t = self._tickets
             slot = ring.slots[t % ring.capacity]
             if slot.state != _FREE:
+                if buf is not None:
+                    self.transport.arena.release(buf)
                 raise CapacityError(
                     f"ring full ({ring.capacity} messages in flight) — "
                     f"poll() before submitting more")
@@ -1264,15 +1382,32 @@ class MPKLinkSession(Session):
             self._outstanding.add(t)
             slot.ticket = t
             slot.frame = frame
+            slot.req = buf
             slot.seq = self._seq
             slot.error = None
             slot.resp_frame = None
+            slot.resp = None
             slot.state = _STAGED
         self._seq += 1
         return t
 
     def submit(self, payload: np.ndarray) -> int:
-        frame = framing.build_frame(np.asarray(payload), seed=self.seed,
+        payload = np.asarray(payload)
+        if framing.ZERO_COPY:
+            ring = self._ring_obj()
+            with ring.cv:               # cheap backpressure reject BEFORE
+                if ring.slots[self._tickets % ring.capacity].state != _FREE:
+                    raise CapacityError(    # paying for a slot + seal + MAC
+                        f"ring full ({ring.capacity} messages in flight) — "
+                        f"poll() before submitting more")
+            # stage the frame straight into a recycled arena slot: one
+            # payload write, no build/concat staging
+            buf = self.transport.arena.acquire(
+                framing.frame_rows(np.ascontiguousarray(payload).nbytes))
+            rows = framing.seal_into(buf, payload, seed=self.seed,
+                                     seq=self._seq, mac_impl=self._mac)
+            return self._stage_frame(buf[:rows], buf=buf)
+        frame = framing.build_frame(payload, seed=self.seed,
                                     seq=self._seq, mac_impl=self._mac)
         return self._stage_frame(frame)
 
@@ -1317,6 +1452,7 @@ class MPKLinkSession(Session):
                     ring.head += 1
             if not batch:
                 return
+            arena = self.transport.arena
             self.registry.check(self.key_server, READ)
             parsed = framing.verify_batch(
                 [s.frame for s in batch], seed=self.seed,
@@ -1327,6 +1463,8 @@ class MPKLinkSession(Session):
             for slot, res in zip(batch, parsed):
                 if isinstance(res, framing.FrameError):
                     with ring.cv:
+                        arena.release(slot.req)
+                        slot.req = None
                         slot.error = res
                         slot.state = _DONE
                         ring.cv.notify_all()
@@ -1336,10 +1474,14 @@ class MPKLinkSession(Session):
                         .view(np.uint8).reshape(-1)
                 except DropResponse:    # injected wire drop: never completes
                     with ring.cv:
+                        arena.release(slot.req)
+                        slot.req = None
                         slot.state = _DROPPED
                     continue
                 except Exception as e:
                     with ring.cv:
+                        arena.release(slot.req)
+                        slot.req = None
                         slot.error = e
                         slot.state = _DONE
                         ring.cv.notify_all()
@@ -1347,26 +1489,44 @@ class MPKLinkSession(Session):
                 ok_slots.append(slot)
                 responses.append(resp)
             if ok_slots:
-                rframes = framing.seal_batch(
-                    responses, seed=self.seed,
-                    seqs=[s.seq for s in ok_slots],
-                    mac_impl=self._batch_mac)
+                if framing.ZERO_COPY:
+                    # responses sealed straight into recycled arena slots,
+                    # MACs still ONE fused vectorized pass
+                    rbufs = [arena.acquire(framing.frame_rows(r.nbytes))
+                             for r in responses]
+                    rows_list = framing.seal_into_batch(
+                        rbufs, responses, seed=self.seed,
+                        seqs=[s.seq for s in ok_slots],
+                        mac_impl=self._batch_mac)
+                    rframes = [b[:r] for b, r in zip(rbufs, rows_list)]
+                else:
+                    rbufs = [None] * len(ok_slots)
+                    rframes = framing.seal_batch(
+                        responses, seed=self.seed,
+                        seqs=[s.seq for s in ok_slots],
+                        mac_impl=self._batch_mac)
                 self.sync_count += 1    # ONE response-side key sync for the
                 self.transport._bump_sync()      # whole drained batch
                 with ring.cv:
-                    for slot, rf in zip(ok_slots, rframes):
+                    for slot, rf, rb in zip(ok_slots, rframes, rbufs):
+                        # request slot consumed (a response that aliased the
+                        # request payload has been copied out by the seal)
+                        arena.release(slot.req)
+                        slot.req = None
                         slot.resp_frame = rf
+                        slot.resp = rb
                         slot.state = _DONE
                     ring.cv.notify_all()
 
     def _slot_take(self, slot: _RingSlot):
         rframe, slot.resp_frame = slot.resp_frame, None
-        return rframe, slot.seq
+        rbuf, slot.resp = slot.resp, None
+        return rframe, slot.seq, rbuf
 
     def _collect(self, ticket: int, timeout: Optional[float] = None):
         """Wait for ``ticket``'s slot to complete; return its raw response
-        (frame, seq) — MAC not yet verified; poll()/call_batch() do that,
-        scalar or vectorized. Frees the slot."""
+        (frame, seq, arena_buf) — MAC not yet verified; poll()/call_batch()
+        do that, scalar or vectorized. Frees the slot."""
         err, extracted = self._ring_redeem(ticket, timeout)
         if err is not None:
             raise err
@@ -1375,10 +1535,17 @@ class MPKLinkSession(Session):
     def poll(self, ticket: int, timeout: Optional[float] = None) -> np.ndarray:
         self._check_pollable()
         self.flush()                    # poll implies publish
-        rframe, seq = self._collect(ticket, timeout)
+        rframe, seq, rbuf = self._collect(ticket, timeout)
         self.registry.check(self.key_client, READ)
-        return framing.parse_frame(rframe, seed=self.seed, expect_seq=seq,
-                                   mac_impl=self._mac)
+        try:
+            out = framing.verify_view(rframe, seed=self.seed, expect_seq=seq,
+                                      mac_impl=self._mac)
+        except framing.FrameError:
+            self.transport.arena.release(rbuf)
+            raise
+        if rbuf is not None:            # slot recycles when the view dies
+            self.transport.arena.release_on_collect(out, rbuf)
+        return out
 
     def call_batch(self, payloads, return_exceptions: bool = False):
         """Ring-pipelined batch: frames are sealed in one vectorized MAC
@@ -1390,11 +1557,24 @@ class MPKLinkSession(Session):
         out: List = []
         first: Optional[BaseException] = None
         for start in range(0, len(payloads), cap):
-            window = [np.asarray(p) for p in payloads[start:start + cap]]
-            frames = framing.seal_batch(window, seed=self.seed,
-                                        start_seq=self._seq,
-                                        mac_impl=self._batch_mac)
-            tickets = [self._stage_frame(f) for f in frames]
+            window = [np.ascontiguousarray(np.asarray(p))
+                      for p in payloads[start:start + cap]]
+            if framing.ZERO_COPY:
+                # one fused MAC pass, frames sealed straight into arena slots
+                arena = self.transport.arena
+                bufs = [arena.acquire(framing.frame_rows(p.nbytes))
+                        for p in window]
+                rows_list = framing.seal_into_batch(
+                    bufs, window, seed=self.seed,
+                    seqs=[self._seq + i for i in range(len(window))],
+                    mac_impl=self._batch_mac)
+                tickets = [self._stage_frame(b[:r], buf=b)
+                           for b, r in zip(bufs, rows_list)]
+            else:
+                frames = framing.seal_batch(window, seed=self.seed,
+                                            start_seq=self._seq,
+                                            mac_impl=self._batch_mac)
+                tickets = [self._stage_frame(f) for f in frames]
             self.flush()
             collected: List = []
             for t in tickets:
@@ -1407,11 +1587,15 @@ class MPKLinkSession(Session):
             if ok:
                 self.registry.check(self.key_client, READ)
                 verified = framing.verify_batch(
-                    [f for _, (f, _) in ok], seed=self.seed,
-                    seqs=[q for _, (_, q) in ok], strict=False,
+                    [f for _, (f, _, _) in ok], seed=self.seed,
+                    seqs=[q for _, (_, q, _) in ok], strict=False,
                     mac_impl=self._batch_mac)
-                for (i, _), v in zip(ok, verified):
+                for (i, (_, _, rbuf)), v in zip(ok, verified):
                     collected[i] = v
+                    if isinstance(v, framing.FrameError):
+                        self.transport.arena.release(rbuf)
+                    elif rbuf is not None:  # recycle when the view dies
+                        self.transport.arena.release_on_collect(v, rbuf)
             for item in collected:
                 if isinstance(item, BaseException) and first is None:
                     first = item

@@ -27,6 +27,15 @@ one VMEM Horner state per frame, N MAC words out. :func:`mac_batch_jnp` is
 the shape-polymorphic jnp twin. Both are bit-identical to
 ``core.framing.mac_batch`` (the host path the transports use) and to the
 scalar ``ref.mac_ref`` — tests/test_batching.py asserts all four agree.
+
+Streaming variant (the zero-copy seal path): :func:`mac_init_state` /
+:func:`mac_update_pallas` / :func:`mac_update_jnp` / :func:`mac_finalize`
+expose the Horner recurrence as an explicit running state, so a large
+payload is MAC'd block-wise as each chunk lands in the region — no staging
+copy of the whole message. Feeding the blocks of a payload through
+``mac_update`` and folding with ``mac_finalize`` is bit-identical to one
+``mac_ref`` pass over the concatenation (tests/test_zero_copy.py asserts
+it for pallas, jnp and the host twins in ``core.framing``).
 """
 from __future__ import annotations
 
@@ -184,4 +193,83 @@ def mac_batch_jnp(stack_u32, tag):
     h0 = jnp.full((n, LANES), MAC_INIT, jnp.uint32) + tag.astype(jnp.uint32)
     h, _ = jax.lax.scan(row_step, h0, stack_u32.transpose(1, 0, 2))
     return jnp.sum(h * jnp.asarray(FOLD_POWERS)[None, :], axis=1,
+                   dtype=jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# streaming MAC: explicit running state, blocks MAC'd as they land
+# ---------------------------------------------------------------------------
+
+def mac_init_state(tag) -> jnp.ndarray:
+    """Fresh (LANES,) uint32 Horner state for a channel ``tag`` — the
+    device twin of ``core.framing.mac_init_np``."""
+    return (jnp.full((LANES,), MAC_INIT, jnp.uint32)
+            + jnp.asarray(tag).astype(jnp.uint32))
+
+
+def mac_update_jnp(h, block_u32) -> jnp.ndarray:
+    """Advance a (LANES,) uint32 Horner state over an (m, 128) uint32
+    block: the shape-polymorphic twin of :func:`mac_update_pallas`."""
+    assert block_u32.dtype == jnp.uint32 and block_u32.shape[-1] == LANES
+
+    def row_step(acc, row):
+        return acc * jnp.uint32(MAC_PRIME) + row, None
+
+    h, _ = jax.lax.scan(row_step, h.astype(jnp.uint32), block_u32)
+    return h
+
+
+def _mac_update_kernel(h_ref, in_ref, out_ref, acc, *, rows_per_tile):
+    i = pl.program_id(0)
+    n = pl.num_programs(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc[...] = h_ref[...].reshape(1, LANES)
+
+    tile = in_ref[...]                                  # (rows, 128) uint32
+    a = acc[0, :]
+    for r in range(rows_per_tile):                      # static unroll
+        a = a * MAC_PRIME + tile[r, :]
+    acc[0, :] = a
+
+    @pl.when(i == n - 1)
+    def _final():
+        out_ref[...] = acc[0, :]
+
+
+def mac_update_pallas(h, block_u32, *, rows_per_tile=256, interpret=True):
+    """Advance a (LANES,) uint32 Horner state over an (m, 128) uint32
+    block in one launch. The state rides in VMEM scratch across row tiles
+    exactly like the one-shot kernels — this is the same schedule with the
+    init/fold peeled off, so ``mac_finalize(update(update(init, b0), b1))``
+    is bit-identical to ``mac_ref(concat(b0, b1))`` for any block split.
+    ``m`` is snapped down to a divisor tile (padding would change the
+    Horner MAC); an empty block returns the state unchanged."""
+    m, lanes = block_u32.shape
+    assert lanes == LANES and block_u32.dtype == jnp.uint32
+    if m == 0:
+        return h.astype(jnp.uint32)
+    rt = min(rows_per_tile, m)
+    while m % rt:
+        rt -= 1
+    kernel = functools.partial(_mac_update_kernel, rows_per_tile=rt)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // rt,),
+        in_specs=[
+            pl.BlockSpec((LANES,), lambda i: (0,)),     # running state
+            pl.BlockSpec((rt, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((LANES,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((LANES,), jnp.uint32),
+        scratch_shapes=[pltpu.VMEM((1, LANES), jnp.uint32)],
+        interpret=interpret,
+    )(h.astype(jnp.uint32), block_u32)
+
+
+def mac_finalize(h) -> jnp.ndarray:
+    """Fold a (LANES,) Horner state to the single uint32 MAC word
+    (Σ h_i·P^(127-i) — one vector multiply-add, shared by every impl)."""
+    return jnp.sum(h.astype(jnp.uint32) * jnp.asarray(FOLD_POWERS),
                    dtype=jnp.uint32)

@@ -112,3 +112,33 @@ def guard_mac_batch(stack_u32, tag, *, rows_per_tile=256, impl="pallas",
         return mac_batch_pallas(stack_u32, tag, rows_per_tile=rows_per_tile,
                                 interpret=interpret)
     raise ValueError(f"unknown guard_mac_batch impl {impl!r}")
+
+
+def guard_mac_init(tag):
+    """Fresh (LANES,) uint32 streaming-MAC state for ``tag``."""
+    from repro.kernels.mpk_guard import mac_init_state
+    return mac_init_state(tag)
+
+
+def guard_mac_update(h, block_u32, *, rows_per_tile=256, impl="pallas",
+                     interpret=True):
+    """Advance a streaming-MAC state over one (m, 128) uint32 block.
+
+    The device side of the zero-copy seal path: a payload too large to
+    stage is MAC'd block-wise as each chunk lands, with the Horner state
+    carried between launches. ``impl="jnp"`` is the shape-polymorphic twin.
+    Both are bit-identical to the one-shot ``mac_ref`` over the
+    concatenated blocks (and to ``core.framing.mac_update_np``)."""
+    from repro.kernels.mpk_guard import mac_update_jnp, mac_update_pallas
+    if impl == "jnp" or block_u32.shape[0] == 0:
+        return mac_update_jnp(h, block_u32)
+    if impl == "pallas":
+        return mac_update_pallas(h, block_u32, rows_per_tile=rows_per_tile,
+                                 interpret=interpret)
+    raise ValueError(f"unknown guard_mac_update impl {impl!r}")
+
+
+def guard_mac_finalize(h):
+    """Fold a streaming-MAC state to the single uint32 MAC word."""
+    from repro.kernels.mpk_guard import mac_finalize
+    return mac_finalize(h)

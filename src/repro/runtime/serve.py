@@ -285,10 +285,19 @@ class EngineService:
     # -- service handler (called from N transport/gateway threads) ----------
     @staticmethod
     def _parse_req(req: np.ndarray):
-        """Wire payload int32 ``[max_new, tok0, ...]`` → (max_new, prompt)."""
+        """Wire payload int32 ``[max_new, tok0, ...]`` → (max_new, prompt).
+
+        The zero-copy data plane hands requests in as read-only views of a
+        transport region/arena slot; a contiguous whole-word payload is
+        reinterpreted in place (no tobytes() snapshot — the prompt ints are
+        consumed before the handler returns, within the view's lifetime)."""
         arr = np.asarray(req)
         if arr.dtype != np.int32:
-            arr = np.frombuffer(np.ascontiguousarray(arr).tobytes(), np.int32)
+            if arr.flags.c_contiguous and arr.nbytes % 4 == 0:
+                arr = arr.reshape(-1).view(np.uint8).view(np.int32)
+            else:
+                arr = np.frombuffer(np.ascontiguousarray(arr).tobytes(),
+                                    np.int32)
         arr = arr.reshape(-1)
         if arr.size < 2:
             raise ValueError("inference request needs [max_new, tok0, ...]")

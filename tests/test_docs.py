@@ -46,12 +46,13 @@ def test_readme_links_every_doc():
 def test_protocol_spec_matches_code_constants():
     """The normative spec quotes magics/constants — keep them honest."""
     from repro.core import framing
-    from repro.core.gateway import GW_BATCH_MAGIC, GW_MAGIC
+    from repro.core.gateway import GW_BATCH_MAGIC, GW_MAGIC, GW_SCAT_MAGIC
 
     spec = (ROOT / "docs" / "protocol.md").read_text()
     assert f"0x{framing.MAGIC:08X}" in spec
     assert f"0x{GW_MAGIC:08X}" in spec
     assert f"0x{GW_BATCH_MAGIC:08X}" in spec
+    assert f"0x{GW_SCAT_MAGIC:08X}" in spec
     assert "LANES = 128" in spec
     from repro.kernels.ref import MAC_INIT, MAC_PRIME
     assert f"0x{MAC_PRIME:08X}".replace("0X", "0x") in spec \
@@ -81,6 +82,19 @@ def test_committed_benchmark_jsons_match_docs_claims():
     assert gw["all_macs_verified"] is True
     assert gw.get("batch_gate_mpklink_opt_2x") is True
     assert gw["batch_speedup_16_over_lockstep"]["mpklink_opt/wordcount"] >= 2.0
+    # PR 4 gates: zero-copy seal path + sharded scatter executor
+    assert gw.get("zero_copy_gate_mpklink_opt_1p5x") is True
+    assert gw.get("scatter_gate_workers4_2x") is True
+    assert gw["scatter_speedup_vs_sequential"]["workers4"] >= 2.0
+    zc_k4 = [v for k, v in gw["zero_copy_speedup"].items()
+             if k.startswith("mpklink_opt/") and k.endswith("/k4")]
+    assert zc_k4 and min(zc_k4) >= 1.5
+    # the zero-copy cells really are concat-free on the request path
+    for cell in gw["payload_results"]:
+        if cell["mode"] == "zero_copy":
+            assert cell["concat_calls_per_request"] == 0, cell
+            assert cell["bytes_copied_per_request"] \
+                < 1.2 * cell["payload_bytes"] + 4096, cell
     chaos = json.loads((ROOT / "benchmarks" / "results"
                         / "chaos_bench.json").read_text())
     gates = chaos["gates"]

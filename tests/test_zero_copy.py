@@ -1,0 +1,723 @@
+"""Zero-copy data plane + sharded executor: the PR-4 surface end to end.
+
+Framing: ``seal_into``/``verify_view`` are bit-identical to
+``build_frame``/``parse_frame`` for every dtype, into dirty recycled
+buffers, with the pad tail MAC-covered; arena slots recycle without
+aliasing live views; a mutated buffer is caught by the MAC and a view is
+immutable. Streaming MAC (host + pallas + jnp) agrees with the scalar
+reference for arbitrary block splits. Gateway: ``call_many`` scatter
+envelopes across the worker shards keep per-channel order, per-item typed
+errors, breaker semantics, and stay typed + bounded under
+crash/corrupt/drop faults.
+"""
+import gc
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import ServiceGateway, framing
+from repro.core.domains import AccessViolation
+from repro.core.gateway import (GW_MAGIC, _ERR, _OK, _SOK, _ROUTE_BYTES,
+                                _scatter_route)
+from repro.core.transports import (DropResponse, HandlerCrash,
+                                   MPKLinkOptTransport, ResponseTimeout,
+                                   ServiceCrashed, ServiceUnavailable,
+                                   ShmTransport, TransportError, fast_mac)
+from repro.core.wordcount import make_text, parse_count, wordcount_handler
+
+TIME_BUDGET = 10.0                  # bounded-failure wall-clock ceiling
+SEED = 0x5EED1234
+
+
+@pytest.fixture(autouse=True)
+def _restore_zero_copy():
+    before = framing.ZERO_COPY
+    yield
+    framing.ZERO_COPY = before
+
+
+def _sample(dtype, shape):
+    n = int(np.prod(shape, dtype=np.int64))
+    base = np.arange(max(n, 1), dtype=np.int64) % 251
+    return base[:n].astype(dtype).reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# seal_into / verify_view: bit-identical, dirty-buffer-safe, zero copy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("code", sorted(framing._DTYPES))
+def test_seal_into_bit_identical_every_dtype(code):
+    dtype = framing._DTYPES[code]
+    for shape in [(0,), (1,), (13,), (128,), (3, 4), (2, 3, 4), (513,)]:
+        arr = _sample(dtype, shape)
+        rows = framing.frame_rows(arr.nbytes)
+        # dirty oversized buffer: stale garbage from a recycled slot must
+        # never leak into the frame (pad tail + reserved lanes rewritten)
+        buf = np.full((rows + 3, framing.LANES), 0xDEADBEEF, np.uint32)
+        used = framing.seal_into(buf, arr, seed=SEED, seq=7)
+        assert used == rows
+        frame = framing.build_frame(arr, seed=SEED, seq=7)
+        np.testing.assert_array_equal(buf[:rows], frame)
+        # the PR 3 legacy concat path produces the same bytes
+        framing.ZERO_COPY = False
+        legacy = framing.build_frame(arr, seed=SEED, seq=7)
+        framing.ZERO_COPY = True
+        np.testing.assert_array_equal(legacy, frame)
+        # verify_view: guard passes, payload aliases the buffer, read-only
+        out = framing.verify_view(buf[:rows], seed=SEED, expect_seq=7)
+        np.testing.assert_array_equal(out, arr)
+        assert not out.flags.writeable
+        if arr.nbytes:
+            assert out.base is not None          # a view, not a copy
+        np.testing.assert_array_equal(
+            framing.parse_frame(buf[:rows], seed=SEED, expect_seq=7), arr)
+
+
+def test_seal_into_batch_matches_seal_batch():
+    arrays = [_sample(np.uint8, (n,)) for n in (1, 511, 512, 4096)] \
+        + [_sample(np.int32, (3, 4)), np.zeros(0, np.uint8)]
+    seqs = [3, 9, 12, 40, 41, 42]
+    scalar = framing.seal_batch(arrays, seed=SEED, seqs=seqs)
+    bufs = [np.full((framing.frame_rows(a.nbytes), framing.LANES),
+                    0xA5A5A5A5, np.uint32) for a in arrays]
+    rows = framing.seal_into_batch(bufs, arrays, seed=SEED, seqs=seqs)
+    for b, r, s in zip(bufs, rows, scalar):
+        np.testing.assert_array_equal(b[:r], s)
+    # forced scalar MAC impl agrees with the fused pass
+    bufs2 = [np.empty_like(b) for b in bufs]
+    framing.seal_into_batch(bufs2, arrays, seed=SEED, seqs=seqs,
+                            mac_impl=framing._mac_np)
+    for a, b in zip(bufs, bufs2):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_verify_view_catches_mutated_buffer_and_views_are_immutable():
+    arr = _sample(np.int32, (300,))
+    buf = np.empty((framing.frame_rows(arr.nbytes), framing.LANES),
+                   np.uint32)
+    rows = framing.seal_into(buf, arr, seed=SEED, seq=0)
+    out = framing.verify_view(buf[:rows], seed=SEED, expect_seq=0)
+    with pytest.raises(ValueError):     # read-only view
+        out[0] = 1
+    # a single payload bit flipped THROUGH THE BUFFER after sealing fails
+    # the MAC — in-place sealing does not weaken the guard
+    buf[2, 17] ^= np.uint32(1 << 4)
+    with pytest.raises(framing.FrameError, match="MAC"):
+        framing.verify_view(buf[:rows], seed=SEED, expect_seq=0)
+    # pad-tail tampering is caught too (the pad is MAC-covered)
+    buf[2, 17] ^= np.uint32(1 << 4)
+    framing.verify_view(buf[:rows], seed=SEED, expect_seq=0)
+    buf[rows - 1, framing.LANES - 1] ^= np.uint32(1)
+    with pytest.raises(framing.FrameError):
+        framing.verify_view(buf[:rows], seed=SEED, expect_seq=0)
+
+
+def test_seal_into_rejects_bad_buffers():
+    arr = _sample(np.uint8, (4096,))
+    small = np.empty((2, framing.LANES), np.uint32)
+    with pytest.raises(framing.FrameError, match="too small"):
+        framing.seal_into(small, arr, seed=SEED, seq=0)
+    wrong = np.empty((9, 64), np.uint32)
+    with pytest.raises(framing.FrameError):
+        framing.seal_into(wrong, arr, seed=SEED, seq=0)
+    ro = np.empty((9, framing.LANES), np.uint32)
+    ro.flags.writeable = False
+    with pytest.raises(framing.FrameError):
+        framing.seal_into(ro, arr, seed=SEED, seq=0)
+
+
+def test_arena_recycles_without_aliasing_live_views():
+    import weakref
+
+    arena = framing.FrameArena(min_rows=4)
+    arr = _sample(np.uint8, (700,))
+    buf = arena.acquire(framing.frame_rows(arr.nbytes))
+    rows = framing.seal_into(buf, arr, seed=SEED, seq=0)
+    view = framing.verify_view(buf[:rows], seed=SEED, expect_seq=0)
+    arena.release_on_collect(view, buf)
+    wr = weakref.ref(buf)
+    del buf                 # like a ring slot: only the view + pool remain
+    expected = np.asarray(view).copy()
+    # while the view is alive its slot is NOT in the free list: every new
+    # acquisition hands out a different buffer
+    others = [arena.acquire(rows) for _ in range(8)]
+    assert all(o is not wr() for o in others)
+    for o in others:
+        arena.release(o)
+    np.testing.assert_array_equal(view, expected)   # nobody scribbled on it
+    del view
+    gc.collect()
+    # the slot recycles only after the LAST alias died
+    assert wr() is not None                         # pooled, not GC'd
+    got = [arena.acquire(rows) for _ in range(9)]
+    assert any(g is wr() for g in got)
+
+
+def test_arena_never_recycles_under_a_derived_view():
+    """numpy collapses view base chains, so a DERIVED sub-view of a polled
+    response references the arena buffer directly; dropping the parent
+    view must NOT recycle the slot under the sub-view."""
+    tr = MPKLinkOptTransport(lambda r: np.asarray(r), ring_slots=4)
+    s = tr.connect("alias")
+    try:
+        t = s.submit(np.arange(64, dtype=np.uint8))
+        s.flush()
+        resp = s.poll(t)
+        derived = resp[:16]                 # .base is the arena buffer
+        expected = derived.copy()
+        del resp
+        gc.collect()
+        for _ in range(10):                 # churn that would reuse the slot
+            t2 = s.submit(np.full(64, 255, np.uint8))
+            s.flush()
+            s.poll(t2)
+        gc.collect()
+        np.testing.assert_array_equal(derived, expected)
+    finally:
+        tr.close()
+
+
+def test_pack_payload_pad_path_has_no_concat(monkeypatch):
+    arr = _sample(np.uint8, (13,))              # needs padding
+    def boom(*a, **k):                           # noqa: E306
+        raise AssertionError("np.concatenate on the pack path")
+    monkeypatch.setattr(np, "concatenate", boom)
+    u32, meta = framing.pack_payload(arr)
+    monkeypatch.undo()
+    assert u32.shape == (1, framing.LANES)
+    np.testing.assert_array_equal(framing.unpack_payload(u32, meta), arr)
+    # aligned inputs stay zero-copy views
+    aligned = _sample(np.uint8, (1024,))
+    u32a, _ = framing.pack_payload(aligned)
+    assert u32a.base is not None
+
+
+def test_frame_stats_hook_counts_copies():
+    stats0 = framing.STATS.snapshot()
+    arr = _sample(np.uint8, (2048,))
+    buf = np.empty((framing.frame_rows(arr.nbytes), framing.LANES),
+                   np.uint32)
+    rows = framing.seal_into(buf, arr, seed=SEED, seq=0)
+    framing.verify_view(buf[:rows], seed=SEED, expect_seq=0)
+    d = {k: v - stats0[k] for k, v in framing.STATS.snapshot().items()}
+    assert d["frames_sealed"] == 1 and d["frames_sealed_inplace"] == 1
+    assert d["bytes_copied"] == arr.nbytes      # exactly ONE payload write
+    assert d["concat_calls"] == 0
+    assert d["views_returned"] == 1
+    # the legacy path is measurably copy-heavier — that's the bench baseline
+    framing.ZERO_COPY = False
+    stats1 = framing.STATS.snapshot()
+    framing.build_frame(arr, seed=SEED, seq=0)
+    d2 = {k: v - stats1[k] for k, v in framing.STATS.snapshot().items()}
+    assert d2["concat_calls"] >= 1 and d2["bytes_copied"] > arr.nbytes
+
+
+# ---------------------------------------------------------------------------
+# streaming MAC: host + device twins, arbitrary splits
+# ---------------------------------------------------------------------------
+
+def test_streaming_mac_matches_scalar_for_any_split():
+    rng = np.random.default_rng(11)
+    p = rng.integers(0, 1 << 32, size=(37, framing.LANES),
+                     dtype=np.int64).astype(np.uint32)
+    ref = framing._mac_np(p, SEED)
+    assert fast_mac(p, SEED) == ref
+    for cuts in [(37,), (1, 36), (5, 1, 14, 17), (36, 1)]:
+        h = framing.mac_init_np(SEED)
+        s = 0
+        for c in cuts:
+            h = framing.mac_update_np(h, p[s:s + c])
+            s += c
+        assert framing.mac_finalize_np(h) == ref, cuts
+    # empty update is the identity
+    h = framing.mac_init_np(SEED)
+    h = framing.mac_update_np(h, p[:0])
+    h = framing.mac_update_np(h, p)
+    assert framing.mac_finalize_np(h) == ref
+
+
+def test_streaming_mac_kernels_agree_with_host():
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    from repro.kernels.ops import (guard_mac_finalize, guard_mac_init,
+                                   guard_mac_update)
+    from repro.kernels.ref import mac_ref
+
+    stack = np.asarray(jax.random.bits(jax.random.PRNGKey(3), (24, 128),
+                                       dtype=jnp.uint32))
+    tag = 0x77
+    ref = int(mac_ref(jnp.asarray(stack), jnp.uint32(tag)))
+    assert framing._mac_np(stack, tag) == ref
+    for impl in ("pallas", "jnp"):
+        h = guard_mac_init(jnp.uint32(tag))
+        for s, e in ((0, 8), (8, 9), (9, 24)):
+            h = guard_mac_update(h, jnp.asarray(stack[s:e]), impl=impl,
+                                 rows_per_tile=4)
+        assert int(guard_mac_finalize(h)) == ref, impl
+
+
+def test_mac_batch_block_loop_matches_scalar():
+    """The hoisted power tables (one per block size, cached) leave the
+    fused block loop bit-identical to the scalar MAC."""
+    rng = np.random.default_rng(5)
+    stack = rng.integers(0, 1 << 32, size=(3, 23, framing.LANES),
+                         dtype=np.int64).astype(np.uint32)
+    small_blocks = framing._mac_batch_np(stack, SEED, block_rows=4)
+    one_block = framing._mac_batch_np(stack, SEED)
+    scalar = [framing._mac_np(s, SEED) for s in stack]
+    assert list(small_blocks) == list(one_block) == scalar
+
+
+# ---------------------------------------------------------------------------
+# transport ring: arena staging, view lifetime
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cls", [ShmTransport, MPKLinkOptTransport])
+def test_ring_poll_views_survive_slot_recycling(cls):
+    """poll() hands back a read-only view; traffic that recycles the arena
+    slots must never scribble on a view the caller still holds."""
+    tr = cls(lambda r: np.asarray(r), ring_slots=4)
+    s = tr.connect("viewer")
+    try:
+        t0 = s.submit(make_text(100, seed=1))
+        s.flush()
+        held = s.poll(t0)
+        assert not held.flags.writeable
+        expected = np.asarray(held).copy()
+        for i in range(12):                 # recycle slots many times over
+            t = s.submit(make_text(50 + i, seed=i))
+            s.flush()
+            s.poll(t)
+        np.testing.assert_array_equal(held, expected)
+    finally:
+        tr.close()
+
+
+def test_ring_arena_recycles_buffers():
+    tr = MPKLinkOptTransport(wordcount_handler, ring_slots=4)
+    s = tr.connect("recycler")
+    try:
+        for i in range(8):
+            outs = s.call_batch([make_text(20 + j, seed=j)
+                                 for j in range(3)])
+            assert [parse_count(np.asarray(o)) for o in outs] \
+                == [20, 21, 22]
+            del outs
+        gc.collect()
+        assert tr.arena.free_slots() > 0    # slots actually recycle
+    finally:
+        tr.close()
+
+
+def test_legacy_mode_interoperates_on_the_wire():
+    """A legacy-built (PR 3 copy pattern) exchange and a zero-copy exchange
+    share one session/sequence — both sides accept either, proving the
+    flag changes allocation strategy, not the protocol."""
+    tr = MPKLinkOptTransport(wordcount_handler)
+    s = tr.connect("mixed")
+    try:
+        framing.ZERO_COPY = False
+        assert parse_count(np.asarray(s.request(make_text(5, seed=0)))) == 5
+        framing.ZERO_COPY = True
+        assert parse_count(np.asarray(s.request(make_text(6, seed=0)))) == 6
+        assert s._seq == 2
+    finally:
+        tr.close()
+
+
+# ---------------------------------------------------------------------------
+# gateway scatter envelope + sharded executor
+# ---------------------------------------------------------------------------
+
+def _scatter_gw(workers, **svc_kw):
+    gw = ServiceGateway("mpklink_opt", workers=workers)
+    gw.register_service("wordcount", wordcount_handler, **svc_kw)
+    gw.register_service("reverse",
+                        lambda r: np.ascontiguousarray(np.asarray(r)[::-1]),
+                        **svc_kw)
+    gw.register_service("double",
+                        lambda r: (np.asarray(r).astype(np.int64) * 2)
+                        .astype(np.int32), **svc_kw)
+    gw.register_service("sum",
+                        lambda r: np.asarray(
+                            [int(np.asarray(r).astype(np.int64).sum())],
+                            np.int64), **svc_kw)
+    return gw.start()
+
+
+@pytest.mark.parametrize("workers", [0, 1, 4])
+def test_call_many_roundtrip_across_services(workers):
+    gw = _scatter_gw(workers)
+    try:
+        c = gw.connect("scat")
+        arr = np.arange(9, dtype=np.int32)
+        items = [("wordcount", make_text(31, seed=0)), ("reverse", arr),
+                 ("double", arr), ("sum", arr),
+                 ("reverse", arr + 100)]        # same channel twice, ordered
+        outs = c.call_many(items)
+        assert parse_count(outs[0]) == 31
+        np.testing.assert_array_equal(np.asarray(outs[1]), arr[::-1])
+        np.testing.assert_array_equal(np.asarray(outs[2]), arr * 2)
+        assert int(np.asarray(outs[3]).view(np.int64)[0]) == int(arr.sum())
+        np.testing.assert_array_equal(np.asarray(outs[4]), (arr + 100)[::-1])
+        # sequences aligned: single calls interleave on the same channels
+        np.testing.assert_array_equal(
+            np.asarray(c.call("reverse", arr)), arr[::-1])
+        assert parse_count(c.call("wordcount", make_text(8, seed=1))) == 8
+        outs2 = c.call_many([("sum", arr), ("wordcount", make_text(4, seed=2))])
+        assert parse_count(outs2[1]) == 4
+        assert gw.stats["scatter_envelopes"] == 2
+        assert gw.stats["rejected"] == 0
+        if workers:
+            assert sum(s["executed"] for s in gw.shard_stats()) >= 2
+    finally:
+        gw.close()
+
+
+def test_call_many_per_item_typed_errors():
+    def picky(req):
+        if np.asarray(req).size == 1:
+            raise ValueError("bad apple")
+        return np.asarray(req)
+
+    gw = ServiceGateway("mpklink_opt", workers=2)
+    gw.register_service("picky", picky, failure_threshold=100)
+    gw.register_service("wordcount", wordcount_handler)
+    gw.start()
+    try:
+        c = gw.connect("x")
+        res = c.call_many(
+            [("picky", np.arange(4, dtype=np.int32)),
+             ("picky", np.zeros(1, np.int32)),
+             ("wordcount", make_text(6, seed=0))], return_exceptions=True)
+        np.testing.assert_array_equal(
+            np.asarray(res[0]).view(np.int32), np.arange(4, dtype=np.int32))
+        assert isinstance(res[1], TransportError)
+        assert "bad apple" in str(res[1])
+        assert parse_count(res[2]) == 6
+        # without return_exceptions: first error raised after the drain,
+        # and every item consumed a sequence — the channels stay aligned
+        with pytest.raises(TransportError, match="bad apple"):
+            c.call_many([("picky", np.zeros(1, np.int32))])
+        out = c.call_many([("picky", np.arange(2, dtype=np.int32))])
+        np.testing.assert_array_equal(
+            np.asarray(out[0]).view(np.int32), np.arange(2, dtype=np.int32))
+    finally:
+        gw.close()
+
+
+def test_call_many_token_replay_dedups():
+    """A manual retry that replays the SAME pre-minted tokens is answered
+    from the dedup window — executed items never run twice; a bare
+    re-issue (fresh tokens) re-executes."""
+    calls = []
+
+    def counting(req):
+        calls.append(1)
+        return np.asarray(req)
+
+    gw = ServiceGateway("mpklink_opt", workers=2)
+    gw.register_service("counting", counting)
+    gw.start()
+    try:
+        c = gw.connect("r")
+        items = [("counting", np.arange(3, dtype=np.int32)),
+                 ("counting", np.arange(4, dtype=np.int32))]
+        tokens = c.mint_tokens(len(items))
+        outs = c.call_many(items, tokens=tokens)
+        assert len(calls) == 2
+        replay = c.call_many(items, tokens=tokens)      # idempotent retry
+        assert len(calls) == 2 and gw.stats["deduped"] == 2
+        for a, b in zip(outs, replay):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        c.call_many(items)                  # fresh tokens → re-executes
+        assert len(calls) == 4
+        with pytest.raises(ValueError, match="tokens"):
+            c.call_many(items, tokens=[1])
+    finally:
+        gw.close()
+
+
+def test_scatter_wire_replay_answered_from_dedup_window():
+    """A replay of the exact scatter envelope (lost response, same tokens,
+    same sequences) is answered item-by-item from the dedup window — the
+    dedup check runs BEFORE the sequence check, handlers never re-execute,
+    and the forward-only advance leaves the channel aligned."""
+    calls = []
+
+    def counting(req):
+        calls.append(1)
+        return np.asarray(req)
+
+    gw = ServiceGateway("mpklink_opt", workers=2)
+    gw.register_service("counting", counting)
+    gw.start()
+    try:
+        c = gw.connect("rp")
+        items = [("counting", np.arange(3, dtype=np.int32)),
+                 ("counting", np.arange(5, dtype=np.int32))]
+        tokens = c.mint_tokens(len(items))
+        # capture the exact bytes the envelope puts on the wire
+        captured = {}
+        orig_ri = c._session.request_into
+
+        def capture(nbytes, fill):
+            env = np.empty(nbytes, np.uint8)
+            fill(env)
+            captured["env"] = env.copy()
+            return c._session.request(env)
+
+        c._session.request_into = capture
+        c.call_many(items, tokens=tokens)
+        c._session.request_into = orig_ri
+        assert len(calls) == 2
+        chan = c._channels["counting"]
+        seq_after = chan.server_seq
+        # replay the identical envelope (as if the response had been lost
+        # and the client resent): every item OK from the window, nothing
+        # re-executes, the server sequence does not move
+        resp = np.ascontiguousarray(
+            np.asarray(c._session.request(captured["env"]))) \
+            .view(np.uint8).reshape(-1)
+        route = resp[:_ROUTE_BYTES].view("<u4")
+        assert int(route[1]) == _SOK
+        statuses, ofs = [], _ROUTE_BYTES
+        for _ in range(2):
+            ih = resp[ofs: ofs + _ROUTE_BYTES].view("<u4")
+            statuses.append(int(ih[1]))
+            nb = int(ih[2])
+            ofs += _ROUTE_BYTES + nb + ((-nb) % 4)
+        assert statuses == [_OK, _OK]
+        assert len(calls) == 2 and gw.stats["deduped"] == 2
+        assert chan.server_seq == seq_after
+        # channel still aligned for fresh traffic
+        outs = c.call_many(items)
+        assert len(calls) == 4 and len(outs) == 2
+    finally:
+        gw.close()
+
+
+@pytest.mark.parametrize("corrupt_idx", [1, 2])
+def test_scatter_corrupt_frame_is_per_item_frame_error(corrupt_idx):
+    """Hand-rolled scatter envelope with one tampered frame (middle OR
+    tail): that item's status is ERR, its neighbours verify, and the
+    channel stays aligned — a fresh envelope consumes one slot per item
+    even when the FAILING item is the last one (no rescuer behind it)."""
+    gw = _scatter_gw(2)
+    try:
+        c = gw.connect("m")
+        chan = c.open("wordcount")
+        frames = [framing.build_frame(make_text(n, seed=n), seed=chan.seed,
+                                      seq=chan.seq + i)
+                  for i, n in enumerate((3, 4, 5))]
+        frames[corrupt_idx] = frames[corrupt_idx].copy()
+        frames[corrupt_idx][0, 11] ^= np.uint32(1 << 3)
+        parts = [_scatter_route(c.cid, 3)]
+        for f in frames:
+            parts.append(np.array([GW_MAGIC, chan.sid, 0, 0], "<u4")
+                         .view(np.uint8))
+            parts.append(f.reshape(-1).view(np.uint8))
+        resp = np.ascontiguousarray(
+            np.asarray(c._session.request(np.concatenate(parts)))) \
+            .view(np.uint8).reshape(-1)
+        route = resp[:_ROUTE_BYTES].view("<u4")
+        assert int(route[0]) == GW_MAGIC and int(route[1]) == _SOK
+        statuses, ofs = [], _ROUTE_BYTES
+        for _ in range(3):
+            ih = resp[ofs: ofs + _ROUTE_BYTES].view("<u4")
+            statuses.append(int(ih[1]))
+            nb = int(ih[2])
+            ofs += _ROUTE_BYTES + nb + ((-nb) % 4)
+        expected = [_OK, _OK, _OK]
+        expected[corrupt_idx] = _ERR
+        assert statuses == expected
+        assert gw.stats["macs_verified"] == 2
+        assert gw.stats["rejected"] == 1
+        chan.seq += 3                       # our hand-rolled envelope's seqs
+        assert parse_count(c.call("wordcount", make_text(6, seed=0))) == 6
+        outs = c.call_many([("wordcount", make_text(9, seed=1))])
+        assert parse_count(outs[0]) == 9
+    finally:
+        gw.close()
+
+
+def test_call_many_corrupt_response_item_stays_per_item():
+    """A response item corrupted on the wire surfaces as ITS typed
+    FrameError (verify_batch strict=False) while the other items verify —
+    and the channels stay aligned (every item consumed a sequence), so
+    the next scatter works without a reopen."""
+    gw = _scatter_gw(2)
+    flip = {"armed": False}
+    try:
+        c = gw.connect("w")
+        items = [("wordcount", make_text(5, seed=0)),
+                 ("reverse", np.arange(6, dtype=np.int32))]
+        c.call_many(items)                  # channels open, seqs advanced
+
+        orig_ri = c._session.request_into
+
+        def tamper(nbytes, fill):
+            resp = orig_ri(nbytes, fill)
+            if not flip["armed"]:
+                return resp
+            flip["armed"] = False
+            raw = np.ascontiguousarray(np.asarray(resp)) \
+                .view(np.uint8).copy()
+            # corrupt the FIRST OK item's frame payload (scatter route +
+            # per-item route + header row, then payload bytes)
+            raw[_ROUTE_BYTES + _ROUTE_BYTES + 512 + 4] ^= 0x40
+            return raw
+
+        c._session.request_into = tamper
+        flip["armed"] = True
+        res = c.call_many(items, return_exceptions=True)
+        assert isinstance(res[0], framing.FrameError)
+        np.testing.assert_array_equal(
+            np.asarray(res[1]), np.arange(6, dtype=np.int32)[::-1])
+        # channels aligned: the next scatter (and single call) both work
+        outs = c.call_many(items)
+        assert parse_count(outs[0]) == 5
+        assert parse_count(c.call("wordcount", make_text(7, seed=1))) == 7
+    finally:
+        gw.close()
+
+
+def test_scatter_crash_under_workers_typed_and_bounded():
+    """HandlerCrash fired on a shard worker mid-scatter: the client gets an
+    immediate typed ServiceCrashed (the crash is relayed to the session
+    thread — never a deadline stall), the shard itself survives, and a
+    healed client resumes scattering."""
+    calls = []
+
+    def crashy(req):
+        calls.append(1)
+        if len(calls) == 2:
+            raise HandlerCrash("boom on a shard")
+        return np.asarray(req)
+
+    gw = ServiceGateway("mpklink_opt", workers=2,
+                        transport_kwargs={"timeout": TIME_BUDGET * 3})
+    gw.register_service("crashy", crashy)
+    gw.register_service("wordcount", wordcount_handler)
+    gw.start()
+    t0 = time.monotonic()
+    try:
+        c = gw.connect("b")
+        items = [("crashy", np.arange(3, dtype=np.int32)),
+                 ("wordcount", make_text(5, seed=0))]
+        outs = c.call_many(items)
+        assert parse_count(outs[1]) == 5
+        with pytest.raises(ServiceCrashed):
+            c.call_many(items)
+        c.heal("crashy")
+        c.heal("wordcount")
+        outs = c.call_many(items)           # shard survived the crash
+        assert parse_count(outs[1]) == 5
+        assert gw.stats["crashes"] == 1
+    finally:
+        gw.close()
+    assert time.monotonic() - t0 < TIME_BUDGET
+
+
+def test_scatter_drop_under_workers_bounded():
+    """DropResponse on a shard: the whole scatter response is dropped (the
+    wire ate the reply) and the client's bounded wait expires typed."""
+    def droppy(req):
+        raise DropResponse("dropped")
+
+    gw = ServiceGateway("mpklink_opt", workers=2,
+                        transport_kwargs={"timeout": 0.4})
+    gw.register_service("droppy", droppy)
+    gw.register_service("wordcount", wordcount_handler)
+    gw.start()
+    t0 = time.monotonic()
+    try:
+        c = gw.connect("d")
+        with pytest.raises(ResponseTimeout):
+            c.call_many([("droppy", np.arange(2, dtype=np.int32)),
+                         ("wordcount", make_text(4, seed=0))])
+    finally:
+        gw.close()
+    assert time.monotonic() - t0 < TIME_BUDGET
+
+
+def test_scatter_breaker_sheds_per_item_and_recovers():
+    """A service whose failures trip its circuit sheds scatter items with
+    typed ServiceUnavailable while co-scattered services keep answering —
+    breaker semantics identical to the single-call path."""
+    def boom(req):
+        raise ValueError("kaput")
+
+    gw = ServiceGateway("mpklink_opt", workers=2)
+    gw.register_service("boom", boom, failure_threshold=2, probe_after=100)
+    gw.register_service("wordcount", wordcount_handler)
+    gw.start()
+    try:
+        c = gw.connect("s")
+        for _ in range(2):                  # trip the breaker
+            res = c.call_many([("boom", np.zeros(2, np.int32)),
+                               ("wordcount", make_text(3, seed=0))],
+                              return_exceptions=True)
+            assert isinstance(res[0], TransportError)
+            assert parse_count(res[1]) == 3
+        res = c.call_many([("boom", np.zeros(2, np.int32)),
+                           ("wordcount", make_text(7, seed=0))],
+                          return_exceptions=True)
+        assert isinstance(res[0], ServiceUnavailable)   # shed, not executed
+        assert parse_count(res[1]) == 7
+        assert gw.health()["boom"]["state"] == "open"
+        assert gw.stats["sheds"] >= 1
+    finally:
+        gw.close()
+
+
+def test_scatter_stale_epoch_is_per_item_and_recoverable():
+    gw = _scatter_gw(2)
+    try:
+        a, b = gw.connect("alice"), gw.connect("bob")
+        assert parse_count(a.call("wordcount", make_text(3, seed=0))) == 3
+        assert parse_count(
+            b.call_many([("wordcount", make_text(4, seed=0))])[0]) == 4
+        gw.revoke(a, "wordcount")           # epoch bump stales bob's key
+        res = b.call_many([("wordcount", make_text(5, seed=0))],
+                          return_exceptions=True)
+        assert isinstance(res[0], AccessViolation)
+        b.reopen("wordcount")               # still certified: re-key works
+        assert parse_count(
+            b.call_many([("wordcount", make_text(6, seed=0))])[0]) == 6
+    finally:
+        gw.close()
+
+
+def test_workers_mode_leaves_single_and_batch_paths_unchanged():
+    gw = _scatter_gw(4)
+    try:
+        c = gw.connect("plain")
+        assert parse_count(c.call("wordcount", make_text(12, seed=0))) == 12
+        outs = c.call_batch("wordcount",
+                            [make_text(n, seed=n) for n in (2, 30, 400)])
+        assert [parse_count(o) for o in outs] == [2, 30, 400]
+    finally:
+        gw.close()
+
+
+def test_scatter_smaller_than_route_rejected_typed():
+    gw = _scatter_gw(0)
+    try:
+        c = gw.connect("t")
+        c.open("wordcount")
+        env = _scatter_route(c.cid, 2)      # declares 2 items, carries none
+        resp = np.ascontiguousarray(np.asarray(c._session.request(env))) \
+            .view(np.uint8).reshape(-1)
+        route = resp[:_ROUTE_BYTES].view("<u4")
+        assert int(route[1]) == _ERR
+        from repro.core.transports import _raise_remote
+        with pytest.raises(framing.FrameError):
+            _raise_remote(resp[_ROUTE_BYTES:
+                               _ROUTE_BYTES + int(route[3])].tobytes())
+        # no sequence consumed: the channel still works
+        assert parse_count(c.call("wordcount", make_text(9, seed=0))) == 9
+    finally:
+        gw.close()
