@@ -10,12 +10,15 @@ sweeps and fails (exit 1) when throughput regresses more than the
 tolerance (default 20%) against ``benchmarks/results/gateway_bench.json``.
 
 Comparisons are made on machine-independent SPEEDUP RATIOS — zero-copy vs
-the PR 3 legacy plane at the pipelined operating point, and the sharded
-scatter executor vs sequential calls — not on absolute req/s, because CI
-runners and the machine that produced the committed JSON differ in
-absolute speed while the ratios are properties of the code. The committed
-JSON's own boolean gates are re-asserted as well, so a regenerated
-artifact that fails its acceptance claims cannot be committed silently.
+the PR 3 legacy plane at the pipelined operating point, the sharded
+scatter executor vs sequential calls, and the auto-coalescing mux vs
+inline high-fan-in calls — not on absolute req/s, because CI runners and
+the machine that produced the committed JSON differ in absolute speed
+while the ratios are properties of the code. The coalescing wakeup
+reduction is a COUNT ratio (doorbell rings per request), so it is gated
+absolutely (≥ 4×), not tolerance-relative. The committed JSON's own
+boolean gates are re-asserted as well, so a regenerated artifact that
+fails its acceptance claims cannot be committed silently.
 ``PERF_GATE_TOLERANCE`` overrides the tolerance for noisy runners.
 """
 from __future__ import annotations
@@ -28,14 +31,18 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent))
 
-from gateway_bench import (PAYLOAD_IN_FLIGHT, payload_speedup,        # noqa: E402
-                           scatter_speedup, sweep_payload, sweep_scatter)
+from gateway_bench import (PAYLOAD_IN_FLIGHT, fanin_speedup,          # noqa: E402
+                           payload_speedup, scatter_speedup, sweep_fanin,
+                           sweep_payload, sweep_scatter)
 
 COMMITTED = Path(__file__).resolve().parent / "results" / "gateway_bench.json"
 
 # the committed boolean acceptance gates that must still hold
 GATES = ("batch_gate_mpklink_opt_2x", "zero_copy_gate_mpklink_opt_1p5x",
-         "scatter_gate_workers4_2x")
+         "scatter_gate_workers4_2x", "coalesce_gate_mpklink_opt_64c_2x",
+         "coalesce_wakeup_gate_4x")
+
+WAKEUP_REDUCTION_FLOOR = 4.0        # absolute count-ratio gate, no tolerance
 
 
 def main() -> int:
@@ -58,6 +65,8 @@ def main() -> int:
     fresh_zc = payload_speedup(sweep_payload(["mpklink_opt"], [64 * 1024], 8))
     print("fresh scatter sweep (mpklink_opt, 4 services):", flush=True)
     fresh_sc = scatter_speedup(sweep_scatter("mpklink_opt", 4, 10, [0, 4]))
+    print("fresh high-fan-in sweep (mpklink_opt, 64 clients):", flush=True)
+    fresh_fi = fanin_speedup(sweep_fanin(["mpklink_opt"], [64], {64: 3}))
 
     checks = [
         (f"zero_copy_speedup[mpklink_opt/64KiB/k{PAYLOAD_IN_FLIGHT}]",
@@ -67,6 +76,10 @@ def main() -> int:
         ("scatter_speedup_vs_sequential[workers4]",
          fresh_sc.get("workers4"),
          committed.get("scatter_speedup_vs_sequential", {}).get("workers4")),
+        ("fanin_speedup_coalesced_over_inline[mpklink_opt/64c]",
+         fresh_fi.get("mpklink_opt/64c"),
+         committed.get("fanin_speedup_coalesced_over_inline", {})
+         .get("mpklink_opt/64c")),
     ]
     for name, fresh, base in checks:
         if base is None:
@@ -83,6 +96,16 @@ def main() -> int:
             failures.append(
                 f"{name} regressed >{args.tolerance:.0%}: "
                 f"fresh {fresh} < floor {floor:.2f} (committed {base})")
+
+    # the wakeup reduction is a deterministic count ratio: gate absolutely
+    wred = fresh_fi.get("mpklink_opt/64c_wakeup_reduction")
+    ok = wred is not None and wred >= WAKEUP_REDUCTION_FLOOR
+    print(f"fanin wakeup reduction [mpklink_opt/64c]: fresh={wred} "
+          f"floor={WAKEUP_REDUCTION_FLOOR} -> {'PASS' if ok else 'FAIL'}")
+    if not ok:
+        failures.append(
+            f"coalescing wakeup reduction {wred} below the "
+            f"{WAKEUP_REDUCTION_FLOOR}x floor")
 
     if failures:
         print("PERF GATE FAILED:")

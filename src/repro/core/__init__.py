@@ -18,7 +18,8 @@ TRANSPORTS = {
 }
 
 from repro.core import gateway                     # needs TRANSPORTS above
-from repro.core.gateway import GatewayClient, ServiceGateway, ServiceHealth
+from repro.core.gateway import (CallCoalescer, GatewayClient, ServiceGateway,
+                                ServiceHealth)
 from repro.core import faultwire                   # needs gateway above
 from repro.core.faultwire import FaultFabric, FaultPlan, FaultyClient
 from repro.core.transports import (ResponseTimeout, ServiceCrashed,
@@ -27,6 +28,7 @@ from repro.core.transports import (ResponseTimeout, ServiceCrashed,
 __all__ = ["ca", "domains", "framing", "gateway", "faultwire", "signature",
            "transports", "wordcount", "AccessViolation", "DomainKey",
            "KeyRegistry", "ProtectionDomain", "READ", "RW", "WRITE",
-           "mac_seed", "TRANSPORTS", "GatewayClient", "ServiceGateway",
+           "mac_seed", "TRANSPORTS", "CallCoalescer", "GatewayClient",
+           "ServiceGateway",
            "ServiceHealth", "FaultFabric", "FaultPlan", "FaultyClient",
            "ResponseTimeout", "ServiceCrashed", "ServiceUnavailable"]

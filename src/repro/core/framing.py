@@ -84,27 +84,97 @@ class FrameError(ValueError):
 # ---------------------------------------------------------------------------
 
 class FrameStats:
-    """Process-wide framing counters. ``bytes_copied`` counts every byte the
-    framing layer writes or re-materializes (payload writes, pad/concat
-    staging, header concat); ``concat_calls`` counts ``np.concatenate``
-    invocations on the frame path. The zero-copy seal path adds exactly
-    ``payload nbytes`` per frame and zero concats — benchmarks assert the
-    delta. Increments ride the GIL (approximate under heavy concurrency,
-    exact single-threaded, which is how the bench reads them)."""
+    """Process-wide framing + data-plane counters. ``bytes_copied`` counts
+    every byte the framing layer writes or re-materializes (payload writes,
+    pad/concat staging, header concat); ``concat_calls`` counts
+    ``np.concatenate`` invocations on the frame path. The zero-copy seal
+    path adds exactly ``payload nbytes`` per frame and zero concats —
+    benchmarks assert the delta.
+
+    The transports account their signalling here too: ``wakeups`` counts
+    doorbell rings (every notify that can wake a parked peer — the
+    coalescing bench divides this by requests), ``doorbell_parks`` counts
+    waits that actually parked on the condition after the bounded spin,
+    and ``key_syncs`` counts PKRU synchronization round trips (the
+    transport-local ``sync_count`` aggregated process-wide).
+
+    Updates go through :meth:`bump` — the ``workers=N`` sharded executor
+    and the N per-session service threads all write these counters
+    concurrently, and the unguarded ``+=`` this replaced drops counts
+    under thread interleaving (tests/test_doorbell.py asserts exact
+    totals). Counters are sharded per thread (each thread owns a private
+    dict, registered once under a lock), so the hot path takes NO lock:
+    an increment can never be lost, and :meth:`snapshot` sums the shards
+    — exact whenever the counting threads have quiesced (how every test
+    and benchmark reads it). Reading a field attribute
+    (``STATS.bytes_copied``) sums shards the same way."""
 
     _FIELDS = ("frames_sealed", "frames_sealed_inplace", "frames_verified",
                "views_returned", "bytes_copied", "concat_calls",
-               "arena_allocated", "arena_reused", "arena_released")
+               "arena_allocated", "arena_reused", "arena_released",
+               "wakeups", "doorbell_parks", "key_syncs")
 
     def __init__(self):
-        self.reset()
+        self._rlock = threading.Lock()      # guards the shard registry only
+        self._local = threading.local()
+        # (owner thread, shard dict): a dead owner can never bump again, so
+        # its shard is folded into _retired and dropped — a long-lived
+        # process cycling thousands of session threads must not accumulate
+        # dead shards (or pay O(threads-ever) per snapshot)
+        self._shards: List[Tuple[threading.Thread, Dict[str, int]]] = []
+        self._retired: Dict[str, int] = dict.fromkeys(self._FIELDS, 0)
+
+    def _shard(self) -> Dict[str, int]:
+        d = getattr(self._local, "d", None)
+        if d is None:
+            d = dict.fromkeys(self._FIELDS, 0)
+            self._local.d = d
+            with self._rlock:
+                self._shards.append((threading.current_thread(), d))
+        return d
+
+    def _fold_dead_locked(self) -> None:
+        live = []
+        for th, d in self._shards:
+            if th.is_alive():
+                live.append((th, d))
+            else:                       # no further bumps possible: fold
+                for f in self._FIELDS:
+                    self._retired[f] += d[f]
+        self._shards = live
+
+    def bump(self, **deltas: int) -> None:
+        """Add each delta to its counter — lock-free (per-thread shard);
+        unknown counter names raise KeyError."""
+        d = self._shard()
+        for name, delta in deltas.items():
+            d[name] += delta            # KeyError on unknown fields
 
     def reset(self):
-        for f in self._FIELDS:
-            setattr(self, f, 0)
+        with self._rlock:
+            self._fold_dead_locked()
+            self._retired = dict.fromkeys(self._FIELDS, 0)
+            shards = [d for _, d in self._shards]
+        for d in shards:
+            for f in self._FIELDS:
+                d[f] = 0
 
     def snapshot(self) -> Dict[str, int]:
-        return {f: getattr(self, f) for f in self._FIELDS}
+        with self._rlock:
+            self._fold_dead_locked()
+            out = dict(self._retired)
+            shards = [d for _, d in self._shards]
+        for d in shards:
+            for f in self._FIELDS:
+                out[f] += d[f]
+        return out
+
+    def __getattr__(self, name: str):
+        # field reads sum the shards; anything else is a real miss. The
+        # startswith guard keeps __init__'s own attribute setup safe.
+        if not name.startswith("_") and name in FrameStats._FIELDS:
+            return self.snapshot()[name]
+        raise AttributeError(name)
 
 
 STATS = FrameStats()
@@ -226,7 +296,7 @@ def pack_payload(arr: np.ndarray) -> Tuple[np.ndarray, dict]:
         rows = (raw.size + pad) // (LANES * 4)
         u32 = np.zeros((rows, LANES), np.uint32)
         u32.reshape(-1).view(np.uint8)[: raw.size] = raw
-        STATS.bytes_copied += raw.size
+        STATS.bump(bytes_copied=raw.size)
     else:
         u32 = raw.view("<u4").reshape(-1, LANES)
     meta = {"dtype_code": _DTYPE_CODES[arr.dtype], "nbytes": arr.nbytes,
@@ -270,7 +340,7 @@ def _assemble(payload: np.ndarray, meta: dict, seed: int, seq: int,
     frame = np.empty((payload.shape[0] + 1, LANES), np.uint32)
     _write_header(frame[0], meta, seed, seq, mac)
     frame[1:] = payload
-    STATS.bytes_copied += payload.nbytes
+    STATS.bump(bytes_copied=payload.nbytes)
     return frame
 
 
@@ -312,10 +382,9 @@ def seal_into(buf: np.ndarray, arr: np.ndarray, *, seed: int, seq: int,
     pbytes[meta["nbytes"]:] = 0
     mac = (mac_impl or _mac_np)(payload, seed)
     _write_header(buf[0], meta, seed, seq, mac)
-    STATS.frames_sealed += 1
-    if _inplace:                # build_frame seals a FRESH buffer: counted
-        STATS.frames_sealed_inplace += 1    # as sealed, not as in-place
-    STATS.bytes_copied += meta["nbytes"]
+    STATS.bump(frames_sealed=1, bytes_copied=meta["nbytes"],
+               # build_frame seals a FRESH buffer: sealed, not in-place
+               frames_sealed_inplace=int(_inplace))
     return rows
 
 
@@ -338,15 +407,14 @@ def seal_into_batch(bufs: Sequence[np.ndarray], arrays: Sequence[np.ndarray],
         pbytes[: meta["nbytes"]] = arr.view(np.uint8).reshape(-1)
         pbytes[meta["nbytes"]:] = 0
         payloads.append(payload)
-        STATS.bytes_copied += meta["nbytes"]
+        STATS.bump(bytes_copied=meta["nbytes"])
     if mac_impl is None:
         macs = mac_batch(payloads, seed)
     else:
         macs = [mac_impl(p, seed) for p in payloads]
     for buf, meta, seq, mac in zip(bufs, metas, seqs, macs):
         _write_header(buf[0], meta, seed, seq, mac)
-    STATS.frames_sealed += len(arrays)
-    STATS.frames_sealed_inplace += len(arrays)
+    STATS.bump(frames_sealed=len(arrays), frames_sealed_inplace=len(arrays))
     return rows_list
 
 
@@ -368,8 +436,7 @@ def seal_prefilled(buf: np.ndarray, nbytes: int, *, seed: int, seq: int,
     meta = {"dtype_code": _DTYPE_CODES[np.dtype(np.uint8)],
             "nbytes": int(nbytes), "shape": (int(nbytes),)}
     _write_header(buf[0], meta, seed, seq, mac)
-    STATS.frames_sealed += 1
-    STATS.frames_sealed_inplace += 1
+    STATS.bump(frames_sealed=1, frames_sealed_inplace=1)
     return rows
 
 
@@ -397,8 +464,7 @@ def verify_view(frame: np.ndarray, *, seed: int, expect_seq=None,
     _precheck(frame, seed, expect_seq)
     mac = (mac_impl or _mac_np)(frame[1:], seed)
     meta = _check_meta(frame, seed, mac)
-    STATS.frames_verified += 1
-    STATS.views_returned += 1
+    STATS.bump(frames_verified=1, views_returned=1)
     return _payload_view(frame, meta)
 
 
@@ -446,7 +512,7 @@ class FrameArena:
             if wr() is None \
                     and sys.getrefcount(buf) <= _PENDING_BASELINE_REFS:
                 self._free.setdefault(buf.shape[0], []).append(buf)
-                STATS.arena_released += 1
+                STATS.bump(arena_released=1)
             else:
                 keep.append((wr, buf))
         self._pending = keep
@@ -463,9 +529,9 @@ class FrameArena:
             buf = lst.pop() if lst else None
         if buf is None:
             buf = np.empty((c, LANES), np.uint32)
-            STATS.arena_allocated += 1
+            STATS.bump(arena_allocated=1)
         else:
-            STATS.arena_reused += 1
+            STATS.bump(arena_reused=1)
         return buf
 
     def release(self, buf: Optional[np.ndarray]) -> None:
@@ -476,7 +542,7 @@ class FrameArena:
             return
         with self._lock:
             self._free.setdefault(buf.shape[0], []).append(buf)
-        STATS.arena_released += 1
+        STATS.bump(arena_released=1)
 
     def release_on_collect(self, view, buf: np.ndarray) -> None:
         """Recycle ``buf`` once ``view`` has been garbage-collected AND
@@ -521,15 +587,13 @@ def _build_frame_legacy(arr: np.ndarray, *, seed: int, seq: int,
     pad = (-raw.size) % (LANES * 4)
     if pad:
         raw = np.concatenate([raw, np.zeros(pad, np.uint8)])
-        STATS.concat_calls += 1
-        STATS.bytes_copied += raw.size
+        STATS.bump(concat_calls=1, bytes_copied=raw.size)
     payload = raw.view("<u4").reshape(-1, LANES)
     mac = (mac_impl or _mac_np)(payload, seed)
     header = np.zeros(LANES, np.uint32)
     _write_header(header, meta, seed, seq, mac)
-    STATS.concat_calls += 1
-    STATS.bytes_copied += payload.nbytes + header.nbytes
-    STATS.frames_sealed += 1
+    STATS.bump(concat_calls=1, frames_sealed=1,
+               bytes_copied=payload.nbytes + header.nbytes)
     return np.concatenate([header[None], payload.view(np.uint32)], axis=0)
 
 
@@ -603,7 +667,7 @@ def parse_frame(frame: np.ndarray, *, seed: int, expect_seq=None, mac_impl=None)
         raise FrameError("malformed frame — truncated or not lane-aligned")
     _precheck(frame, seed, expect_seq)
     mac = (mac_impl or _mac_np)(frame[1:], seed)
-    STATS.frames_verified += 1
+    STATS.bump(frames_verified=1)
     return _verify_with_mac(frame, seed, mac)
 
 
@@ -713,7 +777,7 @@ def seal_batch(arrays: Sequence[np.ndarray], *, seed: int,
         macs = mac_batch([p for p, _ in packed], seed)
     else:
         macs = [mac_impl(p, seed) for p, _ in packed]
-    STATS.frames_sealed += len(packed)
+    STATS.bump(frames_sealed=len(packed))
     return [_assemble(p, meta, seed, seqs[i], macs[i])
             for i, (p, meta) in enumerate(packed)]
 
@@ -753,7 +817,7 @@ def verify_batch(frames: Sequence[np.ndarray], *, seed: int,
         macs = mac_batch([frames[i][1:] for i in candidates], seed)
     else:
         macs = [mac_impl(frames[i][1:], seed) for i in candidates]
-    STATS.frames_verified += len(candidates)
+    STATS.bump(frames_verified=len(candidates))
     for i, mac in zip(candidates, macs):
         try:
             out[i] = _verify_with_mac(frames[i], seed, mac)

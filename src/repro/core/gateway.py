@@ -217,6 +217,21 @@ class _Shard:
         return self._q.qsize()
 
 
+def _own_result(res):
+    """Snapshot a response that aliases transport storage. The zero-copy
+    data plane verifies responses to views of the session's region/arena
+    slot, which stay valid only until the session's NEXT exchange — a
+    contract fine for the transport layer but a silent-corruption footgun
+    for GatewayClient users (r1's bytes would flip under them when r2 is
+    issued). Client-facing results are therefore always OWNED arrays;
+    the in-place zero-copy wins (seal/verify/envelope assembly) are on
+    the wire path and unaffected."""
+    if isinstance(res, np.ndarray) \
+            and (res.base is not None or not res.flags.owndata):
+        return res.copy()
+    return res
+
+
 def _as_frameable(arr: np.ndarray) -> np.ndarray:
     """Handlers may return any dtype/rank; frame unsupported ones as raw
     bytes. This must never fail: response sealing happens AFTER the
@@ -387,6 +402,7 @@ class ServiceGateway:
         # session thread; single/batch envelopes are unaffected either way
         self.workers = workers
         self._shards: List[_Shard] = [_Shard(i) for i in range(workers)]
+        self._mux: Optional["CallCoalescer"] = None
         self.stats = {"requests": 0, "responses": 0, "macs_verified": 0,
                       "rejected": 0, "deduped": 0, "sheds": 0,
                       "restarts": 0, "crashes": 0, "scatter_envelopes": 0}
@@ -460,7 +476,27 @@ class ServiceGateway:
         self.transport.start()
         return self
 
+    def enable_coalescing(self, *, max_batch: int = 64,
+                          max_wait_us: float = 300.0,
+                          name: str = "gw:coalescer") -> "CallCoalescer":
+        """Turn on the transparent auto-batching mux: concurrent inline
+        ``GatewayClient.call()``s arriving within an adaptive window are
+        folded into ONE scatter envelope / ONE transport round trip (see
+        :class:`CallCoalescer` and docs/protocol.md §5.4). Register every
+        service BEFORE calling this if services use allow-lists — the mux
+        carrier identity (``name``) must be allowed, else those services'
+        calls silently keep the direct path. Returns the mux (also wired
+        into every client's ``call()``)."""
+        if self._mux is not None:
+            raise RuntimeError("coalescing already enabled on this gateway")
+        self._mux = CallCoalescer(self, max_batch=max_batch,
+                                  max_wait_us=max_wait_us, name=name)
+        return self._mux
+
     def close(self):
+        if self._mux is not None:
+            self._mux.close()
+            self._mux = None
         self.transport.close()
         for sh in self._shards:
             sh.close()
@@ -757,15 +793,23 @@ class ServiceGateway:
                 [_route(_ERR, sid, len(blob)), np.frombuffer(blob, np.uint8)])
 
     def _scatter_group(self, cid: int, sid: int, members) -> list:
-        """Execute one channel's scatter items serially — the single-call
-        pipeline (capability checks, MAC verify, dedup window, breaker) —
-        with the batch envelope's positional sequence discipline: every
-        consumed item advances the channel, success or failure, so one bad
-        item cannot desync its neighbours. ``members`` is [(item_index,
-        token, frame), ...] in envelope order; returns [(item_index,
+        """Execute one channel's scatter items — the single-call pipeline
+        (capability checks, MAC verify, dedup window, breaker) — with the
+        batch envelope's positional sequence discipline: every consumed
+        item advances the channel, success or failure, so one bad item
+        cannot desync its neighbours. ``members`` is [(item_index, token,
+        frame), ...] in envelope order; returns [(item_index,
         response_frame | exception), ...]. Runs on the service's shard
         (concurrently with other services' groups) or inline when
-        workers=0 — same semantics either way."""
+        workers=0 — same semantics either way.
+
+        Cohort admission: when the service registered a ``batch_handler``,
+        the group's runnable items (verified, fresh, not dedup-answered)
+        execute as ONE native batch call behind ONE breaker admission —
+        exactly the batch envelope's execution model, which is how an
+        auto-coalesced cohort of inline inference calls joins
+        EngineService's continuous-batching decode grid as one unit.
+        Per-item typed errors are unchanged either way."""
         svc = self._by_sid.get(sid)
         if svc is None:
             e = AccessViolation(f"unknown service id {sid}")
@@ -781,6 +825,7 @@ class ServiceGateway:
             base = chan.server_seq
             saw_fresh = False
             parseable = 0
+            runnable: list = []         # (idx, token, fseq, payload)
             try:
                 for k, (idx, token, frame) in enumerate(members):
                     try:
@@ -809,16 +854,36 @@ class ServiceGateway:
                             raise framing.FrameError(
                                 f"sequence mismatch (got {fseq}, want "
                                 f"{(base + k) & 0xFFFFFFFF})")
-                        resp = self._run_guarded(svc, payload)
-                        self._dedup_put(svc, cid, token, resp)
-                        self.registry.check(svc.server_key, WRITE)
-                        self.registry.check(chan.client_key, READ)
-                        ok.append((idx, fseq, resp))
+                        runnable.append((idx, token, fseq, payload))
                     except ServiceUnavailable as e:
                         self._bump("sheds")
                         out.append((idx, e))
                     except Exception as e:
                         out.append((idx, e))
+                if svc.batch_handler is not None and runnable:
+                    self._scatter_run_batch(svc, chan, cid, runnable,
+                                            ok, out)
+                else:
+                    for idx, token, fseq, payload in runnable:
+                        try:
+                            # re-consult the window: an EARLIER item of this
+                            # very envelope may have executed this token
+                            # (duplicate tokens in one envelope must not
+                            # double-execute, same as sequential items)
+                            resp = self._dedup_get(svc, cid, token)
+                            if resp is not None:
+                                self._bump("deduped")
+                            else:
+                                resp = self._run_guarded(svc, payload)
+                                self._dedup_put(svc, cid, token, resp)
+                            self.registry.check(svc.server_key, WRITE)
+                            self.registry.check(chan.client_key, READ)
+                            ok.append((idx, fseq, resp))
+                        except ServiceUnavailable as e:
+                            self._bump("sheds")
+                            out.append((idx, e))
+                        except Exception as e:
+                            out.append((idx, e))
             finally:
                 # positional discipline, decided per ENVELOPE: any item
                 # sitting at its expected position marks the envelope
@@ -838,6 +903,58 @@ class ServiceGateway:
                     seqs=[q for _, q, _ in ok], mac_impl=self._batch_mac)
                 out.extend((idx, rf) for (idx, _, _), rf in zip(ok, rframes))
         return out
+
+    def _scatter_run_batch(self, svc: _Service, chan: Channel, cid: int,
+                           runnable: list, ok: list, out: list) -> None:
+        """Execute a scatter channel-group's runnable items as ONE native
+        ``batch_handler`` call (the batch envelope's execution model):
+        one breaker admission, one cohort submission — per-item dedup
+        recording and post-execution capability checks preserved. Called
+        under ``chan.slock``."""
+        # duplicate tokens inside one envelope execute ONCE (the sequential
+        # semantics): only each token's first occurrence enters the native
+        # batch; later duplicates are answered from its response below
+        first_of: Dict[int, int] = {}       # token → index into `unique`
+        unique: list = []
+        slot_of: list = []                  # runnable position → unique pos
+        for item in runnable:
+            token = item[1]
+            if token and token in first_of:
+                slot_of.append(first_of[token])
+                continue
+            if token:
+                first_of[token] = len(unique)
+            slot_of.append(len(unique))
+            unique.append(item)
+        outs = None
+        try:
+            svc.health.admit(svc.name)
+            outs = svc.batch_handler([p for _, _, _, p in unique])
+            if len(outs) != len(unique):
+                raise TransportError(
+                    f"batch handler returned {len(outs)} responses "
+                    f"for {len(unique)} requests")
+            svc.health.success()
+        except HandlerCrash:
+            self._service_failure(svc, crashed=True)
+            raise
+        except ServiceUnavailable as e:     # circuit shed, not a failure
+            self._bump("sheds")
+            out.extend((idx, e) for idx, _, _, _ in runnable)
+            return
+        except Exception as e:
+            self._service_failure(svc)
+            out.extend((idx, e) for idx, _, _, _ in runnable)
+            return
+        for (idx, token, fseq, _), k in zip(runnable, slot_of):
+            try:
+                resp = _as_frameable(np.asarray(outs[k]))
+                self._dedup_put(svc, cid, token, resp)
+                self.registry.check(svc.server_key, WRITE)
+                self.registry.check(chan.client_key, READ)
+                ok.append((idx, fseq, resp))
+            except Exception as e:          # noqa: PERF203 — per-item fate
+                out.append((idx, e))
 
     def _dispatch_scatter(self, raw: np.ndarray) -> np.ndarray:
         """Serve one scatter envelope: carve the per-item (route + frame)
@@ -1004,12 +1121,28 @@ class GatewayClient:
         self.backoff = backoff
         self._kp, _ = enroll(gw.ca, name)
         self.cid = next(gw._cid_counter)
-        self._session = gw.transport.connect(f"gw:{name}")
+        # the transport session is created lazily on first wire use: a
+        # client whose calls all ride the coalescing mux never opens its
+        # own wire (at 256 fan-in callers that is 256 spared service
+        # threads), yet keeps one for direct envelopes on demand
+        self._session_obj: Optional[object] = None
+        self._direct = False            # True: never route through the mux
         self._channels: Dict[str, Channel] = {}
         self._lock = threading.Lock()
         self._tokens = itertools.count(1)   # 0 = "no token" on the wire
         self.macs_verified = 0          # response MACs this client checked
         self.retried = 0                # liveness retries this client made
+
+    @property
+    def _session(self):
+        s = self._session_obj
+        if s is None:
+            s = self._session_obj = self.gw.transport.connect(f"gw:{self.name}")
+        return s
+
+    @_session.setter
+    def _session(self, s):
+        self._session_obj = s
 
     def open(self, service: str) -> Channel:
         with self._lock:
@@ -1030,29 +1163,50 @@ class GatewayClient:
         """Recover from a dead/poisoned transport session: reconnect the
         session and (optionally) re-open the service channel so both sides
         restart from a fresh key + sequence 0."""
-        s = self._session
-        if s._crashed or s._closed or s._poisoned:
+        s = self._session_obj
+        if s is not None and (s._crashed or s._closed or s._poisoned):
             self._reconnect()
         if service is not None:
             self.reopen(service)
 
     def _reconnect(self):
-        try:
-            self._session.close()
-        except Exception:
-            pass
-        self._session = self.gw.transport.connect(f"gw:{self.name}")
+        s = self._session_obj
+        if s is not None:
+            try:
+                s.close()
+            except Exception:
+                pass
+        self._session_obj = self.gw.transport.connect(f"gw:{self.name}")
 
-    def call(self, service: str, payload: np.ndarray) -> np.ndarray:
+    def call(self, service: str, payload: np.ndarray, *,
+             token: Optional[int] = None,
+             timeout: Optional[float] = None) -> np.ndarray:
+        """One inline request/response. With coalescing enabled on the
+        gateway (:meth:`ServiceGateway.enable_coalescing`), a plain call
+        (``retries == 0``, no pinned token or deadline) is transparently
+        folded into the mux's next cohort envelope — AFTER this client's
+        own CA/ACL channel check, so per-client authorization is enforced
+        exactly as on the direct path. ``token`` pins the idempotency
+        token (a manual replay of an earlier call) and ``timeout``
+        tightens this call's transport deadline; either takes the direct
+        path."""
         payload = np.asarray(payload)
-        token = next(self._tokens) & 0xFFFFFFFF \
-            or (next(self._tokens) & 0xFFFFFFFF)
+        mux = self.gw._mux
+        if (mux is not None and token is None and timeout is None
+                and self.retries == 0
+                and not self._direct and mux.accepts(service)):
+            self.open(service)          # the CALLER's own CA/ACL gate
+            return mux.call(service, payload)
+        if token is None:
+            token = next(self._tokens) & 0xFFFFFFFF \
+                or (next(self._tokens) & 0xFFFFFFFF)
         attempts = 0
         rekeyed = False
         while True:
             chan = self.open(service)
             try:
-                return self._call_once(chan, payload, token)
+                return self._call_once(chan, payload, token,
+                                       timeout=timeout)
             except AccessViolation as e:
                 # someone's revocation (or a self-healing restart) bumped
                 # the service-domain epoch; a still-certified client just
@@ -1240,7 +1394,7 @@ class GatewayClient:
                     seqs=[q for _, _, q in members], strict=False,
                     mac_impl=self.gw._batch_mac)
                 for (i, _, _), v in zip(members, verified):
-                    results[i] = v
+                    results[i] = _own_result(v)
                     if not isinstance(v, framing.FrameError):
                         self.macs_verified += 1
             for service, k in counts.items():   # every item consumed a seq
@@ -1325,7 +1479,7 @@ class GatewayClient:
                     seqs=[start + i for i in ok_pos], strict=False,
                     mac_impl=self.gw._batch_mac)
                 for p, v in zip(ok_pos, verified):
-                    results[p] = v
+                    results[p] = _own_result(v)
                     if not isinstance(v, framing.FrameError):
                         self.macs_verified += 1
             chan.seq += n                   # every item consumed a sequence
@@ -1336,7 +1490,8 @@ class GatewayClient:
         return results
 
     def _call_once(self, chan: Channel, payload: np.ndarray,
-                   token: int = 0) -> np.ndarray:
+                   token: int = 0,
+                   timeout: Optional[float] = None) -> np.ndarray:
         with self._lock:
             if framing.ZERO_COPY:
                 # fully zero-copy send: route words + the sealed gateway
@@ -1354,12 +1509,13 @@ class GatewayClient:
                         u[4:].reshape(frows, framing.LANES), p,
                         seed=chan.seed, seq=chan.seq, mac_impl=self.gw._mac)
 
-                raw = self._session.request_into(env_nbytes, fill)
+                raw = self._session.request_into(env_nbytes, fill,
+                                                 timeout=timeout)
             else:
                 env = _seal_envelope([GW_MAGIC, chan.sid, self.cid, token],
                                      payload, seed=chan.seed, seq=chan.seq,
                                      mac_impl=self.gw._mac)
-                raw = self._session.request(env)
+                raw = self._session.request(env, timeout=timeout)
             resp = np.ascontiguousarray(np.asarray(raw)) \
                 .view(np.uint8).reshape(-1)
             if resp.nbytes < _ROUTE_BYTES:
@@ -1377,10 +1533,296 @@ class GatewayClient:
                                       mac_impl=self.gw._mac)
             chan.seq += 1
             self.macs_verified += 1
-            return out
+            return _own_result(out)
 
     def close(self):
         self.gw._release_client(self)
         with self._lock:
             self._channels.clear()
-        self._session.close()
+        if self._session_obj is not None:
+            self._session_obj.close()
+
+
+# ---------------------------------------------------------------------------
+# transparent call coalescing (the auto-batching mux)
+# ---------------------------------------------------------------------------
+
+class _PendingCall:
+    """One caller's parked inline call while it rides a cohort."""
+
+    __slots__ = ("service", "payload", "token", "event", "result", "error")
+
+    def __init__(self, service: str, payload: np.ndarray, token: int):
+        self.service = service
+        self.payload = payload
+        self.token = token
+        self.event = threading.Event()
+        self.result: Optional[np.ndarray] = None
+        self.error: Optional[BaseException] = None
+
+
+class CallCoalescer:
+    """Transparent auto-batching for inline gateway calls.
+
+    64 independent clients issuing inline ``call()``s pay one transport
+    round trip (key syncs + doorbell wakeups + scalar MAC) EACH. The mux
+    removes that per-message constant without asking callers to change:
+    concurrent calls arriving within an **adaptive window** are folded
+    into ONE scatter envelope (``GW_SCAT_MAGIC``) on a dedicated carrier
+    client — one round trip, one fused MAC pass per channel group on each
+    side, one wakeup per cohort — and the per-item responses are handed
+    back to their callers. A single-service cohort degenerates server-side
+    to the batch pipeline (one channel group: one fused verify, ONE native
+    ``batch_handler`` call when the service registered one — an
+    EngineService cohort joins the decode grid as one unit, one fused
+    seal).
+
+    Semantics are the inline ones, preserved bit-for-bit:
+
+    * **ordering** — a caller is serial (it blocks for its result), and a
+      channel group executes in envelope order, so per-caller order holds;
+    * **authorization** — ``GatewayClient.call`` opens the CALLER's own
+      channel (CA + allow-list check) before folding; services that refuse
+      the carrier identity simply keep the direct path (:meth:`accepts`);
+    * **idempotency/dedup** — every folded call carries a carrier-minted
+      token; the liveness fallback replays the SAME tokens inline, so an
+      item whose cohort envelope executed but whose response was lost is
+      answered from the gateway dedup window, never re-executed;
+    * **breaker** — items execute under the same ``_run_guarded`` /
+      admission core; a shed surfaces as that item's typed
+      ``ServiceUnavailable``;
+    * **crash** — a cohort envelope that dies on the wire surfaces per
+      item: the mux heals the carrier session and replays each item inline
+      (same token), so a poisoned item fails typed while its cohort-mates
+      recover; a stale-epoch rejection re-keys through the CA and retries
+      once, exactly like ``call()``.
+
+    Adaptive window: the drainer waits
+    ``min(max_wait_us, (max_batch - 1) * EWMA(inter-arrival gap))`` for a
+    cohort to fill — long enough to collect ~``max_batch`` arrivals at the
+    observed rate — and waits nothing at all when arrivals are sparser
+    than ``max_wait_us`` apart (coalescing cannot pay there; latency is
+    not taxed). The window is recomputed per cohort, so the mux tracks
+    load swings. The normative rules live in docs/protocol.md §5.4.
+    """
+
+    def __init__(self, gw: ServiceGateway, *, max_batch: int = 64,
+                 max_wait_us: float = 300.0, name: str = "gw:coalescer",
+                 ewma_alpha: float = 0.2):
+        if max_batch < 1 or max_batch > _MAX_SCATTER:
+            raise ValueError(f"max_batch must be in [1, {_MAX_SCATTER}]")
+        self.gw = gw
+        self.max_batch = int(max_batch)
+        self.max_wait_us = float(max_wait_us)
+        self._alpha = float(ewma_alpha)
+        # retries=2: the liveness-fallback replays ride the carrier's own
+        # bounded retry (same pinned token each attempt → dedup-protected),
+        # so a fault landing on a REPLAY heals too instead of surfacing
+        self._carrier = gw.connect(name, retries=2)
+        self._carrier._direct = True        # the carrier never re-enters
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._pending: List[_PendingCall] = []
+        self._ewma_gap: Optional[float] = None
+        self._last_arrival: Optional[float] = None
+        self._accepted: set = set()         # services the carrier may fold
+        self._refused: set = set()          # services that refuse the carrier
+        self._stop = threading.Event()
+        self.stats: Dict[str, int] = {
+            "cohorts": 0, "coalesced_calls": 0, "max_cohort": 0,
+            "fallback_items": 0, "rekeys": 0}
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="gw-coalescer")
+        self._thread.start()
+
+    # -- caller side --------------------------------------------------------
+    def accepts(self, service: str) -> bool:
+        """True when calls to ``service`` can ride the mux — i.e. the
+        carrier identity is authorized for it. Checked against the CA once
+        and cached BOTH ways: the positive path must not touch the carrier
+        (whose lock is held across a cohort's whole wire round trip — an
+        uncached probe would serialize arriving callers behind the
+        in-flight cohort instead of letting the next cohort form)."""
+        if self._stop.is_set():
+            return False
+        if service in self._accepted:
+            return True
+        if service in self._refused:
+            return False
+        try:
+            self._carrier.open(service)
+            self._accepted.add(service)
+            return True
+        except AccessViolation:
+            self._refused.add(service)
+            return False
+
+    def call(self, service: str, payload: np.ndarray) -> np.ndarray:
+        """Fold one inline call into the next cohort; block for ITS result
+        (or raise its typed error). Callers' wait is bounded past the
+        transport deadline so a wedged cohort can never strand them."""
+        if self._stop.is_set():
+            raise TransportError("coalescer is closed")
+        entry = _PendingCall(service, np.asarray(payload),
+                             self._carrier.mint_tokens(1)[0])
+        with self._cond:
+            # re-check under the lock: close() sets _stop under it too, so
+            # an entry can never slip in after close() drained the queue
+            # (it would otherwise strand until the full event-wait bound)
+            if self._stop.is_set():
+                raise TransportError("coalescer is closed")
+            now = time.monotonic()
+            if self._last_arrival is not None:
+                gap = now - self._last_arrival
+                self._ewma_gap = gap if self._ewma_gap is None else \
+                    (1.0 - self._alpha) * self._ewma_gap + self._alpha * gap
+            self._last_arrival = now
+            self._pending.append(entry)
+            self._cond.notify_all()
+        bound = self.gw.transport.timeout * 2 + self.max_wait_us / 1e6 + 30.0
+        if not entry.event.wait(bound):
+            raise ResponseTimeout(
+                f"coalesced call to {service!r} stalled past the transport "
+                f"deadline")
+        if entry.error is not None:
+            raise entry.error
+        return entry.result
+
+    def _window_s(self) -> float:
+        cap = self.max_wait_us / 1e6
+        gap = self._ewma_gap
+        if gap is None:
+            return cap
+        if gap >= cap:                  # arrivals sparser than the window:
+            return 0.0                  # coalescing can't pay — don't wait
+        return min(cap, gap * (self.max_batch - 1))
+
+    # -- drainer ------------------------------------------------------------
+    def _run(self):
+        while True:
+            with self._cond:
+                while not self._pending:
+                    if self._stop.is_set():
+                        return
+                    self._cond.wait(0.5)
+                deadline = time.monotonic() + self._window_s()
+                while (len(self._pending) < self.max_batch
+                       and not self._stop.is_set()):
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        break
+                    self._cond.wait(remaining)
+                batch = self._pending[: self.max_batch]
+                del self._pending[: len(batch)]
+            try:
+                self._execute(batch)
+            except BaseException as e:  # noqa: B036 — never strand a caller
+                for entry in batch:
+                    if not entry.event.is_set():
+                        if entry.error is None and entry.result is None:
+                            entry.error = TransportError(
+                                f"coalescer dispatch failed: "
+                                f"{type(e).__name__}: {e}")
+                        entry.event.set()
+
+    # the carrier already hands back owned results (_own_result at the
+    # GatewayClient boundary); kept as a second line of defense so a mux
+    # result can never alias storage the next cohort's exchange recycles
+    _own = staticmethod(_own_result)
+
+    def _execute(self, batch: List[_PendingCall]):
+        self.stats["cohorts"] += 1
+        self.stats["coalesced_calls"] += len(batch)
+        self.stats["max_cohort"] = max(self.stats["max_cohort"], len(batch))
+        items = [(e.service, e.payload) for e in batch]
+        tokens = [e.token for e in batch]
+        rekeyed = False
+        while True:
+            try:
+                results = [self._own(r) for r in self._carrier.call_many(
+                    items, return_exceptions=True, tokens=tokens)]
+                break
+            except AccessViolation as e:
+                # pre-dispatch stale epoch (carrier channel open): re-key
+                # through the CA once and resend — the envelope never ran
+                if "stale key epoch" not in str(e) or rekeyed:
+                    results = [e] * len(batch)
+                    break
+                rekeyed = True
+                self.stats["rekeys"] += 1
+                for svc in dict.fromkeys(e2.service for e2 in batch):
+                    self._carrier.reopen(svc)
+            except (ServiceCrashed, ResponseTimeout, TransportError):
+                # the WHOLE envelope died on the wire. Heal the carrier and
+                # replay every item inline with its ORIGINAL token: items
+                # the envelope did execute are answered from the gateway
+                # dedup window (never re-executed); the rest run fresh —
+                # per-item inline semantics, bit-for-bit
+                results = self._fallback(batch)
+                break
+        for entry, res in zip(batch, results):
+            if isinstance(res, AccessViolation) \
+                    and "stale key epoch" in str(res):
+                # per-item stale epoch (revocation landed mid-cohort):
+                # transparent re-key + single inline retry, like call()
+                try:
+                    self._carrier.reopen(entry.service)
+                    res = self._own(self._carrier.call(
+                        entry.service, entry.payload, token=entry.token))
+                    self.stats["rekeys"] += 1
+                except Exception as e2:
+                    res = e2
+            if isinstance(res, BaseException):
+                entry.error = res
+            else:
+                entry.result = res
+            entry.event.set()
+
+    def _fallback(self, batch: List[_PendingCall]) -> list:
+        """Replay a failed cohort inline, item by item, with the ORIGINAL
+        tokens. The whole pass shares ONE transport-deadline budget: each
+        item gets the remaining budget split over the items left, so a
+        wedged service costs its items their (shrinking) share instead of
+        head-of-line blocking every coalesced caller in the process for
+        items x retries x timeout."""
+        self.stats["fallback_items"] += len(batch)
+        deadline = time.monotonic() + self.gw.transport.timeout
+        healed: set = set()                 # services reopened this session
+        out = []
+        for k, entry in enumerate(batch):
+            per_item = max(0.05,
+                           (deadline - time.monotonic()) / (len(batch) - k))
+            try:
+                s = self._carrier._session_obj
+                if s is None or s._crashed or s._closed or s._poisoned:
+                    self._carrier.heal()    # fresh session; channels stale
+                    healed.clear()
+                if entry.service not in healed:
+                    self._carrier.reopen(entry.service)     # seqs reset
+                    healed.add(entry.service)
+                out.append(self._own(self._carrier.call(
+                    entry.service, entry.payload, token=entry.token,
+                    timeout=per_item)))
+            except Exception as e:          # noqa: PERF203 — per-item fate
+                out.append(e)
+        return out
+
+    def close(self):
+        """Stop the drainer, fail anything still parked (typed), release
+        the carrier. Idempotent."""
+        if self._stop.is_set():
+            return
+        with self._cond:                    # atomic with call()'s re-check
+            self._stop.set()
+            self._cond.notify_all()
+        self._thread.join(timeout=10)
+        with self._cond:
+            doomed, self._pending = self._pending, []
+        for entry in doomed:
+            entry.error = TransportError(
+                "coalescer closed while the call was in flight")
+            entry.event.set()
+        try:
+            self._carrier.close()
+        except Exception:
+            pass

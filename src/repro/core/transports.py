@@ -55,6 +55,20 @@ the shared regions (``request_into`` even lets the caller assemble its
 message inside the region). ``framing.ZERO_COPY = False`` restores the
 PR 3 copy pattern for A/B benchmarking — bit-identical frames either way.
 
+Doorbell data plane (this file's coalescing refactor): all shm/mpklink
+signalling now goes through :class:`Doorbell` — a hybrid spin/park wakeup
+(bounded predicate spin, then park on a condition) where ONE ring covers
+every waiter: a flush wakes the service once however many slots it
+published, and a drain pass wakes every poller of the pass with one ring.
+Rings/parks are counted in ``framing.STATS`` (``wakeups`` /
+``doorbell_parks``; ``key_syncs`` aggregates the PKRU sync counts), so
+benchmarks report wakeups-per-request. Rings also carry credit-based flow
+control: ``submit()`` against a full ring blocks up to
+``transport.credit_wait`` for a slot credit (granted when a concurrent
+``poll()`` frees a slot) before raising the typed ``CapacityError``, and
+``poll``/``request`` accept a per-call ``timeout`` tighter than the
+transport deadline.
+
 Failure model: handler exceptions and capacity overflows are propagated to
 the *calling* client as typed exceptions (never swallowed in the service
 thread), and blocking-wait transports (shm, mpklink) bound their response
@@ -256,6 +270,69 @@ def _read_fd(fd: int, n: int, timeout: Optional[float] = None) -> bytearray:
 
 
 # ---------------------------------------------------------------------------
+# doorbell: hybrid spin/park wakeup (one ring covers a whole drain pass)
+# ---------------------------------------------------------------------------
+
+# predicate probes (each yields the GIL) before parking. Small on purpose:
+# sleep(0) is a sched_yield, so a long spin under load burns timeslices a
+# park would have spent asleep — at 64-client fan-in a 32-probe spin more
+# than halves throughput. 2 probes catches publishes that land within a
+# couple of scheduler beats and parks for everything slower (measured
+# best-of {0, 2, 8, 32} across solo latency AND 64-client fan-in, 2 cores)
+DOORBELL_SPIN = 2
+
+
+class Doorbell:
+    """Hybrid spin-then-park wakeup primitive for the ring data plane.
+
+    A waiter first probes its predicate a bounded number of times
+    (:data:`DOORBELL_SPIN`, yielding the GIL between probes — the cheap
+    path when the peer is about to publish), then parks on a condition
+    until :meth:`ring` or the timeout. One ``ring()`` is a broadcast: it
+    covers every waiter, so a service draining a whole batch notifies its
+    pollers ONCE per pass instead of once per message — the wakeup twin of
+    the batched key sync.
+
+    Doorbells sharing one session pass ``lock`` (an RLock) so predicate
+    re-checks inside the park happen under the same lock that guards the
+    state they read. Rings are counted in ``framing.STATS.wakeups`` and
+    parks in ``framing.STATS.doorbell_parks`` — the high-fan-in benchmark
+    reports wakeups/request from these."""
+
+    __slots__ = ("cond", "spin")
+
+    def __init__(self, lock: Optional[threading.RLock] = None,
+                 spin: Optional[int] = None):
+        self.cond = threading.Condition(lock)
+        self.spin = DOORBELL_SPIN if spin is None else spin
+
+    def ring(self):
+        """Wake every waiter (acquires the shared lock briefly)."""
+        with self.cond:
+            self.cond.notify_all()
+        framing.STATS.bump(wakeups=1)
+
+    def ring_owned(self):
+        """:meth:`ring` for callers already holding the shared lock."""
+        self.cond.notify_all()
+        framing.STATS.bump(wakeups=1)
+
+    def wait(self, pred: Callable[[], bool], timeout: float) -> bool:
+        """True once ``pred()`` holds; False when ``timeout`` expires first.
+        Spin phase reads shared state without the lock (safe: the ring's
+        transitions are monotonic and the park re-checks under the lock)."""
+        if pred():
+            return True
+        for _ in range(self.spin):
+            time.sleep(0)               # yield — don't starve the peer
+            if pred():
+                return True
+        framing.STATS.bump(doorbell_parks=1)
+        with self.cond:
+            return self.cond.wait_for(pred, timeout)
+
+
+# ---------------------------------------------------------------------------
 # ring of message slots (the pipelined data plane)
 # ---------------------------------------------------------------------------
 
@@ -296,13 +373,15 @@ class _Ring:
     service's drain cursor (the next ticket it will serve); the client-side
     tail is the session's ticket counter. Every state transition happens
     under ``cv`` — the emulation's stand-in for the guarded head/tail
-    control word of the shared region."""
+    control word of the shared region. ``cv`` shares the session's lock so
+    the session doorbells' parked predicate checks see consistent state;
+    wakeups go through the doorbells, never ``cv`` itself."""
 
-    def __init__(self, capacity: int):
+    def __init__(self, capacity: int, lock: Optional[threading.RLock] = None):
         self.capacity = capacity
         self.slots = [_RingSlot() for _ in range(capacity)]
         self.head = 0                   # service drain cursor (ticket)
-        self.cv = threading.Condition()
+        self.cv = threading.Condition(lock)
 
 
 # ---------------------------------------------------------------------------
@@ -326,6 +405,13 @@ class Session:
         self._closed = False
         self._crashed = False
         self._poisoned = False
+        # one lock guards all ring/signalling state; the two doorbells
+        # (service-facing and client-facing) park on conditions over it so
+        # one ring() covers every waiter of that side
+        self._slk = threading.RLock()
+        self._bell_svc = Doorbell(self._slk)    # client → service wakeups
+        self._bell_cli = Doorbell(self._slk)    # service → client wakeups
+        self._credit_waiters = 0                # submit()s blocked on credit
         # pipelined API state: ring transports use a real _Ring; the
         # lockstep fallback buffers payloads/results per ticket
         self._tickets = 0
@@ -410,12 +496,17 @@ class Session:
         if self._closed:
             raise TransportError(f"session {self.name!r} is closed")
 
-    def request(self, payload: np.ndarray) -> np.ndarray:
+    def request(self, payload: np.ndarray,
+                timeout: Optional[float] = None) -> np.ndarray:
         """Synchronous single exchange: send ``payload``, block for the
-        response (or its typed error). One in flight per session."""
+        response (or its typed error). One in flight per session.
+        ``timeout`` tightens the response deadline for THIS exchange only
+        (transport default when None); expiry poisons the session exactly
+        like a default-deadline timeout."""
         raise NotImplementedError
 
-    def request_into(self, nbytes: int, fill) -> np.ndarray:
+    def request_into(self, nbytes: int, fill,
+                     timeout: Optional[float] = None) -> np.ndarray:
         """Zero-copy producer exchange: the caller's ``fill(dst)`` writes
         the ``nbytes`` message directly into the transport's staging
         storage (a uint8 view of the shared region on mpklink — the
@@ -425,15 +516,17 @@ class Session:
         so callers never special-case."""
         buf = np.empty(nbytes, np.uint8)
         fill(buf)
-        return self.request(buf)
+        return self.request(buf, timeout=timeout)
 
     # -- pipelined API (ring transports override; base = lockstep fallback) --
     def submit(self, payload: np.ndarray) -> int:
         """Stage one request; returns a ticket redeemable with
         :meth:`poll`. The lockstep fallback buffers the payload and runs
         the exchange lazily inside poll(); ring transports write the
-        message into the next free slot (raising :class:`CapacityError`
-        when all ``ring_slots`` are in flight)."""
+        message into the next free slot. A full ring backpressures:
+        submit blocks up to ``transport.credit_wait`` for a slot credit (a
+        concurrent poll() freeing a slot grants one) and only then raises
+        a typed :class:`CapacityError`."""
         self._check_usable()
         t = self._tickets
         self._tickets += 1
@@ -448,18 +541,23 @@ class Session:
 
     def poll(self, ticket: int, timeout: Optional[float] = None) -> np.ndarray:
         """Redeem ``ticket``: return its response, or raise its typed
-        error. Ring transports block up to ``timeout`` (transport default
-        when None); this lockstep fallback runs the buffered exchange via
-        ``request()``, which is always bounded by the transport deadline —
-        a tighter per-poll ``timeout`` is not honored here."""
+        error. Blocks up to ``timeout`` (transport default when None) —
+        honored by ring transports through the doorbell wait AND by this
+        lockstep fallback, which runs the buffered exchanges under one
+        per-poll deadline (each lazy ``request()`` gets the remaining
+        budget)."""
         if ticket not in self._lazy_results and ticket not in self._lazy_pending:
             raise TransportError(f"unknown or already-redeemed ticket {ticket}")
+        deadline = None if timeout is None else time.monotonic() + timeout
         for t in sorted(self._lazy_pending):        # FIFO up to the ticket
             if t > ticket:
                 break
             payload = self._lazy_pending.pop(t)
             try:
-                self._lazy_results[t] = (True, self.request(payload))
+                remaining = None if deadline is None \
+                    else max(1e-3, deadline - time.monotonic())
+                self._lazy_results[t] = (True, self.request(
+                    payload, timeout=remaining))
             except Exception as e:
                 self._lazy_results[t] = (False, e)
         ok, val = self._lazy_results.pop(ticket)
@@ -502,37 +600,90 @@ class Session:
         never-issued ticket raises immediately (never a deadline wait on a
         healthy session), a crash surfaces as ServiceCrashed for anything
         not already completed, and a deadline expiry poisons the session
-        like a lockstep timeout."""
+        like a lockstep timeout. The wait itself is the client doorbell:
+        bounded spin on the slot state, then park — ONE service-side ring
+        per drain pass wakes every poller of that pass."""
         ring = self._ring
         if ring is None or ticket >= self._tickets:
             raise TransportError(f"unknown ticket {ticket}")
         timeout = self.transport.timeout if timeout is None else timeout
         deadline = time.monotonic() + timeout
         slot = ring.slots[ticket % ring.capacity]
+
+        def settled():                  # lock-free probe; re-checked locked
+            return (slot.ticket == ticket and slot.state == _DONE) \
+                or self._crashed or self._closed
+
         with ring.cv:
             if ticket not in self._outstanding:
                 raise TransportError(f"ticket {ticket} already redeemed")
-            while True:
+        while True:
+            self._bell_cli.wait(
+                settled, max(0.0, deadline - time.monotonic()))
+            with ring.cv:
                 if slot.ticket == ticket and slot.state == _DONE:
-                    break
+                    self._outstanding.discard(ticket)
+                    err, slot.error = slot.error, None
+                    extracted = None if err is not None \
+                        else self._slot_take(slot)
+                    slot.state = _FREE
+                    if self._credit_waiters:    # grant the freed credit
+                        self._bell_cli.ring_owned()
+                    return err, extracted
                 if self._crashed:
                     raise ServiceCrashed(
                         f"session {self.name!r}: service thread died with "
                         f"ticket {ticket} in flight")
                 if self._closed:
                     raise TransportError(f"session {self.name!r} is closed")
-                remaining = deadline - time.monotonic()
-                if remaining <= 0:
+                if time.monotonic() >= deadline:
                     self._poisoned = True
                     raise ResponseTimeout(
                         f"ring response timed out after {timeout}s")
-                ring.cv.wait(remaining)
-            self._outstanding.discard(ticket)
-            err, slot.error = slot.error, None
-            extracted = None if err is not None else self._slot_take(slot)
-            slot.state = _FREE
-            ring.cv.notify_all()
-        return err, extracted
+
+    def _await_credit(self, ring: _Ring):
+        """Credit-based ring flow control: block (bounded by
+        ``transport.credit_wait``) until the next slot is FREE — a
+        concurrent :meth:`poll` freeing a slot grants the credit — instead
+        of rejecting a full ring outright. Anything already staged is
+        published first so in-flight work can complete while we wait. On
+        expiry (e.g. a serial caller that will never poll concurrently)
+        raises the typed :class:`CapacityError`."""
+        slot = ring.slots[self._tickets % ring.capacity]
+        if slot.state == _FREE:
+            return
+        # the credit clock starts BEFORE the publish: the flush below lets
+        # the service drain in-flight work but must not extend the bound
+        # (its own key-sync handshake is separately crash/close-bounded)
+        deadline = time.monotonic() + self.transport.credit_wait
+        self.flush()
+
+        def free():
+            return slot.state == _FREE or self._crashed or self._closed
+
+        with ring.cv:
+            self._credit_waiters += 1
+        try:
+            while True:
+                self._bell_cli.wait(
+                    free, max(0.0, deadline - time.monotonic()))
+                with ring.cv:
+                    if slot.state == _FREE:
+                        return
+                    if self._crashed:
+                        raise ServiceCrashed(
+                            f"session {self.name!r}: service thread died "
+                            f"while waiting for a ring credit")
+                    if self._closed:
+                        raise TransportError(
+                            f"session {self.name!r} is closed")
+                    if time.monotonic() >= deadline:
+                        raise CapacityError(
+                            f"ring full ({ring.capacity} messages in "
+                            f"flight) — poll() before submitting more")
+        finally:
+            with ring.cv:
+                self._credit_waiters -= 1
 
 
 class Transport:
@@ -547,12 +698,16 @@ class Transport:
 
     name = "?"
     DEFAULT_RING_SLOTS = 8              # in-flight messages per session ring
+    DEFAULT_CREDIT_WAIT = 1.0           # submit() backpressure bound (s)
 
     def __init__(self, handler: Handler, timeout: float = 120.0,
-                 ring_slots: Optional[int] = None):
+                 ring_slots: Optional[int] = None,
+                 credit_wait: Optional[float] = None):
         self.handler = handler
         self.timeout = timeout          # client-side response deadline
         self.ring_slots = ring_slots or self.DEFAULT_RING_SLOTS
+        self.credit_wait = self.DEFAULT_CREDIT_WAIT \
+            if credit_wait is None else credit_wait
         self.arena = framing.FrameArena()
         self._sessions: List[Session] = []
         self._slock = threading.Lock()
@@ -655,9 +810,10 @@ class PipeSession(Session):
         except OSError:
             pass
 
-    def request(self, payload: np.ndarray) -> np.ndarray:
+    def request(self, payload: np.ndarray,
+                timeout: Optional[float] = None) -> np.ndarray:
         self._check_usable()
-        timeout = self.transport.timeout
+        timeout = self.transport.timeout if timeout is None else timeout
         raw = np.ascontiguousarray(payload).view(np.uint8).reshape(-1)
         try:
             _write_fd_deadline(self._c2s[1],
@@ -751,8 +907,11 @@ class UDSSession(Session):
         except OSError:
             pass
 
-    def request(self, payload: np.ndarray) -> np.ndarray:
+    def request(self, payload: np.ndarray,
+                timeout: Optional[float] = None) -> np.ndarray:
         self._check_usable()
+        eff = self.transport.timeout if timeout is None else timeout
+        self._client.settimeout(eff)
         raw = np.ascontiguousarray(payload).view(np.uint8).reshape(-1)
         try:
             # sends are inside the timeout net too: a send-side stall (full
@@ -770,7 +929,7 @@ class UDSSession(Session):
                 raise ServiceCrashed(
                     f"session {self.name!r}: service thread died mid-request")
             raise ResponseTimeout(
-                f"uds response timed out after {self.transport.timeout}s")
+                f"uds response timed out after {eff}s")
 
     def _teardown(self):
         self._client.close()
@@ -808,15 +967,24 @@ class ShmSession(Session):
         self._req_len = 0
         self._resp_len = 0
         self._req_pending = False       # lockstep request staged (vs ring wake)
+        self._resp_flag = False         # lockstep response/error delivered
         self._error: Optional[BaseException] = None
-        self._req_ready = threading.Event()
-        self._resp_ready = threading.Event()
+
+    def _svc_pending(self) -> bool:
+        """Service doorbell predicate: a lockstep request is staged, a
+        published ring slot awaits the drain cursor, or we're stopping."""
+        if self._stop.is_set() or self._req_pending:
+            return True
+        ring = self._ring
+        if ring is None:
+            return False
+        slot = ring.slots[ring.head % ring.capacity]
+        return slot.state == _PUBLISHED and slot.ticket == ring.head
 
     def _serve_loop(self):
         while not self._stop.is_set():
-            if not self._req_ready.wait(timeout=0.5):
+            if not self._bell_svc.wait(self._svc_pending, timeout=0.5):
                 continue
-            self._req_ready.clear()
             if self._stop.is_set():
                 return
             if self._req_pending:
@@ -841,12 +1009,13 @@ class ShmSession(Session):
         except Exception as e:                 # incl. CapacityError
             self._error = e
             self._resp_len = 0
-        self._resp_ready.set()
+        self._resp_flag = True
+        self._bell_cli.ring()
 
     # -- ring (pipelined) path: slots are recycled arena buffers -----------
     def _ring_obj(self) -> _Ring:
         if self._ring is None:
-            self._ring = _Ring(self.transport.ring_slots)
+            self._ring = _Ring(self.transport.ring_slots, self._slk)
         return self._ring
 
     @staticmethod
@@ -861,11 +1030,8 @@ class ShmSession(Session):
             raise CapacityError(
                 f"shm region ({self.capacity}B) cannot hold {raw.nbytes}B payload")
         ring = self._ring_obj()
-        with ring.cv:                   # cheap backpressure reject BEFORE
-            if ring.slots[self._tickets % ring.capacity].state != _FREE:
-                raise CapacityError(    # paying for a slot + payload copy
-                    f"ring full ({ring.capacity} messages in flight) — "
-                    f"poll() before submitting more")
+        # credit-based backpressure BEFORE paying for a slot + payload copy
+        self._await_credit(ring)
         buf = self.transport.arena.acquire(self._bytes_rows(raw.nbytes))
         buf.reshape(-1).view(np.uint8)[: raw.nbytes] = raw
         with ring.cv:
@@ -896,18 +1062,22 @@ class ShmSession(Session):
                     s.state = _PUBLISHED
                     published = True
         if published:
-            self._req_ready.set()       # wake the service thread
+            self._bell_svc.ring()       # one ring covers the whole flush
 
     def _drain_ring(self):
+        """Consume published slots in ticket order; completed slots are
+        announced with ONE client-doorbell ring per drain pass (not one
+        per slot) — the wakeup twin of the batched key sync."""
         ring = self._ring
         if ring is None:
             return
         arena = self.transport.arena
+        completed = 0
         while True:
             with ring.cv:
                 slot = ring.slots[ring.head % ring.capacity]
                 if slot.state != _PUBLISHED or slot.ticket != ring.head:
-                    return
+                    break
                 req = slot.req.reshape(-1).view(np.uint8)[: slot.req_len]
             error = resp = rbuf = None
             try:                        # handler outside the ring lock
@@ -939,7 +1109,9 @@ class ShmSession(Session):
                     slot.resp_len = 0
                 slot.state = _DONE
                 ring.head += 1
-                ring.cv.notify_all()
+                completed += 1
+        if completed:
+            self._bell_cli.ring()
 
     def _slot_take(self, slot: _RingSlot):
         """Hand the response back as a read-only view of the arena buffer;
@@ -964,32 +1136,31 @@ class ShmSession(Session):
         # not sit out the full deadline against a dead service thread
         self._error = exc
         self._resp_len = 0
-        self._resp_ready.set()
-        if self._ring is not None:
-            with self._ring.cv:
-                self._ring.cv.notify_all()
+        self._resp_flag = True
+        self._bell_cli.ring()
 
     def _wake(self):
         # a waiter woken by close() must get an error, never the previous
         # request's bytes masquerading as its response
         self._error = TransportError("session closed while request in flight")
-        self._req_ready.set()
-        self._resp_ready.set()
-        if self._ring is not None:
-            with self._ring.cv:
-                self._ring.cv.notify_all()
+        self._resp_flag = True
+        self._bell_svc.ring()
+        self._bell_cli.ring()
 
-    def request(self, payload: np.ndarray) -> np.ndarray:
+    def request(self, payload: np.ndarray,
+                timeout: Optional[float] = None) -> np.ndarray:
         self._check_usable()
+        eff = self.transport.timeout if timeout is None else timeout
         raw = np.ascontiguousarray(payload).view(np.uint8).reshape(-1)
         if raw.nbytes > self.capacity:
             raise CapacityError(
                 f"shm region ({self.capacity}B) cannot hold {raw.nbytes}B payload")
         self._req[: raw.nbytes] = raw
         self._req_len = raw.nbytes
+        self._resp_flag = False
         self._req_pending = True
-        self._req_ready.set()
-        if not self._resp_ready.wait(timeout=self.transport.timeout):
+        self._bell_svc.ring()
+        if not self._bell_cli.wait(lambda: self._resp_flag, eff):
             # the service thread may still deliver later; never let that
             # stale response be mistaken for the answer to a NEW request
             self._poisoned = True
@@ -997,8 +1168,8 @@ class ShmSession(Session):
                 raise ServiceCrashed(
                     f"session {self.name!r}: service thread died mid-request")
             raise ResponseTimeout(
-                f"shm response timed out after {self.transport.timeout}s")
-        self._resp_ready.clear()
+                f"shm response timed out after {eff}s")
+        self._resp_flag = False
         if self._error is not None:
             err, self._error = self._error, None
             raise err
@@ -1017,8 +1188,10 @@ class ShmTransport(Transport):
     DEFAULT_CAPACITY = 512 * 1024      # ≈70k words of ~7 chars — fails at 100k
 
     def __init__(self, handler: Handler, capacity: int = DEFAULT_CAPACITY,
-                 timeout: float = 120.0, ring_slots: Optional[int] = None):
-        super().__init__(handler, timeout=timeout, ring_slots=ring_slots)
+                 timeout: float = 120.0, ring_slots: Optional[int] = None,
+                 credit_wait: Optional[float] = None):
+        super().__init__(handler, timeout=timeout, ring_slots=ring_slots,
+                         credit_wait=credit_wait)
         self.capacity = capacity
 
     def _make_session(self, name):
@@ -1107,8 +1280,11 @@ class GrpcSimSession(Session):
         except OSError:
             pass
 
-    def request(self, payload: np.ndarray) -> np.ndarray:
+    def request(self, payload: np.ndarray,
+                timeout: Optional[float] = None) -> np.ndarray:
         self._check_usable()
+        eff = self.transport.timeout if timeout is None else timeout
+        self._client.settimeout(eff)
         raw = np.ascontiguousarray(payload).view(np.uint8).reshape(-1)
         try:
             self._send_msg(self._client, {"op": "count", "data": raw.tobytes()})
@@ -1119,7 +1295,7 @@ class GrpcSimSession(Session):
                 raise ServiceCrashed(
                     f"session {self.name!r}: service thread died mid-request")
             raise ResponseTimeout(
-                f"grpc_sim response timed out after {self.transport.timeout}s")
+                f"grpc_sim response timed out after {eff}s")
         if resp.get("status"):
             _raise_remote(resp["error"])
         return np.frombuffer(resp["data"], np.uint8)
@@ -1173,9 +1349,9 @@ class MPKLinkSession(Session):
         self._region_req = np.zeros((0, framing.LANES), np.uint32)
         self._region_resp = np.zeros((0, framing.LANES), np.uint32)
         self._pkru = np.zeros(2, np.uint64)        # [pkru_word, epoch]
-        self._chunk_ready = threading.Event()
-        self._chunk_ack = threading.Event()
-        self._resp_ready = threading.Event()
+        self._chunk_pending = False                # client staged a chunk sync
+        self._chunk_acked = False                  # service loaded the PKRU word
+        self._resp_flag = False                    # lockstep response delivered
         self._final = False                        # last chunk of a request?
         self._error: Optional[BaseException] = None
         self._req_rows = 0
@@ -1190,12 +1366,19 @@ class MPKLinkSession(Session):
         self._pkru[1] = self.registry.epoch(self.domain)
         self.sync_count += 1
         self.transport._bump_sync()
-        self._chunk_ready.set()
+        self._chunk_acked = False
+        self._chunk_pending = True
+        self._bell_svc.ring()
         # bounded ack wait: a service thread that dies mid-exchange acks at
         # most once (via _notify_crash), so an unbounded wait here could
         # strand a multi-sync send/flush forever — surface the typed crash
         # instead, preserving the 'no transport can deadlock' bound
-        while not self._chunk_ack.wait(timeout=0.5):
+        while True:
+            self._bell_cli.wait(
+                lambda: self._chunk_acked or self._crashed or self._closed
+                or self._stop.is_set(), timeout=0.5)
+            if self._chunk_acked:
+                break
             if self._crashed:
                 raise ServiceCrashed(
                     f"session {self.name!r}: service thread died during a "
@@ -1203,18 +1386,27 @@ class MPKLinkSession(Session):
             if self._closed or self._stop.is_set():
                 raise TransportError(
                     f"session {self.name!r} closed during a key sync")
-        self._chunk_ack.clear()
+        self._chunk_acked = False
+
+    def _svc_pending(self) -> bool:
+        return self._stop.is_set() or self._chunk_pending
 
     def _serve_loop(self):
         while not self._stop.is_set():
-            if not self._chunk_ready.wait(timeout=0.5):
+            if not self._bell_svc.wait(self._svc_pending, timeout=0.5):
                 continue
-            self._chunk_ready.clear()
+            if not self._chunk_pending:            # woken to stop
+                if self._stop.is_set():
+                    return
+                continue
+            self._chunk_pending = False
             if self._stop.is_set():
-                self._chunk_ack.set()
+                self._chunk_acked = True
+                self._bell_cli.ring()
                 return
             final = self._final                    # read before acking
-            self._chunk_ack.set()                  # reader loads PKRU word
+            self._chunk_acked = True               # reader loads PKRU word
+            self._bell_cli.ring()
             self._drain_ring()                     # published ring slots
             if not final:
                 continue
@@ -1230,7 +1422,8 @@ class MPKLinkSession(Session):
             except framing.FrameError:
                 self._error = None                 # guard rejection, not a crash
                 self._resp_rows = 0
-                self._resp_ready.set()
+                self._resp_flag = True
+                self._bell_cli.ring()
                 continue
             self.registry.check(self.key_server, WRITE)
             try:
@@ -1241,7 +1434,8 @@ class MPKLinkSession(Session):
             except Exception as e:
                 self._error = e
                 self._resp_rows = 0
-                self._resp_ready.set()
+                self._resp_flag = True
+                self._bell_cli.ring()
                 continue
             rows = framing.frame_rows(resp.nbytes)
             if self._region_resp.shape[0] < rows:
@@ -1255,26 +1449,25 @@ class MPKLinkSession(Session):
             self._resp_rows = rows
             self.sync_count += 1                   # response-side key sync
             self.transport._bump_sync()
-            self._resp_ready.set()
+            self._resp_flag = True
+            self._bell_cli.ring()
 
     def _notify_crash(self, exc: ServiceCrashed):
         # wake both the chunk-sync and response waiters with the typed crash
+        # (one client-doorbell ring covers chunk-ack, lockstep and ring
+        # pollers — they all park on the same bell)
         self._error = exc
         self._resp_rows = 0
-        self._chunk_ack.set()
-        self._resp_ready.set()
-        if self._ring is not None:
-            with self._ring.cv:
-                self._ring.cv.notify_all()
+        self._chunk_acked = True
+        self._resp_flag = True
+        self._bell_cli.ring()
 
     def _wake(self):
         self._final = False
-        self._chunk_ready.set()
-        self._chunk_ack.set()
-        self._resp_ready.set()
-        if self._ring is not None:
-            with self._ring.cv:
-                self._ring.cv.notify_all()
+        self._chunk_acked = True
+        self._resp_flag = True
+        self._bell_svc.ring()
+        self._bell_cli.ring()
 
     def _teardown(self):
         # give the pkey back (pkey_free) so long-lived transports can cycle
@@ -1285,7 +1478,8 @@ class MPKLinkSession(Session):
         if self._region_req.shape[0] < rows:
             self._region_req = np.zeros((rows, framing.LANES), np.uint32)
 
-    def request(self, payload: np.ndarray) -> np.ndarray:
+    def request(self, payload: np.ndarray,
+                timeout: Optional[float] = None) -> np.ndarray:
         self._check_usable()
         payload = np.ascontiguousarray(np.asarray(payload))
         rows = framing.frame_rows(payload.nbytes)
@@ -1297,12 +1491,13 @@ class MPKLinkSession(Session):
             # measured cost model is the sync COUNT, not the copy schedule)
             framing.seal_into(self._region_req, payload, seed=self.seed,
                               seq=self._seq, mac_impl=self._mac)
-            return self._exchange(rows)
+            return self._exchange(rows, timeout=timeout)
         frame = framing.build_frame(payload, seed=self.seed,
                                     seq=self._seq, mac_impl=self._mac)
-        return self._exchange(rows, legacy_frame=frame)
+        return self._exchange(rows, legacy_frame=frame, timeout=timeout)
 
-    def request_into(self, nbytes: int, fill) -> np.ndarray:
+    def request_into(self, nbytes: int, fill,
+                     timeout: Optional[float] = None) -> np.ndarray:
         """Fully zero-copy producer path: ``fill(dst)`` writes the message
         straight into the request region's payload bytes, which are then
         pad-zeroed, MAC'd in place and headed (framing.seal_prefilled) —
@@ -1311,20 +1506,23 @@ class MPKLinkSession(Session):
         if not framing.ZERO_COPY:
             buf = np.empty(nbytes, np.uint8)
             fill(buf)
-            return self.request(buf)
+            return self.request(buf, timeout=timeout)
         rows = framing.frame_rows(nbytes)
         self._grow_req(rows)
         body = self._region_req[1:rows].reshape(-1).view(np.uint8)[:nbytes]
         fill(body)      # the filler accounts its own writes (STATS)
         framing.seal_prefilled(self._region_req, nbytes, seed=self.seed,
                                seq=self._seq, mac_impl=self._mac)
-        return self._exchange(rows)
+        return self._exchange(rows, timeout=timeout)
 
     def _exchange(self, rows: int,
-                  legacy_frame: Optional[np.ndarray] = None) -> np.ndarray:
+                  legacy_frame: Optional[np.ndarray] = None,
+                  timeout: Optional[float] = None) -> np.ndarray:
         """The chunk-sync publish loop + bounded response wait + response
         guard, shared by request()/request_into()."""
+        eff = self.transport.timeout if timeout is None else timeout
         chunk_rows = max(1, self.chunk // (framing.LANES * 4))
+        self._resp_flag = False
         for s in range(0, rows, chunk_rows):
             e = min(rows, s + chunk_rows)
             if legacy_frame is not None:
@@ -1332,14 +1530,14 @@ class MPKLinkSession(Session):
             self._req_rows = rows
             self._final = e >= rows
             self._sync_key(self.key_client, WRITE)
-        if not self._resp_ready.wait(timeout=self.transport.timeout):
+        if not self._bell_cli.wait(lambda: self._resp_flag, eff):
             self._poisoned = True       # a late response must never be
             if self._crashed:           # read back as the next one's answer
                 raise ServiceCrashed(
                     f"session {self.name!r}: service thread died mid-request")
             raise ResponseTimeout(
-                f"mpklink response timed out after {self.transport.timeout}s")
-        self._resp_ready.clear()
+                f"mpklink response timed out after {eff}s")
+        self._resp_flag = False
         if self._resp_rows == 0:
             if self._error is not None:
                 err, self._error = self._error, None
@@ -1357,7 +1555,7 @@ class MPKLinkSession(Session):
     # -- ring (pipelined) path --------------------------------------------
     def _ring_obj(self) -> _Ring:
         if self._ring is None:
-            self._ring = _Ring(self.transport.ring_slots)
+            self._ring = _Ring(self.transport.ring_slots, self._slk)
         return self._ring
 
     def _stage_frame(self, frame: np.ndarray, buf=None) -> int:
@@ -1393,13 +1591,10 @@ class MPKLinkSession(Session):
 
     def submit(self, payload: np.ndarray) -> int:
         payload = np.asarray(payload)
+        self._check_usable()
+        # credit-based backpressure BEFORE paying for a slot + seal + MAC
+        self._await_credit(self._ring_obj())
         if framing.ZERO_COPY:
-            ring = self._ring_obj()
-            with ring.cv:               # cheap backpressure reject BEFORE
-                if ring.slots[self._tickets % ring.capacity].state != _FREE:
-                    raise CapacityError(    # paying for a slot + seal + MAC
-                        f"ring full ({ring.capacity} messages in flight) — "
-                        f"poll() before submitting more")
             # stage the frame straight into a recycled arena slot: one
             # payload write, no build/concat staging
             buf = self.transport.arena.acquire(
@@ -1467,7 +1662,7 @@ class MPKLinkSession(Session):
                         slot.req = None
                         slot.error = res
                         slot.state = _DONE
-                        ring.cv.notify_all()
+                        self._bell_cli.ring_owned()     # fail fast per slot
                     continue
                 try:                    # handler errors stay per-slot typed;
                     resp = np.ascontiguousarray(self.handler(res)) \
@@ -1484,7 +1679,7 @@ class MPKLinkSession(Session):
                         slot.req = None
                         slot.error = e
                         slot.state = _DONE
-                        ring.cv.notify_all()
+                        self._bell_cli.ring_owned()     # fail fast per slot
                     continue
                 ok_slots.append(slot)
                 responses.append(resp)
@@ -1516,7 +1711,9 @@ class MPKLinkSession(Session):
                         slot.resp_frame = rf
                         slot.resp = rb
                         slot.state = _DONE
-                    ring.cv.notify_all()
+                    # ONE doorbell ring covers every poller of the pass —
+                    # the wakeup twin of the batched response key sync
+                    self._bell_cli.ring_owned()
 
     def _slot_take(self, slot: _RingSlot):
         rframe, slot.resp_frame = slot.resp_frame, None
@@ -1641,8 +1838,10 @@ class MPKLinkTransport(Transport):
                  max_keys: Optional[int] = None,
                  server_name: str = "svc-server",
                  timeout: float = 120.0,
-                 ring_slots: Optional[int] = None):
-        super().__init__(handler, timeout=timeout, ring_slots=ring_slots)
+                 ring_slots: Optional[int] = None,
+                 credit_wait: Optional[float] = None):
+        super().__init__(handler, timeout=timeout, ring_slots=ring_slots,
+                         credit_wait=credit_wait)
         self.chunk = chunk or self.CHUNK
         self._mac = mac_impl
         self.server_name = server_name
@@ -1676,6 +1875,7 @@ class MPKLinkTransport(Transport):
     def _bump_sync(self):
         with self._sync_lock:
             self.sync_count += 1
+        framing.STATS.bump(key_syncs=1)
 
     @property
     def _seq(self) -> int:

@@ -192,6 +192,7 @@ class EngineService:
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self.crashes = 0                        # tick-loop crashes survived
+        self.cohorts: List[int] = []            # batch-submission sizes seen
         self._inject_crash = False              # test hook: die on next tick
 
     # -- lifecycle ---------------------------------------------------------
@@ -358,7 +359,11 @@ class EngineService:
         All N prompts enter the engine queue under ONE lock acquisition and
         one wake signal, so they join the decode slot grid as a cohort and
         share every decode step from the first tick — continuous batching
-        absorbs the whole batch instead of trickling it in per call.
+        absorbs the whole batch instead of trickling it in per call. Both
+        the explicit batch envelope AND an auto-coalesced cohort of inline
+        calls (the gateway mux's scatter group) land here, so transparent
+        coalescing reaches the decode grid as one admission unit
+        (``cohorts`` records each submission's size for observability).
         Returns the N generated-token arrays in request order; if any
         request fails (engine crash mid-decode, timeout) its typed error is
         raised and the rest of the cohort is cancelled — the gateway turns
@@ -368,6 +373,7 @@ class EngineService:
             raise RuntimeError("EngineService is closed")
         waits = []
         with self._lock:
+            self.cohorts.append(len(parsed))
             for max_new, prompt in parsed:
                 rid = next(self._rid)
                 ev = threading.Event()

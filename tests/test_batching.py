@@ -160,7 +160,9 @@ def test_ring_wraparound(cls):
 
 
 def test_ring_full_is_typed_capacity_error():
-    tr = ShmTransport(wordcount_handler, ring_slots=2)
+    # credit_wait shortens the backpressure window: a serial caller (nobody
+    # polling concurrently) must still end in the typed CapacityError
+    tr = ShmTransport(wordcount_handler, ring_slots=2, credit_wait=0.05)
     s = tr.connect("full")
     try:
         t0 = s.submit(make_text(1, seed=0))

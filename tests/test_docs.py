@@ -86,6 +86,14 @@ def test_committed_benchmark_jsons_match_docs_claims():
     assert gw.get("zero_copy_gate_mpklink_opt_1p5x") is True
     assert gw.get("scatter_gate_workers4_2x") is True
     assert gw["scatter_speedup_vs_sequential"]["workers4"] >= 2.0
+    # PR 5 gates: adaptive coalescing at high fan-in
+    assert gw.get("coalesce_gate_mpklink_opt_64c_2x") is True
+    assert gw.get("coalesce_wakeup_gate_4x") is True
+    fi = gw["fanin_speedup_coalesced_over_inline"]
+    assert fi["mpklink_opt/64c"] >= 2.0
+    assert fi["mpklink_opt/64c_wakeup_reduction"] >= 4.0
+    for cell in gw["fanin_results"]:
+        assert cell["all_macs_verified"] is True, cell["mode"]
     zc_k4 = [v for k, v in gw["zero_copy_speedup"].items()
              if k.startswith("mpklink_opt/") and k.endswith("/k4")]
     assert zc_k4 and min(zc_k4) >= 1.5

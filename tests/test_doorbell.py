@@ -1,0 +1,339 @@
+"""Doorbell/credit data plane: hybrid spin/park wakeups, credit-based ring
+flow control, per-poll timeouts, and thread-safe FrameStats accounting.
+
+The contract under test (normative in docs/protocol.md §4.4):
+
+* one doorbell ring covers a whole publish/drain pass — wakeups scale with
+  round trips, not messages;
+* ``submit()`` against a full ring backpressures (a concurrent ``poll()``
+  grants the credit) and only raises typed ``CapacityError`` after the
+  bounded ``credit_wait``;
+* ``poll(ticket, timeout=...)`` honors a timeout tighter than the transport
+  deadline — on the ring transports (through the doorbell wait) AND on the
+  stream transports' lockstep fallback;
+* ``framing.STATS`` counters are exact under concurrent writers.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import framing
+from repro.core.transports import (CapacityError, Doorbell,
+                                   MPKLinkOptTransport, PipeTransport,
+                                   ResponseTimeout, ShmTransport,
+                                   TransportError)
+from repro.core.wordcount import make_text, parse_count, wordcount_handler
+
+
+def _echo(req):
+    return np.asarray(req)
+
+
+# ---------------------------------------------------------------------------
+# Doorbell primitive
+# ---------------------------------------------------------------------------
+
+def test_doorbell_ring_wakes_parked_waiter_and_counts():
+    bell = Doorbell(threading.RLock(), spin=0)
+    state = {"flag": False}
+    woke = threading.Event()
+
+    def waiter():
+        assert bell.wait(lambda: state["flag"], timeout=10.0)
+        woke.set()
+
+    st0 = framing.STATS.snapshot()
+    t = threading.Thread(target=waiter, daemon=True)
+    t.start()
+    time.sleep(0.05)                    # let it park
+    with bell.cond:
+        state["flag"] = True
+    bell.ring()
+    assert woke.wait(5.0), "parked waiter never woke on ring()"
+    t.join(5.0)
+    st1 = framing.STATS.snapshot()
+    assert st1["wakeups"] - st0["wakeups"] == 1
+    assert st1["doorbell_parks"] - st0["doorbell_parks"] >= 1
+
+
+def test_doorbell_true_predicate_never_parks():
+    bell = Doorbell(threading.RLock())
+    st0 = framing.STATS.snapshot()
+    assert bell.wait(lambda: True, timeout=0.0)
+    st1 = framing.STATS.snapshot()
+    assert st1["doorbell_parks"] == st0["doorbell_parks"]
+
+
+def test_doorbell_wait_times_out_false():
+    bell = Doorbell(threading.RLock(), spin=0)
+    t0 = time.perf_counter()
+    assert not bell.wait(lambda: False, timeout=0.05)
+    assert time.perf_counter() - t0 < 2.0
+
+
+# ---------------------------------------------------------------------------
+# wakeups scale with round trips, not messages
+# ---------------------------------------------------------------------------
+
+def test_batch_wakeups_are_per_pass_not_per_message():
+    """16 lockstep exchanges ring ~3 bells each; one 16-message call_batch
+    rings a small constant for the whole cohort."""
+    tr = MPKLinkOptTransport(wordcount_handler, ring_slots=16)
+    lock = tr.connect("lockstep")
+    lock.request(make_text(3, seed=0))          # warm the session
+    st0 = framing.STATS.snapshot()
+    for i in range(16):
+        lock.request(make_text(i + 1, seed=i))
+    lockstep_wakeups = framing.STATS.snapshot()["wakeups"] - st0["wakeups"]
+
+    batch = tr.connect("batched")
+    batch.request(make_text(3, seed=0))
+    st0 = framing.STATS.snapshot()
+    outs = batch.call_batch([make_text(i + 1, seed=i) for i in range(16)])
+    batch_wakeups = framing.STATS.snapshot()["wakeups"] - st0["wakeups"]
+    tr.close()
+    assert [parse_count(np.asarray(o)) for o in outs] == list(range(1, 17))
+    assert lockstep_wakeups >= 3 * 16
+    assert batch_wakeups <= 8, \
+        f"a 16-message batch rang {batch_wakeups} bells (want one per pass)"
+    assert lockstep_wakeups >= 4 * batch_wakeups
+
+
+def test_key_syncs_mirrored_into_frame_stats():
+    tr = MPKLinkOptTransport(wordcount_handler)
+    s = tr.connect("sync-stats")
+    s.request(make_text(3, seed=0))
+    st0 = framing.STATS.snapshot()
+    base = tr.sync_count
+    for i in range(4):
+        s.request(make_text(i + 1, seed=i))
+    delta_local = tr.sync_count - base
+    delta_stats = framing.STATS.snapshot()["key_syncs"] - st0["key_syncs"]
+    tr.close()
+    assert delta_local == delta_stats == 8      # 2 per lockstep exchange
+
+
+# ---------------------------------------------------------------------------
+# credit-based flow control
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cls", [ShmTransport, MPKLinkOptTransport])
+def test_full_ring_backpressures_with_concurrent_poller(cls):
+    """A producer thread pushes 4x the ring depth while a consumer polls:
+    submit() must block for credits and never raise CapacityError."""
+    tr = cls(wordcount_handler, ring_slots=4, credit_wait=10.0)
+    s = tr.connect("pc")
+    total = 16
+    tickets: list = []
+    errs: list = []
+    got: list = []
+    tcv = threading.Condition()
+
+    def producer():
+        try:
+            for i in range(total):
+                t = s.submit(make_text(i + 1, seed=i))
+                with tcv:
+                    tickets.append(t)
+                    tcv.notify_all()
+                s.flush()
+        except Exception as e:
+            errs.append(e)
+            with tcv:
+                tcv.notify_all()
+
+    def consumer():
+        try:
+            for i in range(total):
+                with tcv:
+                    while len(tickets) <= i and not errs:
+                        tcv.wait(5.0)
+                    if errs:
+                        return
+                    t = tickets[i]
+                got.append(parse_count(np.asarray(s.poll(t, timeout=10.0))))
+        except Exception as e:
+            errs.append(e)
+
+    tp = threading.Thread(target=producer, daemon=True)
+    tc = threading.Thread(target=consumer, daemon=True)
+    tp.start()
+    tc.start()
+    tp.join(30.0)
+    tc.join(30.0)
+    tr.close()
+    assert not errs, errs
+    assert got == list(range(1, total + 1))
+
+
+def test_full_ring_without_poller_raises_typed_after_bounded_wait():
+    tr = ShmTransport(wordcount_handler, ring_slots=2, credit_wait=0.1)
+    s = tr.connect("serial-overflow")
+    try:
+        t0 = s.submit(make_text(1, seed=0))
+        t1 = s.submit(make_text(2, seed=0))
+        start = time.perf_counter()
+        with pytest.raises(CapacityError, match="ring full"):
+            s.submit(make_text(3, seed=0))
+        elapsed = time.perf_counter() - start
+        assert 0.05 <= elapsed < 5.0, \
+            f"credit wait not bounded by credit_wait: {elapsed}s"
+        # the credit wait published the staged slots — they still redeem
+        assert parse_count(np.asarray(s.poll(t0))) == 1
+        assert parse_count(np.asarray(s.poll(t1))) == 2
+    finally:
+        tr.close()
+
+
+# ---------------------------------------------------------------------------
+# per-poll / per-request timeouts
+# ---------------------------------------------------------------------------
+
+def _slow_handler(req):
+    time.sleep(1.0)
+    return np.asarray(req)
+
+
+@pytest.mark.parametrize("cls", [MPKLinkOptTransport, ShmTransport])
+def test_ring_poll_honors_tighter_timeout(cls):
+    """Transport deadline is 30s; poll(timeout=0.15) must expire in well
+    under a second — plumbed through the doorbell wait."""
+    tr = cls(_slow_handler, timeout=30.0)
+    s = tr.connect("tight")
+    try:
+        t = s.submit(np.arange(8, dtype=np.uint8))
+        s.flush()
+        t0 = time.perf_counter()
+        with pytest.raises(ResponseTimeout):
+            s.poll(t, timeout=0.15)
+        assert time.perf_counter() - t0 < 5.0
+        assert s._poisoned                  # same poisoning as a full expiry
+    finally:
+        tr.close()
+
+
+@pytest.mark.parametrize("name", ["pipe", "uds", "grpc_sim"])
+def test_lockstep_fallback_poll_honors_tighter_timeout(name):
+    """The stream transports' lazy poll() runs the buffered exchange under
+    the per-poll deadline (the old fallback ignored it)."""
+    from repro.core import TRANSPORTS
+    tr = TRANSPORTS[name](_slow_handler, timeout=30.0)
+    s = tr.connect("tight-fallback")
+    try:
+        t = s.submit(np.arange(8, dtype=np.uint8))
+        s.flush()
+        t0 = time.perf_counter()
+        with pytest.raises(ResponseTimeout):
+            s.poll(t, timeout=0.15)
+        assert time.perf_counter() - t0 < 5.0
+    finally:
+        tr.close()
+
+
+def test_request_timeout_param_overrides_transport_deadline():
+    tr = ShmTransport(_slow_handler, timeout=30.0)
+    s = tr.connect("req-tight")
+    try:
+        t0 = time.perf_counter()
+        with pytest.raises(ResponseTimeout):
+            s.request(np.arange(8, dtype=np.uint8), timeout=0.15)
+        assert time.perf_counter() - t0 < 5.0
+    finally:
+        tr.close()
+
+
+def test_poll_default_timeout_still_transport_deadline():
+    """No per-poll timeout → the transport deadline still applies (the
+    plumbing must not tighten the default)."""
+    tr = MPKLinkOptTransport(lambda req: (time.sleep(0.3), np.asarray(req))[1],
+                             timeout=10.0)
+    s = tr.connect("default-deadline")
+    try:
+        t = s.submit(np.arange(8, dtype=np.uint8))
+        s.flush()
+        out = s.poll(t)                     # 0.3s handler < 10s deadline
+        assert np.array_equal(np.asarray(out), np.arange(8, dtype=np.uint8))
+    finally:
+        tr.close()
+
+
+# ---------------------------------------------------------------------------
+# FrameStats: exact under concurrency
+# ---------------------------------------------------------------------------
+
+def test_frame_stats_bump_is_exact_under_threads():
+    st0 = framing.STATS.snapshot()
+    n_threads, per_thread = 8, 2000
+
+    def bumper():
+        for _ in range(per_thread):
+            framing.STATS.bump(wakeups=1, bytes_copied=3)
+
+    ts = [threading.Thread(target=bumper) for _ in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    st1 = framing.STATS.snapshot()
+    assert st1["wakeups"] - st0["wakeups"] == n_threads * per_thread
+    assert st1["bytes_copied"] - st0["bytes_copied"] == 3 * n_threads * per_thread
+
+
+def test_frame_stats_exact_for_concurrent_sealers():
+    """N threads sealing M frames each through the real seal path — the
+    sharded-counter design must not drop a single increment (the old
+    unguarded += did)."""
+    st0 = framing.STATS.snapshot()
+    n_threads, per_thread = 6, 300
+    payload = np.arange(256, dtype=np.uint8)
+
+    def sealer(i):
+        buf = np.empty((framing.frame_rows(payload.nbytes), framing.LANES),
+                       np.uint32)
+        for j in range(per_thread):
+            framing.seal_into(buf, payload, seed=i, seq=j)
+
+    ts = [threading.Thread(target=sealer, args=(i,)) for i in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    st1 = framing.STATS.snapshot()
+    total = n_threads * per_thread
+    assert st1["frames_sealed"] - st0["frames_sealed"] == total
+    assert st1["frames_sealed_inplace"] - st0["frames_sealed_inplace"] == total
+    assert st1["bytes_copied"] - st0["bytes_copied"] == total * payload.nbytes
+
+
+def test_frame_stats_unknown_field_raises():
+    with pytest.raises(KeyError):
+        framing.STATS.bump(no_such_counter=1)
+
+
+def test_frame_stats_attribute_reads_sum_shards():
+    framing.STATS.bump(concat_calls=2)
+    snap = framing.STATS.snapshot()
+    assert framing.STATS.concat_calls == snap["concat_calls"]
+
+
+def test_frame_stats_prunes_dead_thread_shards():
+    """A process cycling many short-lived threads must not accumulate one
+    counter shard per dead thread — dead shards fold into the retired
+    base and totals stay exact."""
+    st0 = framing.STATS.snapshot()
+
+    def bump_once():
+        framing.STATS.bump(wakeups=1)
+
+    for _ in range(30):
+        t = threading.Thread(target=bump_once)
+        t.start()
+        t.join()
+    st1 = framing.STATS.snapshot()      # snapshot folds the dead shards
+    assert st1["wakeups"] - st0["wakeups"] == 30
+    with framing.STATS._rlock:
+        dead = sum(1 for th, _ in framing.STATS._shards
+                   if not th.is_alive())
+    assert dead == 0, f"{dead} dead shards survived the fold"

@@ -288,3 +288,30 @@ def test_ca_refuses_reregistration_of_revoked_identity():
             gw.connect("mallory")
     finally:
         gw.close()
+
+
+def test_client_results_are_owned_snapshots():
+    """GatewayClient results must not alias transport region storage: on
+    the zero-copy mpklink plane, an aliased r1 would silently flip to
+    r2's bytes when the next call reuses the response region."""
+    gw = ServiceGateway("mpklink_opt")
+    gw.register_service("echo", lambda req: np.asarray(req))
+    gw.start()
+    try:
+        c = gw.connect("snap")
+        a = np.arange(64, dtype=np.uint8)
+        b = np.full(64, 7, np.uint8)
+        r1 = np.asarray(c.call("echo", a))
+        expect = r1.copy()
+        r2 = c.call("echo", b)                      # reuses the region
+        np.testing.assert_array_equal(r1, expect)   # r1 must not mutate
+        np.testing.assert_array_equal(np.asarray(r2), b)
+        # batch and scatter results carry the same ownership guarantee
+        rb = c.call_batch("echo", [a, b])
+        rm = c.call_many([("echo", a), ("echo", b)])
+        snaps = [np.asarray(r).copy() for r in rb + rm]
+        c.call("echo", np.full(64, 99, np.uint8))
+        for got, r in zip(snaps, rb + rm):
+            np.testing.assert_array_equal(np.asarray(r), got)
+    finally:
+        gw.close()

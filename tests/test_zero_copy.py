@@ -463,11 +463,11 @@ def test_scatter_wire_replay_answered_from_dedup_window():
         captured = {}
         orig_ri = c._session.request_into
 
-        def capture(nbytes, fill):
+        def capture(nbytes, fill, **kw):
             env = np.empty(nbytes, np.uint8)
             fill(env)
             captured["env"] = env.copy()
-            return c._session.request(env)
+            return c._session.request(env, **kw)
 
         c._session.request_into = capture
         c.call_many(items, tokens=tokens)
@@ -558,8 +558,8 @@ def test_call_many_corrupt_response_item_stays_per_item():
 
         orig_ri = c._session.request_into
 
-        def tamper(nbytes, fill):
-            resp = orig_ri(nbytes, fill)
+        def tamper(nbytes, fill, **kw):
+            resp = orig_ri(nbytes, fill, **kw)
             if not flip["armed"]:
                 return resp
             flip["armed"] = False
