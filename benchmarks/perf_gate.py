@@ -44,6 +44,38 @@ GATES = ("batch_gate_mpklink_opt_2x", "zero_copy_gate_mpklink_opt_1p5x",
 
 WAKEUP_REDUCTION_FLOOR = 4.0        # absolute count-ratio gate, no tolerance
 
+# each committed gate's underlying ratio: (committed dict, committed cell,
+# fresh-sweep key) — so a FAIL names the cell that regressed with both
+# numbers instead of just the gate's name
+GATE_CELLS = {
+    "batch_gate_mpklink_opt_2x":
+        ("batch_speedup_16_over_lockstep", "mpklink_opt/wordcount", None),
+    "zero_copy_gate_mpklink_opt_1p5x":
+        ("zero_copy_speedup", "mpklink_opt/64KiB/k{k}", "zc"),
+    "scatter_gate_workers4_2x":
+        ("scatter_speedup_vs_sequential", "workers4", "sc"),
+    "coalesce_gate_mpklink_opt_64c_2x":
+        ("fanin_speedup_coalesced_over_inline", "mpklink_opt/64c", "fi"),
+    "coalesce_wakeup_gate_4x":
+        ("fanin_speedup_coalesced_over_inline",
+         "mpklink_opt/64c_wakeup_reduction", "fi"),
+}
+
+
+def _gate_ratio_pair(gate, committed, fresh_by_sweep):
+    """→ 'committed <dict>[<cell>]=<x>, fresh=<y>' for a failed gate."""
+    dict_name, cell, sweep = GATE_CELLS.get(gate, (None, None, None))
+    if dict_name is None:
+        return "no ratio cell mapped"
+    cell = cell.format(k=PAYLOAD_IN_FLIGHT)
+    base = committed.get(dict_name, {}).get(cell)
+    fresh = fresh_by_sweep.get(sweep, {}).get(cell) \
+        if sweep is not None else None
+    pair = f"committed {dict_name}[{cell}]={base!r}"
+    if sweep is not None:
+        pair += f", fresh={fresh!r}"
+    return pair
+
 
 def main() -> int:
     ap = argparse.ArgumentParser()
@@ -55,11 +87,12 @@ def main() -> int:
     committed = json.loads(COMMITTED.read_text())
 
     failures = []
+    failed_gates = []
     for gate in GATES:
         ok = committed.get(gate) is True
         print(f"committed gate {gate}: {'PASS' if ok else 'FAIL'}")
         if not ok:
-            failures.append(f"committed gate {gate} is not true")
+            failed_gates.append(gate)
 
     print("fresh zero-copy sweep (mpklink_opt, 64 KiB):", flush=True)
     fresh_zc = payload_speedup(sweep_payload(["mpklink_opt"], [64 * 1024], 8))
@@ -67,6 +100,12 @@ def main() -> int:
     fresh_sc = scatter_speedup(sweep_scatter("mpklink_opt", 4, 10, [0, 4]))
     print("fresh high-fan-in sweep (mpklink_opt, 64 clients):", flush=True)
     fresh_fi = fanin_speedup(sweep_fanin(["mpklink_opt"], [64], {64: 3}))
+
+    fresh_by_sweep = {"zc": fresh_zc, "sc": fresh_sc, "fi": fresh_fi}
+    for gate in failed_gates:
+        failures.append(
+            f"committed gate {gate} is not true "
+            f"({_gate_ratio_pair(gate, committed, fresh_by_sweep)})")
 
     checks = [
         (f"zero_copy_speedup[mpklink_opt/64KiB/k{PAYLOAD_IN_FLIGHT}]",

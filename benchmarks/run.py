@@ -10,30 +10,66 @@
                    from the dry-run artifacts (if present)
 
 ``python -m benchmarks.run [--full]``
+
+Exits nonzero when any sub-bench fails — a crashed bench or a FAILed
+paper claim must fail the invoking job, not scroll past in the log.
 """
 import argparse
+import sys
 
 
-def main() -> None:
+def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="word-count sweep to 1e8 words (paper endpoint)")
     ap.add_argument("--skip-ipc", action="store_true")
     args = ap.parse_args()
 
+    failures = []
+
     print("# === ipc_wordcount (paper Figs 1-3, Table I) ===")
     if not args.skip_ipc:
         from benchmarks import ipc_wordcount
-        ipc_wordcount.main(full=args.full)
+        try:
+            results = ipc_wordcount.main(full=args.full)
+            # claim lines print PASS / FAIL / DEVIATION; only FAIL (a
+            # measured contradiction, not an env deviation) is fatal
+            failed = [line for line
+                      in ipc_wordcount.validate_claims(results)
+                      if ": FAIL" in line]
+            if failed:
+                failures.append(f"ipc_wordcount: {len(failed)} claim(s) "
+                                f"FAILed")
+        except Exception as e:
+            failures.append(f"ipc_wordcount crashed: "
+                            f"{type(e).__name__}: {e}")
     print()
     print("# === kernel_bench (paper §VIII-A comparative analysis) ===")
     from benchmarks import kernel_bench
-    kernel_bench.main()
+    try:
+        rc = kernel_bench.main()
+        if rc not in (None, 0):
+            failures.append(f"kernel_bench exited {rc}")
+    except Exception as e:
+        failures.append(f"kernel_bench crashed: {type(e).__name__}: {e}")
     print()
     print("# === roofline (dry-run artifacts) ===")
     from benchmarks import roofline_report
-    roofline_report.main()
+    try:
+        rc = roofline_report.main()
+        if rc not in (None, 0):
+            failures.append(f"roofline_report exited {rc}")
+    except Exception as e:
+        failures.append(f"roofline_report crashed: {type(e).__name__}: {e}")
+
+    if failures:
+        print()
+        print("# BENCH SUITE FAILED:")
+        for f in failures:
+            print(f"#   - {f}")
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

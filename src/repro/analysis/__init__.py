@@ -1,0 +1,28 @@
+"""mpklint: AST-driven concurrency & protocol-invariant analyzer.
+
+The MPKLink data plane's "secure AND efficient" claim rests on discipline
+the type system cannot see: MAC-verify before any payload read, zero-copy
+views that must not outlive their slot, monotonic clocks on every
+deadline, and locks guarding every cross-thread counter.  PRs 2-5 each
+fixed a latent violation of those rules by hand; this package turns them
+into machine-checked rules (see docs/analysis.md for the catalog).
+
+Usage:
+
+    python -m repro.analysis [--json] [--baseline analysis/baseline.json] \
+        [paths...]
+
+Pure stdlib (``ast`` + the repo's own docs as ground truth) — no
+third-party dependencies.
+"""
+from repro.analysis.engine import (  # noqa: F401
+    Baseline,
+    Finding,
+    ModuleContext,
+    all_rules,
+    analyze_paths,
+    run,
+)
+
+__all__ = ["Finding", "ModuleContext", "Baseline", "all_rules",
+           "analyze_paths", "run"]

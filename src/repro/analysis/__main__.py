@@ -1,0 +1,7 @@
+"""``python -m repro.analysis`` — the mpklint CLI (see docs/analysis.md)."""
+import sys
+
+from repro.analysis.engine import run
+
+if __name__ == "__main__":
+    sys.exit(run())

@@ -156,6 +156,7 @@ def _peek_sid(req: np.ndarray) -> int:
             route = raw[:_ROUTE_BYTES].view("<u4")
             if int(route[0]) == GW_MAGIC:
                 return int(route[1])
+    # mpklint: disable=MPK105 reason=best-effort peek; malformed routes -> sid 0
     except Exception:
         pass
     return 0

@@ -468,6 +468,7 @@ class Session:
                 self._notify_crash(ServiceCrashed(
                     f"service thread for session {self.name!r} crashed: "
                     f"{type(e).__name__}: {e}"))
+            # mpklint: disable=MPK105 reason=crash notify is best-effort; session already dead
             except Exception:
                 pass
 
@@ -1358,14 +1359,24 @@ class MPKLinkSession(Session):
         self._resp_rows = 0
         self._seq = 0
         self.sync_count = 0                        # per-session key syncs
+        # the client thread (request/flush path) and the service thread
+        # (response/drain path) both bump sync_count — the += must not
+        # drop counts (benchmarks assert exact syncs/request)
+        self._sync_slk = threading.Lock()
+
+    def _bump_sync(self):
+        """One PKRU key-sync round trip: session- and transport-level
+        accounting (both counters have concurrent writers)."""
+        with self._sync_slk:
+            self.sync_count += 1
+        self.transport._bump_sync()
 
     # -- one PKRU synchronization round trip (writer side) -------------------
     def _sync_key(self, key, rights):
         self.registry.check(key, rights)           # staging-time capability check
         self._pkru[0] = self.registry.pkru_word((key,))
         self._pkru[1] = self.registry.epoch(self.domain)
-        self.sync_count += 1
-        self.transport._bump_sync()
+        self._bump_sync()
         self._chunk_acked = False
         self._chunk_pending = True
         self._bell_svc.ring()
@@ -1447,8 +1458,7 @@ class MPKLinkSession(Session):
                 self._region_resp[:rows] = framing.build_frame(
                     resp, seed=self.seed, seq=self._seq, mac_impl=self._mac)
             self._resp_rows = rows
-            self.sync_count += 1                   # response-side key sync
-            self.transport._bump_sync()
+            self._bump_sync()                      # response-side key sync
             self._resp_flag = True
             self._bell_cli.ring()
 
@@ -1700,8 +1710,8 @@ class MPKLinkSession(Session):
                         responses, seed=self.seed,
                         seqs=[s.seq for s in ok_slots],
                         mac_impl=self._batch_mac)
-                self.sync_count += 1    # ONE response-side key sync for the
-                self.transport._bump_sync()      # whole drained batch
+                self._bump_sync()       # ONE response-side key sync for the
+                                        # whole drained batch
                 with ring.cv:
                     for slot, rf, rb in zip(ok_slots, rframes, rbufs):
                         # request slot consumed (a response that aliased the

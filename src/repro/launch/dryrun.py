@@ -223,13 +223,13 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_dev = mesh.devices.size
-    t0 = time.time()
+    t0 = time.perf_counter()
     with mesh:
         jfn, args = build_cell(arch, shape_name, mesh, multi_pod, opts)
         lowered = jfn.lower(*args)
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()

@@ -1,0 +1,7 @@
+"""True positive: a disable comment with no reason — never suppresses."""
+import time
+
+
+def clock_skew(peer_ts):
+    # mpklint: disable=MPK103
+    return time.time() - peer_ts

@@ -1,0 +1,7 @@
+"""True negative: the disable carries its mandatory reason."""
+import time
+
+
+def clock_skew(peer_ts):
+    # mpklint: disable=MPK103 reason=comparing wall clocks across hosts is the feature
+    return time.time() - peer_ts

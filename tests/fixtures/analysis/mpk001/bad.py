@@ -1,0 +1,15 @@
+"""True positive: cross-thread counter bumped with no lock."""
+import threading
+
+
+class Worker:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.count = 0
+        self._thread = threading.Thread(target=self._run, daemon=True)
+
+    def _run(self):
+        self.count += 1
+
+    def bump(self):
+        self.count += 1

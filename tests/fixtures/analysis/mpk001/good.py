@@ -1,0 +1,20 @@
+"""True negative: same shape, but every += holds the owning lock; the
+lock-free boolean flag write is the sanctioned doorbell idiom."""
+import threading
+
+
+class Worker:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.count = 0
+        self.ready = False
+        self._thread = threading.Thread(target=self._run, daemon=True)
+
+    def _run(self):
+        with self._lock:
+            self.count += 1
+        self.ready = True
+
+    def bump(self):
+        with self._lock:
+            self.count += 1

@@ -1,0 +1,17 @@
+"""Suppressed: the writer documents why the unguarded += is safe."""
+import threading
+
+
+class Worker:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.count = 0
+        self._thread = threading.Thread(target=self._run, daemon=True)
+
+    def _run(self):
+        # mpklint: disable=MPK001 reason=thread joined before bump() is callable
+        self.count += 1
+
+    def bump(self):
+        # mpklint: disable=MPK001 reason=thread joined before bump() is callable
+        self.count += 1

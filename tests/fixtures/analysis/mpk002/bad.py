@@ -1,0 +1,17 @@
+"""True positive: blocking waits made while holding an unrelated lock."""
+import threading
+import time
+
+
+class Server:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._evt = threading.Event()
+
+    def wait_done(self):
+        with self._lock:
+            self._evt.wait(1.0)
+
+    def nap(self):
+        with self._lock:
+            time.sleep(0.1)

@@ -1,0 +1,19 @@
+"""True negative: parking on the held condition releases it (the
+sanctioned idiom); the sleep happens outside the lock."""
+import threading
+import time
+
+
+class Server:
+    def __init__(self):
+        self._cv = threading.Condition()
+        self.done = False
+
+    def wait_done(self):
+        with self._cv:
+            self._cv.wait_for(lambda: self.done, timeout=1.0)
+
+    def nap(self):
+        time.sleep(0.1)
+        with self._cv:
+            self.done = True

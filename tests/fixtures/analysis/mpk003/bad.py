@@ -1,0 +1,18 @@
+"""True positive: two paths take the same lock pair in opposite orders."""
+import threading
+
+
+class Pair:
+    def __init__(self):
+        self.lock_a = threading.Lock()
+        self.lock_b = threading.Lock()
+
+    def forward(self):
+        with self.lock_a:
+            with self.lock_b:
+                pass
+
+    def backward(self):
+        with self.lock_b:
+            with self.lock_a:
+                pass

@@ -1,0 +1,18 @@
+"""True negative: both paths agree on one global acquisition order."""
+import threading
+
+
+class Pair:
+    def __init__(self):
+        self.lock_a = threading.Lock()
+        self.lock_b = threading.Lock()
+
+    def forward(self):
+        with self.lock_a:
+            with self.lock_b:
+                pass
+
+    def also_forward(self):
+        with self.lock_a:
+            with self.lock_b:
+                pass

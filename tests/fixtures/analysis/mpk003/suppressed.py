@@ -1,0 +1,19 @@
+"""Suppressed: the reversed order is unreachable concurrently."""
+import threading
+
+
+class Pair:
+    def __init__(self):
+        self.lock_a = threading.Lock()
+        self.lock_b = threading.Lock()
+
+    def forward(self):
+        with self.lock_a:
+            # mpklint: disable=MPK003 reason=backward() only runs single-threaded at shutdown
+            with self.lock_b:
+                pass
+
+    def backward(self):
+        with self.lock_b:
+            with self.lock_a:
+                pass

@@ -1,0 +1,7 @@
+"""True positive: payload rows read before any verify dominates them."""
+
+
+def handle(sock):
+    frame = sock.recv_frame()
+    payload = frame[1:]
+    return payload.sum()

@@ -1,0 +1,8 @@
+"""True negative: verify_view dominates the payload access."""
+
+
+def handle(sock, verify_view):
+    frame = sock.recv_frame()
+    payload = verify_view(frame, seed=0)
+    tail = frame[1:]
+    return payload, tail

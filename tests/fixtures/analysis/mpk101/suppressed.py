@@ -1,0 +1,8 @@
+"""Suppressed: a diagnostics path that never trusts the bytes."""
+
+
+def peek(sock):
+    frame = sock.recv_frame()
+    # mpklint: disable=MPK101 reason=hexdump diagnostics; bytes never acted on
+    raw = frame[1:]
+    return raw.tobytes().hex()

@@ -1,0 +1,8 @@
+"""True positive: an arena-slot view escapes with no finalizer guard."""
+
+
+class Poller:
+    def poll(self, slot, verify_view):
+        out = verify_view(slot.buf, seed=0)
+        self.last = out
+        return out

@@ -1,0 +1,13 @@
+"""True negative: release_on_collect pins the slot to the view's
+lifetime; the lockstep region view has the until-next-exchange
+contract and is exempt."""
+
+
+class Poller:
+    def poll(self, slot, verify_view):
+        out = verify_view(slot.buf, seed=0)
+        self.arena.release_on_collect(out, slot.buf)
+        return out
+
+    def lockstep(self, verify_view):
+        return verify_view(self._region_resp[:4], seed=0)

@@ -1,0 +1,8 @@
+"""Suppressed: the slot is never recycled (static buffer)."""
+
+
+class Poller:
+    def poll(self, slot, verify_view):
+        out = verify_view(slot.buf, seed=0)
+        # mpklint: disable=MPK102 reason=slot.buf is session-static, never recycled
+        return out

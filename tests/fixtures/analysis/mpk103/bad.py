@@ -1,0 +1,8 @@
+"""True positive: wall-clock deadline arithmetic."""
+import time
+
+
+def wait_until(timeout):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        pass

@@ -1,0 +1,14 @@
+"""True negative: monotonic deadlines; bare wall-clock timestamping of a
+result record is legitimate."""
+import time
+
+
+def wait_until(timeout):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        pass
+
+
+def stamp(record):
+    record["ts"] = time.time()
+    return record

@@ -1,0 +1,7 @@
+"""Suppressed: cross-host wall-clock delta is the point."""
+import time
+
+
+def clock_skew(peer_ts):
+    # mpklint: disable=MPK103 reason=comparing wall clocks across hosts is the feature
+    return time.time() - peer_ts

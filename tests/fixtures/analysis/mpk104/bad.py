@@ -1,0 +1,6 @@
+"""True positive: a timeout parameter accepted but never forwarded."""
+
+
+class Client:
+    def fetch(self, sock, timeout=1.0):
+        return sock.recv(4096)

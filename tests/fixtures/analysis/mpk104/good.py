@@ -1,0 +1,7 @@
+"""True negative: the timeout reaches the blocking callee."""
+
+
+class Client:
+    def fetch(self, sock, timeout=1.0):
+        sock.settimeout(timeout)
+        return sock.recv(4096)

@@ -1,0 +1,10 @@
+"""Suppressed: best-effort teardown documented as such."""
+
+
+def close_all(conns):
+    for c in conns:
+        try:
+            c.close()
+        # mpklint: disable=MPK105 reason=best-effort teardown; session already dead
+        except Exception:
+            pass

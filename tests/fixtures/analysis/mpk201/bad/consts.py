@@ -1,0 +1,3 @@
+"""Wire constants whose spec drifted."""
+MAGIC = 0x4D504B4C
+LANES = 128

@@ -1,0 +1,3 @@
+"""Wire constants in sync with the spec."""
+MAGIC = 0x4D504B4C
+LANES = 128

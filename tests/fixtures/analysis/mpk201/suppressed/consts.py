@@ -1,0 +1,4 @@
+"""A constant deliberately undocumented, with the reason inline."""
+MAGIC = 0x4D504B4C
+# mpklint: disable=MPK201 reason=internal debug magic, not part of the wire contract
+GW_MAGIC = 0x44454247

@@ -1,0 +1,9 @@
+"""A typed error the taxonomy table forgot."""
+
+
+class TransportError(RuntimeError):
+    pass
+
+
+class BoomError(TransportError):
+    pass

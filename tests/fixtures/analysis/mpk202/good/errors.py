@@ -1,0 +1,9 @@
+"""Every typed error appears in the taxonomy."""
+
+
+class TransportError(RuntimeError):
+    pass
+
+
+class BoomError(TransportError):
+    pass

@@ -1,0 +1,10 @@
+"""An internal error class excluded from the client taxonomy."""
+
+
+class TransportError(RuntimeError):
+    pass
+
+
+# mpklint: disable=MPK202 reason=internal-only; never crosses the wire to a client
+class BoomError(TransportError):
+    pass

@@ -1,0 +1,182 @@
+"""mpklint rule + engine coverage, and the repo's own invariant gate.
+
+Every rule family has fixture-backed true-positive, true-negative and
+suppressed cases (tests/fixtures/analysis/), the engine's suppression/
+baseline machinery is exercised directly, and — the part tier-1 exists
+for — the analyzer must report ZERO new findings on the committed tree
+while still firing on freshly seeded bugs of each class.
+"""
+import json
+import shutil
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import Baseline, analyze_paths
+from repro.analysis.engine import run
+from repro.analysis.rules_spec import (SpecConstantSyncRule,
+                                       SpecTaxonomySyncRule)
+
+ROOT = Path(__file__).resolve().parent.parent
+FIXTURES = ROOT / "tests" / "fixtures" / "analysis"
+BASELINE = ROOT / "analysis" / "baseline.json"
+
+FILE_RULES = ["MPK001", "MPK002", "MPK003", "MPK101", "MPK102", "MPK103",
+              "MPK104", "MPK105"]
+DIR_RULES = ["MPK201", "MPK202"]
+
+
+def _findings(path, rule):
+    report = analyze_paths([path])
+    return [f for f in report.findings if f.rule == rule]
+
+
+# ---------------------------------------------------------------- fixtures
+
+@pytest.mark.parametrize("rule", FILE_RULES + DIR_RULES)
+def test_rule_true_positive(rule):
+    path = FIXTURES / rule.lower() / ("bad.py" if rule in FILE_RULES
+                                      else "bad")
+    hits = _findings(path, rule)
+    assert hits, f"{rule} did not fire on its bad fixture"
+    assert all(not f.suppressed and not f.baselined for f in hits)
+    assert all(f.message and f.hint for f in hits)
+
+
+@pytest.mark.parametrize("rule", FILE_RULES + DIR_RULES)
+def test_rule_true_negative(rule):
+    path = FIXTURES / rule.lower() / ("good.py" if rule in FILE_RULES
+                                      else "good")
+    assert _findings(path, rule) == [], \
+        f"{rule} false-positived on its good fixture"
+
+
+@pytest.mark.parametrize("rule", FILE_RULES + DIR_RULES)
+def test_rule_suppressed(rule):
+    path = FIXTURES / rule.lower() / ("suppressed.py" if rule in FILE_RULES
+                                      else "suppressed")
+    hits = _findings(path, rule)
+    assert hits, f"{rule} produced nothing to suppress"
+    assert all(f.suppressed for f in hits), \
+        f"{rule} suppression comment did not take"
+    report = analyze_paths([path])
+    assert [f for f in report.new if f.rule == rule] == []
+
+
+def test_unreasoned_disable_is_a_finding_and_does_not_suppress():
+    bad = FIXTURES / "mpk000" / "bad.py"
+    report = analyze_paths([bad])
+    rules = {f.rule for f in report.new}
+    assert "MPK000" in rules          # the reasonless disable is reported
+    assert "MPK103" in rules          # ... and it silenced nothing
+    good = FIXTURES / "mpk000" / "good.py"
+    report = analyze_paths([good])
+    assert {f.rule for f in report.new} == set()
+    assert any(f.rule == "MPK103" and f.suppressed for f in report.findings)
+
+
+# ------------------------------------------------------------------ engine
+
+def test_baseline_roundtrip(tmp_path):
+    bad = FIXTURES / "mpk001" / "bad.py"
+    first = analyze_paths([bad])
+    assert first.new
+    bl_file = tmp_path / "baseline.json"
+    bl_file.write_text(Baseline.dump(first.findings))
+    again = analyze_paths([bad], baseline=Baseline.load(bl_file))
+    assert again.new == []
+    assert sum(f.baselined for f in again.findings) == len(first.new)
+
+
+def test_baseline_survives_line_drift(tmp_path):
+    src = (FIXTURES / "mpk001" / "bad.py").read_text()
+    f = tmp_path / "drift.py"
+    f.write_text(src)
+    bl_file = tmp_path / "baseline.json"
+    bl_file.write_text(Baseline.dump(analyze_paths([f]).findings))
+    f.write_text("# a new comment shifts every line\n" + src)
+    report = analyze_paths([f], baseline=Baseline.load(bl_file))
+    assert report.new == [], "baseline keyed on line numbers, not content"
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    assert run([str(FIXTURES / "mpk001" / "good.py")]) == 0
+    assert run([str(FIXTURES / "mpk001" / "bad.py")]) == 1
+    assert run([str(tmp_path / "nope.py")]) == 2
+    capsys.readouterr()
+
+
+def test_cli_json_report(capsys):
+    rc = run(["--json", str(FIXTURES / "mpk001" / "bad.py")])
+    out = capsys.readouterr().out
+    assert rc == 1
+    data = json.loads(out)
+    assert data["counts"]["new"] >= 1
+    assert all({"rule", "path", "line", "message"} <= set(f)
+               for f in data["findings"])
+
+
+def test_cli_write_baseline(tmp_path, capsys):
+    bl = tmp_path / "bl.json"
+    assert run(["--write-baseline", str(bl),
+                str(FIXTURES / "mpk001" / "bad.py")]) == 0
+    assert run(["--baseline", str(bl),
+                str(FIXTURES / "mpk001" / "bad.py")]) == 0
+    capsys.readouterr()
+
+
+# ------------------------------------------- the repo's own invariant gate
+
+def test_repo_tree_is_clean():
+    """The committed tree carries zero unbaselined, unsuppressed findings
+    — the CI analysis job's exact contract."""
+    report = analyze_paths([ROOT / "src" / "repro"],
+                           baseline=Baseline.load(BASELINE))
+    assert report.parse_errors == []
+    assert [f.render() for f in report.new] == []
+
+
+def test_seeded_framestats_counter_fails_mpk001(tmp_path):
+    src = (ROOT / "src" / "repro" / "core" / "framing.py").read_text()
+    old = "    def bump(self, **deltas: int) -> None:"
+    assert old in src
+    seeded = tmp_path / "framing.py"
+    seeded.write_text(src.replace(old, old + "\n        self._count += 1", 1))
+    report = analyze_paths([seeded])
+    assert any(f.rule == "MPK001" and "_count" in f.message
+               for f in report.new)
+
+
+def test_seeded_wallclock_deadline_fails_mpk103(tmp_path):
+    src = (ROOT / "src" / "repro" / "core" / "transports.py").read_text()
+    old = "    def _await_credit(self, ring: _Ring):"
+    assert old in src
+    seeded = tmp_path / "transports.py"
+    seeded.write_text(src.replace(
+        old, old + "\n        deadline = time.time() + 1.0", 1))
+    report = analyze_paths([seeded])
+    assert any(f.rule == "MPK103" for f in report.new)
+
+
+def test_seeded_spec_drift_fails_mpk201(tmp_path):
+    proj = tmp_path / "proj"
+    (proj / "docs").mkdir(parents=True)
+    (proj / "src").mkdir()
+    shutil.copy(ROOT / "src" / "repro" / "core" / "framing.py",
+                proj / "src" / "framing.py")
+    spec = (ROOT / "docs" / "protocol.md").read_text()
+    (proj / "docs" / "protocol.md").write_text(
+        spec.replace("0x4D504B4C", "0x4D504BFF"))
+    report = analyze_paths([proj / "src"])
+    assert any(f.rule == "MPK201" and "MAGIC" in f.message
+               for f in report.new)
+
+
+def test_spec_rules_cover_test_docs_contract():
+    """The rules that replaced test_docs.py's hand-written asserts still
+    check the same ground truth: every wire constant and typed error the
+    code defines is quoted by docs/protocol.md."""
+    report = analyze_paths(
+        [ROOT / "src" / "repro" / "core", ROOT / "src" / "repro" / "kernels"],
+        rules=[SpecConstantSyncRule(), SpecTaxonomySyncRule()], root=ROOT)
+    assert [f.render() for f in report.findings if not f.suppressed] == []
