@@ -7,7 +7,10 @@ artifacts):
 
 Re-measures the gated mpklink_opt cells of gateway_bench with short
 sweeps and fails (exit 1) when throughput regresses more than the
-tolerance (default 20%) against ``benchmarks/results/gateway_bench.json``.
+tolerance (default 20%) against ``benchmarks/results/gateway_bench.json``,
+and re-measures the process-backed baseline fight (mpklink_opt_proc vs
+loopback REST at 16 clients) against
+``benchmarks/results/ipc_baseline_bench.json`` the same way.
 
 Comparisons are made on machine-independent SPEEDUP RATIOS — zero-copy vs
 the PR 3 legacy plane at the pipelined operating point, the sharded
@@ -34,8 +37,15 @@ sys.path.insert(0, str(Path(__file__).resolve().parent))
 from gateway_bench import (PAYLOAD_IN_FLIGHT, fanin_speedup,          # noqa: E402
                            payload_speedup, scatter_speedup, sweep_fanin,
                            sweep_payload, sweep_scatter)
+from ipc_baseline_bench import (GATE_ATTEMPTS, GATE_CLIENTS,          # noqa: E402
+                                baseline_ratio, run_cell)
 
 COMMITTED = Path(__file__).resolve().parent / "results" / "gateway_bench.json"
+IPC_COMMITTED = (Path(__file__).resolve().parent
+                 / "results" / "ipc_baseline_bench.json")
+IPC_GATE = "mpklink_opt_proc_2x_rest_16c"
+IPC_RATIO = "mpklink_opt_proc_vs_rest_rps_ratio_16c"
+IPC_FRESH_N_PER_CLIENT = 25         # 400 requests per cell: short re-measure
 
 # the committed boolean acceptance gates that must still hold
 GATES = ("batch_gate_mpklink_opt_2x", "zero_copy_gate_mpklink_opt_1p5x",
@@ -145,6 +155,44 @@ def main() -> int:
         failures.append(
             f"coalescing wakeup reduction {wred} below the "
             f"{WAKEUP_REDUCTION_FLOOR}x floor")
+
+    # -- process-backed baseline fight (ipc_baseline_bench) ----------------
+    # same interleaved-pair / best-attempt protocol as the bench itself:
+    # host noise is multiplicative on whichever cell is running, so the
+    # best paired ratio is the least-contaminated estimate
+    ipc = json.loads(IPC_COMMITTED.read_text())
+    ipc_gates = ipc.get("gates", {})
+    for g in ("all_answers_correct", "no_client_errors", IPC_GATE):
+        ok = ipc_gates.get(g) is True
+        print(f"committed ipc gate {g}: {'PASS' if ok else 'FAIL'}")
+        if not ok:
+            failures.append(
+                f"committed ipc gate {g} is not true (committed "
+                f"{IPC_RATIO}={ipc_gates.get(IPC_RATIO)!r})")
+    base = ipc_gates.get(IPC_RATIO)
+    if base is None:
+        failures.append(f"{IPC_RATIO}: missing from committed JSON")
+    else:
+        floor = (1.0 - args.tolerance) * base
+        best = None
+        for attempt in range(GATE_ATTEMPTS):
+            pair = [run_cell(n, GATE_CLIENTS, IPC_FRESH_N_PER_CLIENT)
+                    for n in ("mpklink_opt_proc", "rest")]
+            r = baseline_ratio(pair)
+            print(f"fresh ipc baseline pair {attempt}: "
+                  f"mpk {pair[0]['throughput_rps']} rest "
+                  f"{pair[1]['throughput_rps']} ratio={r}", flush=True)
+            if r is not None and (best is None or r > best):
+                best = r
+            if best is not None and best >= floor:
+                break
+        ok = best is not None and best >= floor
+        print(f"{IPC_RATIO}: fresh(best)={best} committed={base} "
+              f"floor={floor:.2f} -> {'PASS' if ok else 'FAIL'}")
+        if not ok:
+            failures.append(
+                f"{IPC_RATIO} regressed >{args.tolerance:.0%}: "
+                f"fresh best {best} < floor {floor:.2f} (committed {base})")
 
     if failures:
         print("PERF GATE FAILED:")

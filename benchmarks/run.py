@@ -3,6 +3,9 @@
 
   table1/fig1-3  — benchmarks/ipc_wordcount.py: the paper's word-count IPC
                    comparison across the six transports + claim validation
+  baseline fight — benchmarks/ipc_baseline_bench.py: process-backed
+                   mpklink_opt vs real loopback REST / socket-RPC servers
+                   (§VI), with the 2x-over-REST acceptance gate
   tableX         — benchmarks/kernel_bench.py: guarded copy vs plain copy
                    (the "security rides the copy" comparative analysis §VIII-A)
                    + attention / SSD kernel twins
@@ -42,6 +45,18 @@ def main() -> int:
                                 f"FAILed")
         except Exception as e:
             failures.append(f"ipc_wordcount crashed: "
+                            f"{type(e).__name__}: {e}")
+    print()
+    print("# === ipc_baseline_bench (paper §VI: process-backed vs REST) ===")
+    if not args.skip_ipc:
+        from benchmarks import ipc_baseline_bench
+        try:
+            rc = ipc_baseline_bench.main(
+                [] if args.full else ["--quick"])
+            if rc not in (None, 0):
+                failures.append(f"ipc_baseline_bench exited {rc}")
+        except Exception as e:
+            failures.append(f"ipc_baseline_bench crashed: "
                             f"{type(e).__name__}: {e}")
     print()
     print("# === kernel_bench (paper §VIII-A comparative analysis) ===")

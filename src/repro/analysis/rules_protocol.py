@@ -283,7 +283,7 @@ class TimeoutNotForwardedRule(Rule):
 class SwallowedErrorRule(Rule):
     """MPK105: a ``pass``-only broad exception handler.
 
-    ``except Exception: pass`` eats the typed error taxonomy (§6) — a
+    ``except Exception: pass`` eats the typed error taxonomy (§7) — a
     ``FrameError`` security event or a ``ServiceCrashed`` disappears
     instead of reaching the caller.  Genuinely best-effort teardown paths
     carry an inline suppression naming the invariant that makes them

@@ -26,10 +26,13 @@ _CONSTANT_FORMS = {
     "LANES": lambda v: [f"LANES = {v}"],
     "MAC_PRIME": lambda v: [f"0x{v:08X}", f"0x{v:08x}"],
     "MAC_INIT": lambda v: [f"0x{v:08X}", f"0x{v:08x}"],
+    "PROC_MAGIC": lambda v: [f"0x{v:08X}"],
+    "PROC_CTRL_WORDS": lambda v: [f"PROC_CTRL_WORDS = {v}"],
+    "PROC_SLOT_WORDS": lambda v: [f"PROC_SLOT_WORDS = {v}"],
 }
 
 _ERROR_ROOT = "TransportError"
-# chaos-fabric signals are BaseExceptions invisible to clients (§6) — the
+# chaos-fabric signals are BaseExceptions invisible to clients (§7) — the
 # taxonomy documents what a *client* can observe
 _TAXONOMY_EXEMPT = {"TransportError", "HandlerCrash", "DropResponse"}
 
@@ -94,13 +97,13 @@ class SpecTaxonomySyncRule(ProjectRule):
     """MPK202: a typed error class (``TransportError`` subclass) missing
     from the docs/protocol.md taxonomy table.
 
-    §6 promises that everything a client can observe is one of the
+    §7 promises that everything a client can observe is one of the
     documented typed errors; an undocumented subclass breaks every
     caller's exhaustive handling."""
 
     id = "MPK202"
     severity = "error"
-    hint = "add the error to the docs/protocol.md §6 taxonomy table"
+    hint = "add the error to the docs/protocol.md §7 taxonomy table"
 
     def check_project(self, modules: List[ModuleContext],
                       root) -> List[Finding]:

@@ -17,6 +17,15 @@ TRANSPORTS = {
     "mpklink_opt": transports.MPKLinkOptTransport,
 }
 
+# process-backed transports (service in a multiprocessing.Process over a
+# POSIX shared-memory segment) and the honest REST/socket-RPC baselines —
+# kept out of TRANSPORTS so the in-process matrix keeps its semantics;
+# gateway name resolution uses the merged ALL_TRANSPORTS
+from repro.core import procwire                    # needs transports above
+from repro.core.procwire import BASELINE_TRANSPORTS, PROC_TRANSPORTS
+
+ALL_TRANSPORTS = {**TRANSPORTS, **PROC_TRANSPORTS, **BASELINE_TRANSPORTS}
+
 from repro.core import gateway                     # needs TRANSPORTS above
 from repro.core.gateway import (CallCoalescer, GatewayClient, ServiceGateway,
                                 ServiceHealth)
@@ -25,10 +34,13 @@ from repro.core.faultwire import FaultFabric, FaultPlan, FaultyClient
 from repro.core.transports import (ResponseTimeout, ServiceCrashed,
                                    ServiceUnavailable)
 
-__all__ = ["ca", "domains", "framing", "gateway", "faultwire", "signature",
+__all__ = ["ca", "domains", "framing", "gateway", "faultwire", "procwire",
+           "signature",
            "transports", "wordcount", "AccessViolation", "DomainKey",
            "KeyRegistry", "ProtectionDomain", "READ", "RW", "WRITE",
-           "mac_seed", "TRANSPORTS", "CallCoalescer", "GatewayClient",
+           "mac_seed", "TRANSPORTS", "PROC_TRANSPORTS",
+           "BASELINE_TRANSPORTS", "ALL_TRANSPORTS",
+           "CallCoalescer", "GatewayClient",
            "ServiceGateway",
            "ServiceHealth", "FaultFabric", "FaultPlan", "FaultyClient",
            "ResponseTimeout", "ServiceCrashed", "ServiceUnavailable"]

@@ -41,11 +41,11 @@ swallowed.
 Replay: ``FaultPlan.from_spec(plan.spec())`` reconstructs the identical
 schedule; ``plan.describe()`` is the one-liner chaos tests print on failure.
 The step-by-step replay recipe lives in docs/benchmarks.md; the error types
-each kind must surface as are normative in docs/protocol.md §6.
+each kind must surface as are normative in docs/protocol.md §7.
 """
 from __future__ import annotations
 
-import itertools
+import multiprocessing
 import random
 import threading
 import time
@@ -177,7 +177,13 @@ class FaultFabric:
         self.gw: Optional[ServiceGateway] = None
         self.fired: List[FaultEvent] = []
         self._inner: Optional[Callable] = None
-        self._index = itertools.count()
+        # the wire-fault index lives in shared memory so process-backed
+        # transports keep ONE monotonic schedule across forks and heals: a
+        # re-forked service child resumes the count where the dead one
+        # stopped instead of replaying the plan from index 0. `fired` stays
+        # local to whichever process observed the event — chaos assertions
+        # on process-backed transports check client-observable outcomes.
+        self._index = multiprocessing.Value("q", 0)
         self._lock = threading.Lock()
 
     def attach(self, gw: ServiceGateway) -> "FaultFabric":
@@ -198,7 +204,9 @@ class FaultFabric:
         self._inner = None
 
     def _wire(self, req: np.ndarray) -> np.ndarray:
-        idx = next(self._index)
+        with self._index.get_lock():
+            idx = self._index.value
+            self._index.value += 1
         ev = self.plan.events.get(idx)
         kind = ev.kind if ev is not None and ev.kind in SERVER_KINDS else None
         if kind == "crash_handler":

@@ -55,6 +55,8 @@ Works on both numpy (host transports) and jnp (device fabric) arrays.
 from __future__ import annotations
 
 import functools
+import math
+import sys
 import threading
 import weakref
 from typing import Dict, List, Optional, Sequence, Tuple, Union
@@ -146,7 +148,12 @@ class FrameStats:
     def bump(self, **deltas: int) -> None:
         """Add each delta to its counter — lock-free (per-thread shard);
         unknown counter names raise KeyError."""
-        d = self._shard()
+        # inlined registered-shard fetch: this runs several times per
+        # data-plane exchange, so the common case must not pay an extra
+        # method call on top of the thread-local lookup
+        d = getattr(self._local, "d", None)
+        if d is None:
+            d = self._shard()
         for name, delta in deltas.items():
             d[name] += delta            # KeyError on unknown fields
 
@@ -235,11 +242,88 @@ def _power_table32(m: int) -> Tuple[np.ndarray, np.uint32]:
     return pw32, np.uint32(int(p_m) & 0xFFFFFFFF)
 
 
-def mac_init_np(seed: int) -> np.ndarray:
-    """Fresh (LANES,) uint32 Horner state for ``seed`` (values < 2^32)."""
+@functools.lru_cache(maxsize=256)
+def _mac_row1_const(seed32: int) -> int:
+    """Init-state contribution to a ONE-row payload MAC, folded to a
+    scalar. The Horner init is lane-constant (h0 = INIT+seed), so its
+    folded term Σ_l fold_l·h0·P collapses to h0·P·Σ_l fold_l mod 2^32
+    (multiplication distributes over the mod-2^32 sum) — cache it per
+    seed and the whole one-row MAC is two vector ops."""
+    from repro.kernels.ref import MAC_INIT, MAC_PRIME
+    s_fold = int(_fold_powers_u32().sum(dtype=np.uint32))
+    h0 = (MAC_INIT + seed32) & 0xFFFFFFFF
+    return (h0 * MAC_PRIME * s_fold) & 0xFFFFFFFF
+
+
+@functools.lru_cache(maxsize=1)
+def _fold_ints() -> Tuple[int, ...]:
+    """The fold powers as plain python ints (for the short-row MAC)."""
+    return tuple(int(v) for v in _fold_powers_u32())
+
+
+def _mac_row1(row_u32: np.ndarray, seed: int) -> int:
+    """One-row payload MAC: cached init fold + fold·row. Bit-identical to
+    :func:`_mac_np` on a (1, LANES) payload (the batch/zero-copy tests
+    assert equality over the dtype/shape sweep).
+
+    Short messages (the common RPC response) occupy a handful of leading
+    words — every zero lane contributes 0 to the fold, so after a C-level
+    trailing-zero scan the whole contraction is a few python multiplies,
+    cheaper than two numpy dispatches over 128 lanes."""
+    b = row_u32.tobytes()
+    nz = len(b.rstrip(b"\x00"))
+    if nz <= 64:
+        fold = _fold_ints()
+        body = 0
+        for i in range(0, nz, 4):
+            body += fold[i >> 2] * int.from_bytes(b[i:i + 4], "little")
+        return (_mac_row1_const(seed & 0xFFFFFFFF) + body) & 0xFFFFFFFF
+    body = int((_fold_powers_u32() * row_u32).sum(dtype=np.uint32))
+    return (_mac_row1_const(seed & 0xFFFFFFFF) + body) & 0xFFFFFFFF
+
+
+@functools.lru_cache(maxsize=512)
+def _mac_block_const(seed32: int, m: int) -> int:
+    """``_mac_row1_const`` generalized to an m-row payload: the folded
+    init-state term h0·P^m·Σ_l fold_l mod 2^32, cached per (seed, m)."""
+    from repro.kernels.ref import MAC_INIT, MAC_PRIME
+    s_fold = int(_fold_powers_u32().sum(dtype=np.uint32))
+    h0 = (MAC_INIT + seed32) & 0xFFFFFFFF
+    return (h0 * pow(MAC_PRIME, m, 1 << 32) * s_fold) & 0xFFFFFFFF
+
+
+def _mac_block(payload_u32: np.ndarray, seed: int) -> int:
+    """Whole-payload MAC in two contractions. The folded MAC
+    Σ_l fold_l·(h0·P^m + Σ_r row_r·P^(m-1-r))_l regroups — every product
+    distributes over the mod-2^32 sums — into
+
+        h0·P^m·Σ_l fold_l  +  Σ_r P^(m-1-r) · (Σ_l fold_l·row_{r,l})
+
+    i.e. fold the LANE axis first (one (m,L)×(L) contraction), then a
+    length-m dot with the power table. Bit-identical to running
+    init → update → finalize, at a fraction of the dispatch overhead."""
+    m = payload_u32.shape[0]
+    pw32, _ = _power_table32(m)
+    s = np.einsum("rl,l->r", payload_u32, _fold_powers_u32(),
+                  dtype=np.uint32, casting="unsafe")
+    body = int((pw32 * s).sum(dtype=np.uint32))
+    return (_mac_block_const(seed & 0xFFFFFFFF, m) + body) & 0xFFFFFFFF
+
+
+@functools.lru_cache(maxsize=256)
+def _mac_init_cached(seed32: int) -> np.ndarray:
     from repro.kernels.ref import MAC_INIT
-    return np.full(LANES, (MAC_INIT + (seed & 0xFFFFFFFF)) & 0xFFFFFFFF,
-                   np.uint32)
+    h = np.full(LANES, (MAC_INIT + seed32) & 0xFFFFFFFF, np.uint32)
+    h.setflags(write=False)
+    return h
+
+
+def mac_init_np(seed: int) -> np.ndarray:
+    """(LANES,) uint32 Horner state for ``seed`` (values < 2^32). The
+    returned array is READ-ONLY (and cached per seed — sessions init a
+    state per exchange): advance it with :func:`mac_update_np`, which
+    returns a fresh array rather than mutating."""
+    return _mac_init_cached(seed & 0xFFFFFFFF)
 
 
 def mac_update_np(h: np.ndarray, block_u32: np.ndarray) -> np.ndarray:
@@ -254,27 +338,57 @@ def mac_update_np(h: np.ndarray, block_u32: np.ndarray) -> np.ndarray:
     if m == 0:
         return h
     pw32, p_m32 = _power_table32(m)
-    with np.errstate(over="ignore"):
-        acc = np.einsum("r,rl->l", pw32, block_u32, dtype=np.uint32,
-                        casting="unsafe")
-        return h * p_m32 + acc
+    if m == 1:                  # P^0 = 1: the contraction IS the row
+        return h * p_m32 + block_u32[0]
+    # no errstate guard: unsigned ARRAY arithmetic wraps silently in numpy
+    # (wraparound mod 2^32 IS the modulus) — only scalar ops would warn,
+    # and none run here. Saves ~1.5us per call on the data-plane hot path.
+    acc = np.einsum("r,rl->l", pw32, block_u32, dtype=np.uint32,
+                    casting="unsafe")
+    return h * p_m32 + acc
 
 
 def mac_finalize_np(h: np.ndarray) -> int:
     """Fold the (LANES,) Horner state to the 32-bit MAC word."""
-    with np.errstate(over="ignore"):
-        return int((h * _fold_powers_u32()).sum(dtype=np.uint32))
+    return int((h * _fold_powers_u32()).sum(dtype=np.uint32))
+
+
+def warm_mac_caches(seed: int = 0) -> None:
+    """Populate every lazily-imported constant and lru cache the hot
+    seal/verify path touches. Process-backed transports call this BEFORE
+    forking a service child: the deferred ``repro.kernels.ref`` import is
+    expensive (it drags in the accelerator stack), and without the warm
+    each child would re-pay it inside its first ``verify_view`` — the
+    fork snapshot ships the warmed caches for free."""
+    _fold_powers_u32()
+    _power_table32(1)
+    mac_init_np(seed)
+    _mac_row1_const(seed & 0xFFFFFFFF)
+    _meta_mix_words((0,) * 10, 0)
+
+
+_MAC_PRIME: Optional[int] = None    # lazy: kernels.ref drags in jax
+
+
+def _meta_mix_words(words, seed: int) -> int:
+    """:func:`_meta_mix` over ten already-materialized python ints — the
+    hot-path form for callers that have the header words in hand."""
+    global _MAC_PRIME
+    prime = _MAC_PRIME
+    if prime is None:
+        from repro.kernels.ref import MAC_PRIME
+        _MAC_PRIME = prime = MAC_PRIME
+    h = (0x9E3779B9 ^ (seed & 0xFFFFFFFF)) & 0xFFFFFFFF
+    for w in words:
+        h = (h * prime + w) & 0xFFFFFFFF
+    return h
 
 
 def _meta_mix(header: np.ndarray, seed: int) -> int:
     """Horner mix of the ten metadata words (magic..shape[3]) — folded into
     the stored MAC word so header tampering fails exactly like payload
     tampering. Pure uint arithmetic, deterministic everywhere."""
-    from repro.kernels.ref import MAC_PRIME
-    h = (0x9E3779B9 ^ (seed & 0xFFFFFFFF)) & 0xFFFFFFFF
-    for w in np.asarray(header[:10]).tolist():     # python ints: fast loop
-        h = (h * MAC_PRIME + w) & 0xFFFFFFFF
-    return h
+    return _meta_mix_words(np.asarray(header[:10]).tolist(), seed)
 
 
 # ---------------------------------------------------------------------------
@@ -326,11 +440,11 @@ def _write_header(hrow: np.ndarray, meta: dict, seed: int, seq: int,
     shape = list(meta["shape"])[:4] + [0] * (4 - min(4, len(meta["shape"])))
     if len(meta["shape"]) > 4:
         raise FrameError("rank > 4 payloads unsupported by frame header")
-    hrow[10:] = 0
-    hrow[:10] = [MAGIC, seed & 0xFFFFFFFF, seq & 0xFFFFFFFF,
-                 meta["nbytes"] & 0xFFFFFFFF, meta["dtype_code"],
-                 len(meta["shape"]), *[s & 0xFFFFFFFF for s in shape]]
-    hrow[11] = (mac ^ _meta_mix(hrow, seed)) & 0xFFFFFFFF
+    words = [MAGIC, seed & 0xFFFFFFFF, seq & 0xFFFFFFFF,
+             meta["nbytes"] & 0xFFFFFFFF, meta["dtype_code"],
+             len(meta["shape"]), *[s & 0xFFFFFFFF for s in shape]]
+    hrow[12:] = 0
+    hrow[:12] = words + [0, (mac ^ _meta_mix_words(words, seed)) & 0xFFFFFFFF]
 
 
 def _assemble(payload: np.ndarray, meta: dict, seed: int, seq: int,
@@ -349,14 +463,16 @@ def _assemble(payload: np.ndarray, meta: dict, seed: int, seq: int,
 # ---------------------------------------------------------------------------
 
 def _check_buf(buf: np.ndarray, rows: int) -> None:
-    if (buf.ndim != 2 or buf.shape[1] != LANES
+    shape = buf.shape
+    if (len(shape) != 2 or shape[1] != LANES
             or buf.dtype != np.dtype(np.uint32)):
         raise FrameError("seal buffer must be a (rows, 128) uint32 matrix")
-    if not buf.flags.c_contiguous or not buf.flags.writeable:
+    flags = buf.flags
+    if not flags.c_contiguous or not flags.writeable:
         raise FrameError("seal buffer must be C-contiguous and writable")
-    if buf.shape[0] < rows:
+    if shape[0] < rows:
         raise FrameError(
-            f"seal buffer too small ({buf.shape[0]} rows for a {rows}-row "
+            f"seal buffer too small ({shape[0]} rows for a {rows}-row "
             f"frame)")
 
 
@@ -372,7 +488,8 @@ def seal_into(buf: np.ndarray, arr: np.ndarray, *, seed: int, seq: int,
     number of rows used; ``buf[rows:]`` is untouched. Bit-identical to
     :func:`build_frame` (tests/test_zero_copy.py asserts it for every
     dtype)."""
-    arr = np.ascontiguousarray(np.asarray(arr))
+    if not isinstance(arr, np.ndarray) or not arr.flags.c_contiguous:
+        arr = np.ascontiguousarray(arr)
     meta = _meta_of(arr)
     rows = frame_rows(meta["nbytes"])
     _check_buf(buf, rows)
@@ -440,10 +557,17 @@ def seal_prefilled(buf: np.ndarray, nbytes: int, *, seed: int, seq: int,
     return rows
 
 
+_U8_CODE = _DTYPE_CODES[np.dtype(np.uint8)]
+
+
 def _payload_view(frame: np.ndarray, meta: dict) -> np.ndarray:
     """Read-only payload view aliasing ``frame`` storage — zero copy."""
     raw = frame[1:].reshape(-1).view(np.uint8)[: meta["nbytes"]]
-    out = raw.view(_DTYPES[meta["dtype_code"]]).reshape(meta["shape"])
+    shape = meta["shape"]
+    if meta["dtype_code"] == _U8_CODE and len(shape) == 1:
+        out = raw                   # flat bytes: raw IS the payload view
+    else:
+        out = raw.view(_DTYPES[meta["dtype_code"]]).reshape(shape)
     out.flags.writeable = False
     return out
 
@@ -461,9 +585,10 @@ def verify_view(frame: np.ndarray, *, seed: int, expect_seq=None,
         raise FrameError("malformed frame — truncated or not lane-aligned")
     if not frame.flags.c_contiguous:
         raise FrameError("verify_view needs a contiguous frame")
-    _precheck(frame, seed, expect_seq)
+    hdr = frame[0].tolist()
+    _precheck(frame, seed, expect_seq, hdr)
     mac = (mac_impl or _mac_np)(frame[1:], seed)
-    meta = _check_meta(frame, seed, mac)
+    meta = _check_meta(frame, seed, mac, hdr)
     STATS.bump(frames_verified=1, views_returned=1)
     return _payload_view(frame, meta)
 
@@ -487,15 +612,40 @@ class FrameArena:
     refcount elevated — the sweep sees that and leaves the slot parked.
     A slot with any live alias is therefore NEVER reused, so recycling
     cannot corrupt data a caller still holds (the aliasing invariant
-    tests/test_zero_copy.py locks in). Thread-safe."""
+    tests/test_zero_copy.py locks in). Thread-safe.
 
-    def __init__(self, min_rows: int = 16):
+    A BACKED arena (``backing=`` a fixed ``(N, 128)`` uint32 array, e.g. a
+    view of a ``multiprocessing.shared_memory`` segment) carves its slots
+    out of that array with a bump cursor instead of ``np.empty`` — the
+    size-class free lists and pending sweep then recycle the carved slices
+    exactly like heap slots, so the steady state never advances the
+    cursor. Exhausting the backing raises :class:`FrameError` (transports
+    surface it as their typed capacity error). ``offset_rows`` maps a
+    carved slot back to its row offset inside the backing, which is how a
+    process on the other side of a shared segment locates the slot."""
+
+    def __init__(self, min_rows: int = 16, *,
+                 backing: Optional[np.ndarray] = None):
         self.min_rows = max(1, min_rows)
         self._free: Dict[int, List[np.ndarray]] = {}
         # (weakref-to-view, buf): swept into _free when view is dead and
         # buf's refcount says nobody else aliases it
         self._pending: List[Tuple[object, np.ndarray]] = []
         self._lock = threading.Lock()
+        if backing is not None and (
+                backing.ndim != 2 or backing.shape[1] != LANES
+                or backing.dtype != np.uint32):
+            raise FrameError(
+                f"arena backing must be a (rows, {LANES}) uint32 array")
+        self._backing = backing
+        self._backing_addr = (backing.__array_interface__["data"][0]
+                              if backing is not None else 0)
+        self._brk = 0                   # rows carved so far (backed mode)
+        # id(slot) -> row offset, filled at carve time. Slot objects are
+        # kept alive forever by the free/pending/caller chain, so the ids
+        # are stable; offset_rows still falls back to address arithmetic
+        # for views it has never carved.
+        self._carved_off: Dict[int, int] = {}
 
     def _class_rows(self, rows: int) -> int:
         c = self.min_rows
@@ -504,7 +654,6 @@ class FrameArena:
         return c
 
     def _sweep_locked(self) -> None:
-        import sys
         if not self._pending:
             return
         keep = []
@@ -523,16 +672,46 @@ class FrameArena:
         otherwise. Contents are undefined; seal_into fully initializes the
         frame region."""
         c = self._class_rows(max(1, int(rows)))
+        carved = False
         with self._lock:
             self._sweep_locked()
             lst = self._free.get(c)
             buf = lst.pop() if lst else None
+            if buf is None and self._backing is not None:
+                if self._brk + c > self._backing.shape[0]:
+                    raise FrameError(
+                        f"backed arena exhausted: need {c} rows, "
+                        f"{self._backing.shape[0] - self._brk} of "
+                        f"{self._backing.shape[0]} left (slots pinned by "
+                        f"live views don't recycle)")
+                buf = self._backing[self._brk:self._brk + c]
+                self._carved_off[id(buf)] = self._brk
+                self._brk += c
+                carved = True
         if buf is None:
             buf = np.empty((c, LANES), np.uint32)
+            STATS.bump(arena_allocated=1)
+        elif carved:
             STATS.bump(arena_allocated=1)
         else:
             STATS.bump(arena_reused=1)
         return buf
+
+    def offset_rows(self, buf: np.ndarray) -> int:
+        """Row offset of a carved slot inside the backing array (backed
+        arenas only) — the address a peer process uses to find the slot
+        in the shared segment."""
+        if self._backing is None:
+            raise FrameError("offset_rows requires a backed arena")
+        off = self._carved_off.get(id(buf))
+        if off is not None:
+            return off
+        span = buf.__array_interface__["data"][0] - self._backing_addr
+        off, rem = divmod(span, LANES * 4)
+        if rem or off < 0 or off + buf.shape[0] > self._backing.shape[0]:
+            raise FrameError("buffer is not a row-aligned slot of this "
+                             "arena's backing")
+        return int(off)
 
     def release(self, buf: Optional[np.ndarray]) -> None:
         """Return a slot to its size-class free list. The caller promises no
@@ -562,7 +741,6 @@ def _measure_pending_baseline() -> int:
     references it (the pending tuple + the loop binding + getrefcount's
     argument) — measured on this interpreter instead of hard-coding
     CPython internals."""
-    import sys
     pending = [(None, np.empty(0, np.uint32))]
     for _, buf in pending:
         return sys.getrefcount(buf)
@@ -613,42 +791,46 @@ def build_frame(arr: np.ndarray, *, seed: int, seq: int, mac_impl=None) -> np.nd
     return frame
 
 
-def _precheck(frame: np.ndarray, seed: int, expect_seq) -> None:
+def _precheck(frame: np.ndarray, seed: int, expect_seq,
+              _hdr: Optional[list] = None) -> None:
     """The cheap receive-side rejects (no MAC): magic, seed, sequence,
     reserved lanes. Run BEFORE paying for the payload Horner pass so
-    garbage/mis-routed frames are turned away after reading header words."""
-    header = frame[0]
-    if int(header[0]) != MAGIC:
+    garbage/mis-routed frames are turned away after reading header words.
+    ``_hdr`` lets a caller that already materialized ``frame[0].tolist()``
+    share it (one C call instead of per-word numpy scalar reads)."""
+    header = frame[0].tolist() if _hdr is None else _hdr
+    if header[0] != MAGIC:
         raise FrameError("bad magic — not an MPKLink frame")
-    if int(header[1]) != (seed & 0xFFFFFFFF):
+    if header[1] != (seed & 0xFFFFFFFF):
         raise FrameError("seed mismatch — wrong domain key, session or epoch")
-    if expect_seq is not None and int(header[2]) != (expect_seq & 0xFFFFFFFF):
-        raise FrameError(f"sequence mismatch (got {int(header[2])}, want {expect_seq})")
-    if int(header[10]) != 0 or np.any(np.asarray(header[12:]) != 0):
+    if expect_seq is not None and header[2] != (expect_seq & 0xFFFFFFFF):
+        raise FrameError(f"sequence mismatch (got {header[2]}, want {expect_seq})")
+    if header[10] != 0 or any(header[12:]):
         raise FrameError("nonzero reserved header lanes — header tampered")
 
 
-def _check_meta(frame: np.ndarray, seed: int, mac: int) -> dict:
+def _check_meta(frame: np.ndarray, seed: int, mac: int,
+                _hdr: Optional[list] = None) -> dict:
     """The MAC + metadata half of the receive-side checks, given a
     precomputed payload MAC. Callers MUST run :func:`_precheck` first (all
     of parse_frame, verify_view and verify_batch do, before paying for the
     MAC). Shared by every guard so they cannot diverge. Returns the
     validated meta dict."""
-    header, payload = frame[0], frame[1:]
-    if (mac ^ _meta_mix(header, seed)) & 0xFFFFFFFF != int(header[11]):
+    header = frame[0].tolist() if _hdr is None else _hdr
+    if (mac ^ _meta_mix_words(header[:10], seed)) & 0xFFFFFFFF != header[11]:
         raise FrameError("MAC mismatch — payload or header tampered/truncated")
-    ndim = int(header[5])
-    nbytes = int(header[3])
-    dtype_code = int(header[4])
+    ndim = header[5]
+    nbytes = header[3]
+    dtype_code = header[4]
     if dtype_code not in _DTYPES or ndim > 4:
         raise FrameError("invalid header metadata (dtype/ndim)")
-    shape = tuple(int(s) for s in header[6:6 + ndim])
+    shape = tuple(header[6:6 + ndim])
     itemsize = np.dtype(_DTYPES[dtype_code]).itemsize
-    if int(np.prod(shape, dtype=np.int64)) * itemsize != nbytes:
+    if math.prod(shape) * itemsize != nbytes:
         raise FrameError("invalid header metadata (shape/nbytes disagree)")
-    if payload.shape[0] != frame_rows(nbytes) - 1:
+    if frame.shape[0] - 1 != frame_rows(nbytes) - 1:
         raise FrameError(
-            f"frame length mismatch ({payload.shape[0]} payload rows for "
+            f"frame length mismatch ({frame.shape[0] - 1} payload rows for "
             f"{nbytes} bytes)")
     return {"dtype_code": dtype_code, "nbytes": nbytes, "shape": shape}
 
@@ -665,10 +847,12 @@ def parse_frame(frame: np.ndarray, *, seed: int, expect_seq=None, mac_impl=None)
     frame = np.asarray(frame)
     if frame.ndim != 2 or frame.shape[0] < 1 or frame.shape[1] != LANES:
         raise FrameError("malformed frame — truncated or not lane-aligned")
-    _precheck(frame, seed, expect_seq)
+    hdr = frame[0].tolist()
+    _precheck(frame, seed, expect_seq, hdr)
     mac = (mac_impl or _mac_np)(frame[1:], seed)
     STATS.bump(frames_verified=1)
-    return _verify_with_mac(frame, seed, mac)
+    meta = _check_meta(frame, seed, mac, hdr)
+    return unpack_payload(frame[1:], meta)
 
 
 def frame_rows(nbytes: int) -> int:

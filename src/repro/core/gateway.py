@@ -411,8 +411,8 @@ class ServiceGateway:
                       "restarts": 0, "crashes": 0, "scatter_envelopes": 0}
 
         if isinstance(transport, str):
-            from repro.core import TRANSPORTS
-            transport = TRANSPORTS[transport]
+            from repro.core import ALL_TRANSPORTS
+            transport = ALL_TRANSPORTS[transport]
         kwargs = dict(transport_kwargs or {})
         if isinstance(transport, type) and issubclass(transport, MPKLinkTransport):
             # one key table for link channels AND service domains

@@ -180,6 +180,10 @@ def fast_mac(payload_u32: np.ndarray, seed: int, block_rows: int = 65536) -> int
     if not framing.ZERO_COPY:       # A/B baseline: the full PR 3 data plane
         return legacy_fast_mac(payload_u32, seed, block_rows)
     n = payload_u32.shape[0]
+    if n == 1:                      # short responses: closed-form fold
+        return framing._mac_row1(payload_u32[0], seed)
+    if n <= block_rows:             # one block: fold lanes first, then rows
+        return framing._mac_block(payload_u32, seed)
     h = framing.mac_init_np(seed)
     for s in range(0, n, block_rows):
         h = framing.mac_update_np(h, payload_u32[s:s + block_rows])
@@ -520,14 +524,21 @@ class Session:
         return self.request(buf, timeout=timeout)
 
     # -- pipelined API (ring transports override; base = lockstep fallback) --
-    def submit(self, payload: np.ndarray) -> int:
+    def submit(self, payload: np.ndarray,
+               timeout: Optional[float] = None) -> int:
         """Stage one request; returns a ticket redeemable with
         :meth:`poll`. The lockstep fallback buffers the payload and runs
         the exchange lazily inside poll(); ring transports write the
         message into the next free slot. A full ring backpressures:
         submit blocks up to ``transport.credit_wait`` for a slot credit (a
         concurrent poll() freeing a slot grants one) and only then raises
-        a typed :class:`CapacityError`."""
+        a typed :class:`CapacityError`. ``timeout`` clamps the credit wait
+        to THIS call's remaining budget — a ``submit(timeout=0.05)``
+        against a full ring surfaces its typed error within ~0.05s even
+        when ``credit_wait`` is much larger (expiry of the caller bound
+        raises :class:`ResponseTimeout`, of the credit bound
+        :class:`CapacityError`). The lockstep fallback stages without
+        blocking, so ``timeout`` is a no-op there."""
         self._check_usable()
         t = self._tickets
         self._tickets += 1
@@ -642,21 +653,29 @@ class Session:
                     raise ResponseTimeout(
                         f"ring response timed out after {timeout}s")
 
-    def _await_credit(self, ring: _Ring):
+    def _await_credit(self, ring: _Ring,
+                      deadline: Optional[float] = None):
         """Credit-based ring flow control: block (bounded by
-        ``transport.credit_wait``) until the next slot is FREE — a
-        concurrent :meth:`poll` freeing a slot grants the credit — instead
-        of rejecting a full ring outright. Anything already staged is
-        published first so in-flight work can complete while we wait. On
-        expiry (e.g. a serial caller that will never poll concurrently)
-        raises the typed :class:`CapacityError`."""
+        ``transport.credit_wait``, further clamped by the caller's
+        remaining per-call budget ``deadline`` — an absolute monotonic
+        instant) until the next slot is FREE — a concurrent :meth:`poll`
+        freeing a slot grants the credit — instead of rejecting a full
+        ring outright. Anything already staged is published first so
+        in-flight work can complete while we wait. Expiry raises the typed
+        error matching whichever bound was the tighter one: the credit
+        window → :class:`CapacityError`; the caller's call budget →
+        :class:`ResponseTimeout` (the call's deadline elapsed before its
+        message could even be staged — the session is NOT poisoned, since
+        nothing was submitted)."""
         slot = ring.slots[self._tickets % ring.capacity]
         if slot.state == _FREE:
             return
         # the credit clock starts BEFORE the publish: the flush below lets
         # the service drain in-flight work but must not extend the bound
         # (its own key-sync handshake is separately crash/close-bounded)
-        deadline = time.monotonic() + self.transport.credit_wait
+        credit_deadline = time.monotonic() + self.transport.credit_wait
+        eff_deadline = credit_deadline if deadline is None \
+            else min(credit_deadline, deadline)
         self.flush()
 
         def free():
@@ -667,7 +686,7 @@ class Session:
         try:
             while True:
                 self._bell_cli.wait(
-                    free, max(0.0, deadline - time.monotonic()))
+                    free, max(0.0, eff_deadline - time.monotonic()))
                 with ring.cv:
                     if slot.state == _FREE:
                         return
@@ -678,7 +697,12 @@ class Session:
                     if self._closed:
                         raise TransportError(
                             f"session {self.name!r} is closed")
-                    if time.monotonic() >= deadline:
+                    if time.monotonic() >= eff_deadline:
+                        if eff_deadline < credit_deadline:
+                            raise ResponseTimeout(
+                                f"call budget exhausted while waiting for "
+                                f"a ring credit (ring full, "
+                                f"{ring.capacity} messages in flight)")
                         raise CapacityError(
                             f"ring full ({ring.capacity} messages in "
                             f"flight) — poll() before submitting more")
@@ -859,7 +883,13 @@ def _recv_exact(sock: socket.socket, n: int) -> bytearray:
     while got < n:
         r = sock.recv_into(view[got:], n - got)
         if r == 0:
-            raise TransportError("socket closed")
+            # EOF mid-message is peer DEATH, not a protocol error: classify
+            # it as a liveness failure so bounded retry / circuit breaking
+            # engage exactly as they do when a ring transport's service dies
+            # (ServiceCrashed ⊂ TransportError, so serve loops that catch
+            # TransportError to exit quietly are unaffected)
+            raise ServiceCrashed(
+                f"peer closed the socket mid-read ({got}/{n} bytes)")
         got += r
     return buf
 
@@ -1023,7 +1053,8 @@ class ShmSession(Session):
     def _bytes_rows(nbytes: int) -> int:
         return -(-nbytes // (framing.LANES * 4))
 
-    def submit(self, payload: np.ndarray) -> int:
+    def submit(self, payload: np.ndarray,
+               timeout: Optional[float] = None) -> int:
         self._check_usable()
         raw = np.ascontiguousarray(np.asarray(payload)) \
             .view(np.uint8).reshape(-1)
@@ -1031,8 +1062,10 @@ class ShmSession(Session):
             raise CapacityError(
                 f"shm region ({self.capacity}B) cannot hold {raw.nbytes}B payload")
         ring = self._ring_obj()
-        # credit-based backpressure BEFORE paying for a slot + payload copy
-        self._await_credit(ring)
+        # credit-based backpressure BEFORE paying for a slot + payload copy,
+        # clamped to the caller's per-call budget
+        self._await_credit(ring, None if timeout is None
+                           else time.monotonic() + timeout)
         buf = self.transport.arena.acquire(self._bytes_rows(raw.nbytes))
         buf.reshape(-1).view(np.uint8)[: raw.nbytes] = raw
         with ring.cv:
@@ -1599,11 +1632,14 @@ class MPKLinkSession(Session):
         self._seq += 1
         return t
 
-    def submit(self, payload: np.ndarray) -> int:
+    def submit(self, payload: np.ndarray,
+               timeout: Optional[float] = None) -> int:
         payload = np.asarray(payload)
         self._check_usable()
-        # credit-based backpressure BEFORE paying for a slot + seal + MAC
-        self._await_credit(self._ring_obj())
+        # credit-based backpressure BEFORE paying for a slot + seal + MAC,
+        # clamped to the caller's per-call budget
+        self._await_credit(self._ring_obj(), None if timeout is None
+                           else time.monotonic() + timeout)
         if framing.ZERO_COPY:
             # stage the frame straight into a recycled arena slot: one
             # payload write, no build/concat staging
@@ -1882,10 +1918,10 @@ class MPKLinkTransport(Transport):
         self.key_server = d.key_server
         self.seed = d.seed
 
-    def _bump_sync(self):
+    def _bump_sync(self, n: int = 1):
         with self._sync_lock:
-            self.sync_count += 1
-        framing.STATS.bump(key_syncs=1)
+            self.sync_count += n
+        framing.STATS.bump(key_syncs=n)
 
     @property
     def _seq(self) -> int:

@@ -149,11 +149,11 @@ def test_seeded_framestats_counter_fails_mpk001(tmp_path):
 
 def test_seeded_wallclock_deadline_fails_mpk103(tmp_path):
     src = (ROOT / "src" / "repro" / "core" / "transports.py").read_text()
-    old = "    def _await_credit(self, ring: _Ring):"
+    old = "        slot = ring.slots[self._tickets % ring.capacity]"
     assert old in src
     seeded = tmp_path / "transports.py"
     seeded.write_text(src.replace(
-        old, old + "\n        deadline = time.time() + 1.0", 1))
+        old, "        deadline = time.time() + 1.0\n" + old, 1))
     report = analyze_paths([seeded])
     assert any(f.rule == "MPK103" for f in report.new)
 

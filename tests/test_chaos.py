@@ -19,7 +19,7 @@ import time
 import numpy as np
 import pytest
 
-from repro.core import TRANSPORTS, ServiceGateway
+from repro.core import PROC_TRANSPORTS, TRANSPORTS, ServiceGateway
 from repro.core.faultwire import (ALL_KINDS, EXPECTED, FaultFabric, FaultPlan,
                                   FaultyClient)
 from repro.core.transports import (HandlerCrash, MPKLinkOptTransport,
@@ -145,6 +145,101 @@ def test_chaos_retries_heal_liveness_faults():
     # executed exactly once; only crashes (pre-execution kills) re-execute
     assert gw.stats["deduped"] == n_drops
     assert len(calls) == plan.n_requests
+
+
+# ---------------------------------------------------------------------------
+# process-backed transports: the crash fault is now a REAL kill -9 of the
+# service process (docs/protocol.md §6) — same contract clauses (a)/(b)/(c).
+# Assertions are client-observable only: server-side fabric state (`fired`)
+# lives in the forked child and dies with it.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(PROC_TRANSPORTS))
+def test_chaos_proc_all_kinds_bounded_and_typed(name):
+    """Full-kind plan against a real multiprocessing service: every fault
+    typed, every wait bounded, zero collateral failures — with crash
+    faults killing (and heals re-forking) actual OS processes."""
+    plan = FaultPlan(seed=2024, n_requests=40, rate=0.25)
+    sig, wall, fc = _run(name, plan)
+    assert wall < WALL_BUDGET, f"hung? {wall}s — replay: {plan.describe()}"
+    counts = fc.counts()
+    assert counts["error"] == 0, \
+        (f"non-faulted request failed: "
+         f"{[s for s in sig if s[1] == 'error']} — replay: {plan.describe()}")
+    for o in fc.outcomes:
+        if o.status == "fault":
+            assert isinstance(o.value, EXPECTED[o.kind]), \
+                f"{o} — replay: {plan.describe()}"
+
+
+@pytest.mark.parametrize("name", sorted(PROC_TRANSPORTS))
+@pytest.mark.parametrize("kind", ALL_KINDS)
+def test_chaos_proc_single_kind(name, kind):
+    """8 fault kinds × 3 process-backed transports, ≥2 injections each,
+    replayable from (seed, plan)."""
+    plan = FaultPlan(seed=hash((name, kind)) & 0xFFFF, n_requests=12,
+                     rate=0.25, kinds=(kind,))
+    assert len(plan.events) >= 2
+    sig, wall, fc = _run(name, plan)
+    assert wall < WALL_BUDGET, f"hung? — replay: {plan.describe()}"
+    assert fc.counts()["error"] == 0, f"replay: {plan.describe()}"
+    expected = EXPECTED[kind]
+    for o in fc.outcomes:
+        if o.kind != kind:
+            continue
+        if expected is None:                       # delay: must complete
+            assert o.ok, f"{o} — replay: {plan.describe()}"
+        elif o.status == "fault":
+            assert isinstance(o.value, expected), \
+                f"{o} — replay: {plan.describe()}"
+
+
+@pytest.mark.parametrize("name", ["mpklink_opt_proc", "shm_proc"])
+def test_chaos_proc_identical_seed_identical_outcomes(name):
+    """(c) across process boundaries: the shared-memory fault index keeps
+    the schedule monotonic across forks and heals, so two full runs still
+    fingerprint identically."""
+    spec = FaultPlan(seed=777, n_requests=30, rate=0.3).spec()
+    p1, p2 = FaultPlan.from_spec(spec), FaultPlan.from_spec(spec)
+    sig1, _, _ = _run(name, p1)
+    sig2, _, _ = _run(name, p2)
+    assert sig1 == sig2, f"nondeterministic — replay: {p1.describe()}"
+
+
+def test_chaos_proc_crash_is_a_real_sigkill():
+    """The crash fault kind must actually kill -9 the service process —
+    not just raise in a thread. Verified via the dead child's exitcode."""
+    import signal as _signal
+
+    gw = _chaos_gateway("mpklink_opt_proc")
+    sessions = []
+    orig_connect = gw.transport.connect
+
+    def tracking_connect(*a, **kw):
+        s = orig_connect(*a, **kw)
+        sessions.append(s)
+        return s
+
+    gw.transport.connect = tracking_connect
+    plan = FaultPlan(seed=9, n_requests=8, rate=0.5,
+                     kinds=("crash_handler",))
+    assert len(plan.events) >= 2
+    fab = FaultFabric(plan).attach(gw)
+    fc = FaultyClient(gw.connect("chaos-client"), fab, "wordcount")
+    try:
+        for i in range(plan.n_requests):
+            n = 4 + i % 9
+            out = fc.step(make_text(n, seed=i))
+            if out.status == "fault":
+                assert isinstance(out.value, ServiceCrashed), \
+                    f"{out} — replay: {plan.describe()}"
+    finally:
+        gw.close()
+    kills = [s for s in sessions
+             if s._proc is not None and s._proc.exitcode == -_signal.SIGKILL]
+    assert len(kills) >= 2, \
+        (f"crash faults fired but no service process died by SIGKILL "
+         f"— replay: {plan.describe()}")
 
 
 # ---------------------------------------------------------------------------

@@ -187,6 +187,45 @@ def test_full_ring_without_poller_raises_typed_after_bounded_wait():
         tr.close()
 
 
+@pytest.mark.parametrize("cls", [ShmTransport, MPKLinkOptTransport])
+def test_submit_timeout_clamps_credit_wait_to_caller_budget(cls):
+    """Regression: ``submit(timeout=...)`` against a full ring must clamp
+    the credit wait to the caller's remaining budget. Pre-fix, the wait
+    always ran the full ``credit_wait`` (here 30s) and the per-call
+    deadline was silently ignored — this test then stalls past its bound.
+    The caller-budget expiry raises ResponseTimeout and does NOT poison
+    the session (nothing was staged); a tighter credit window still
+    raises the classic CapacityError."""
+    tr = cls(wordcount_handler, ring_slots=2, credit_wait=30.0)
+    s = tr.connect("clamped-overflow")
+    try:
+        t0 = s.submit(make_text(1, seed=0))
+        t1 = s.submit(make_text(2, seed=0))
+        start = time.perf_counter()
+        with pytest.raises(ResponseTimeout, match="call budget"):
+            s.submit(make_text(3, seed=0), timeout=0.05)
+        assert time.perf_counter() - start < 5.0, \
+            "caller budget did not clamp the 30s credit_wait"
+        # not poisoned: the in-flight tickets still redeem
+        assert parse_count(np.asarray(s.poll(t0))) == 1
+        assert parse_count(np.asarray(s.poll(t1))) == 2
+    finally:
+        tr.close()
+    tr2 = cls(wordcount_handler, ring_slots=2, credit_wait=0.08)
+    s2 = tr2.connect("credit-overflow")
+    try:
+        u0 = s2.submit(make_text(1, seed=1))
+        u1 = s2.submit(make_text(2, seed=1))
+        # credit window tighter than the generous caller budget → the
+        # credit bound is the one that expires, typed CapacityError
+        with pytest.raises(CapacityError, match="ring full"):
+            s2.submit(make_text(3, seed=1), timeout=30.0)
+        assert parse_count(np.asarray(s2.poll(u0))) == 1
+        assert parse_count(np.asarray(s2.poll(u1))) == 2
+    finally:
+        tr2.close()
+
+
 # ---------------------------------------------------------------------------
 # per-poll / per-request timeouts
 # ---------------------------------------------------------------------------
