@@ -6,6 +6,10 @@
   baseline fight — benchmarks/ipc_baseline_bench.py: process-backed
                    mpklink_opt vs real loopback REST / socket-RPC servers
                    (§VI), with the 2x-over-REST acceptance gate
+  fleet          — benchmarks/fleet_bench.py: 1 vs 4 proc-backed replicas
+                   behind one service name under open-loop Poisson/bursty
+                   load + kill -9 chaos, with the 2x-scaling and
+                   zero-lost acceptance gates
   tableX         — benchmarks/kernel_bench.py: guarded copy vs plain copy
                    (the "security rides the copy" comparative analysis §VIII-A)
                    + attention / SSD kernel twins
@@ -57,6 +61,17 @@ def main() -> int:
                 failures.append(f"ipc_baseline_bench exited {rc}")
         except Exception as e:
             failures.append(f"ipc_baseline_bench crashed: "
+                            f"{type(e).__name__}: {e}")
+    print()
+    print("# === fleet_bench (replicated serving fleet, 1 vs 4 replicas) ===")
+    if not args.skip_ipc:
+        from benchmarks import fleet_bench
+        try:
+            rc = fleet_bench.main([] if args.full else ["--quick"])
+            if rc not in (None, 0):
+                failures.append(f"fleet_bench exited {rc}")
+        except Exception as e:
+            failures.append(f"fleet_bench crashed: "
                             f"{type(e).__name__}: {e}")
     print()
     print("# === kernel_bench (paper §VIII-A comparative analysis) ===")

@@ -29,6 +29,12 @@ _CONSTANT_FORMS = {
     "PROC_MAGIC": lambda v: [f"0x{v:08X}"],
     "PROC_CTRL_WORDS": lambda v: [f"PROC_CTRL_WORDS = {v}"],
     "PROC_SLOT_WORDS": lambda v: [f"PROC_SLOT_WORDS = {v}"],
+    # replica-fleet control plane (§8): membership states + router fan-out
+    "REPLICA_ACTIVE": lambda v: [f"REPLICA_ACTIVE = {v}"],
+    "REPLICA_DRAINING": lambda v: [f"REPLICA_DRAINING = {v}"],
+    "REPLICA_QUIESCED": lambda v: [f"REPLICA_QUIESCED = {v}"],
+    "REPLICA_DEAD": lambda v: [f"REPLICA_DEAD = {v}"],
+    "FLEET_CHOICES": lambda v: [f"FLEET_CHOICES = {v}"],
 }
 
 _ERROR_ROOT = "TransportError"

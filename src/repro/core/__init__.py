@@ -27,8 +27,9 @@ from repro.core.procwire import BASELINE_TRANSPORTS, PROC_TRANSPORTS
 ALL_TRANSPORTS = {**TRANSPORTS, **PROC_TRANSPORTS, **BASELINE_TRANSPORTS}
 
 from repro.core import gateway                     # needs TRANSPORTS above
-from repro.core.gateway import (CallCoalescer, GatewayClient, ServiceGateway,
-                                ServiceHealth)
+from repro.core.gateway import (CallCoalescer, GatewayClient, Replica,
+                                ReplicaRouter, ServiceFleet, ServiceGateway,
+                                ServiceHealth, simulate_assignments)
 from repro.core import faultwire                   # needs gateway above
 from repro.core.faultwire import FaultFabric, FaultPlan, FaultyClient
 from repro.core.transports import (ResponseTimeout, ServiceCrashed,
@@ -41,6 +42,7 @@ __all__ = ["ca", "domains", "framing", "gateway", "faultwire", "procwire",
            "mac_seed", "TRANSPORTS", "PROC_TRANSPORTS",
            "BASELINE_TRANSPORTS", "ALL_TRANSPORTS",
            "CallCoalescer", "GatewayClient",
-           "ServiceGateway",
+           "Replica", "ReplicaRouter", "ServiceFleet",
+           "ServiceGateway", "simulate_assignments",
            "ServiceHealth", "FaultFabric", "FaultPlan", "FaultyClient",
            "ResponseTimeout", "ServiceCrashed", "ServiceUnavailable"]

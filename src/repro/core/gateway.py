@@ -83,6 +83,7 @@ putting link-level channel domains and service domains in ONE key table
 from __future__ import annotations
 
 import itertools
+import random
 import queue
 import threading
 import time
@@ -110,6 +111,21 @@ GW_SCAT_MAGIC = 0x4D504B53          # "MPKS" — scatter (multi-service) envelop
 _ROUTE_BYTES = 16                   # 4 × u32 route words
 _OK, _ERR, _BOK, _SOK = 0, 1, 2, 3  # _BOK/_SOK: batch/scatter response follows
 _MAX_SCATTER = 1024                 # items per scatter envelope
+
+# replica fleet states (normative: docs/protocol.md §8) — the drain state
+# machine is strictly forward: ACTIVE → DRAINING → QUIESCED, with DEAD
+# reachable from ACTIVE/DRAINING on a detected process crash. A replica's
+# session/segment resources are recycled only from QUIESCED (the fleet
+# twin of procwire's crash invariant: in-flight slots never recycle).
+REPLICA_ACTIVE = 0
+REPLICA_DRAINING = 1
+REPLICA_QUIESCED = 2
+REPLICA_DEAD = 3
+_REPLICA_STATE_NAMES = {REPLICA_ACTIVE: "active",
+                        REPLICA_DRAINING: "draining",
+                        REPLICA_QUIESCED: "quiesced",
+                        REPLICA_DEAD: "dead"}
+FLEET_CHOICES = 2                   # power-of-two-choices candidate count
 
 
 def _route(a: int, b: int, c: int) -> np.ndarray:
@@ -406,6 +422,7 @@ class ServiceGateway:
         self.workers = workers
         self._shards: List[_Shard] = [_Shard(i) for i in range(workers)]
         self._mux: Optional["CallCoalescer"] = None
+        self._fleets: Dict[str, "ServiceFleet"] = {}
         self.stats = {"requests": 0, "responses": 0, "macs_verified": 0,
                       "rejected": 0, "deduped": 0, "sheds": 0,
                       "restarts": 0, "crashes": 0, "scatter_envelopes": 0}
@@ -469,6 +486,97 @@ class ServiceGateway:
             self.stats["restarts"] += 1
         svc.health.reset()
 
+    def _rekey_service(self, name: str) -> None:
+        """Bump the service-domain epoch and re-key the service WITHOUT
+        swapping the handler — the fleet-membership analogue of
+        :meth:`restart_service`'s key rotation. Every outstanding client
+        key/frame on the domain goes stale; still-certified clients re-key
+        transparently on their next call (ONE re-key, then traffic flows)."""
+        with self._glock:
+            svc = self._services[name]
+            self.registry.revoke(svc.server_key)          # epoch bump
+            svc.server_key = self.registry.issue_key(svc.domain, RW)
+
+    # -- replica fleets ------------------------------------------------------
+    def register_replica(self, name: str, handler: Handler, *,
+                         transport: Union[str, type] = "mpklink_opt_proc",
+                         transport_kwargs: Optional[dict] = None,
+                         allow: Optional[Set[str]] = None,
+                         router_seed: int = 0x524F5554,
+                         failure_threshold: int = 3,
+                         probe_after: int = 8) -> int:
+        """Add one replica to service ``name``'s fleet (creating the fleet
+        — and registering the service — on the first call). Returns the
+        replica id.
+
+        One service name maps to N replicas; each replica runs ``handler``
+        behind its OWN transport instance (proc-backed by default: the
+        handler executes in a forked child over a per-session POSIX shm
+        segment) with its own key registry, protection domain and epoch —
+        a frame sealed for one replica's link fails every other replica's
+        guard. The gateway-side fleet routes each request to one replica
+        via seeded power-of-two-choices least-loaded routing (in-flight +
+        EWMA service time, :class:`ReplicaRouter`); batch envelopes and
+        auto-coalesced cohorts land WHOLE on one replica
+        (:meth:`ServiceFleet.dispatch_batch` is the service's
+        ``batch_handler``), so a cohort joins one replica's ring as one
+        pipelined unit.
+
+        Joining an existing fleet under live traffic bumps the service
+        domain epoch (the membership change is a re-key event): every
+        client re-keys transparently ONCE through the CA, after which the
+        new replica is in the routing set. ``allow``/breaker options apply
+        on the first call only (they configure the service, not the
+        replica)."""
+        with self._glock:
+            fleet = self._fleets.get(name)
+            creating = fleet is None
+            if creating:
+                if name in self._services:
+                    raise ValueError(
+                        f"service {name!r} already registered without a "
+                        f"fleet — fleets and plain handlers don't mix")
+                fleet = ServiceFleet(self, name, router_seed=router_seed)
+                self._fleets[name] = fleet
+        if creating:
+            self.register_service(name, fleet.dispatch, allow,
+                                  batch_handler=fleet.dispatch_batch,
+                                  failure_threshold=failure_threshold,
+                                  probe_after=probe_after)
+        rid = fleet.add(handler, transport=transport,
+                        transport_kwargs=transport_kwargs)
+        if not creating:
+            # join under live traffic: epoch bump → one transparent re-key
+            self._rekey_service(name)
+        return rid
+
+    def fleet(self, name: str) -> "ServiceFleet":
+        with self._glock:
+            return self._fleets[name]
+
+    def drain_replica(self, name: str, rid: int,
+                      timeout: Optional[float] = 30.0) -> bool:
+        """Drain one replica under live traffic: the router stops picking
+        it immediately, admitted in-flight work completes, and its
+        session/segment resources are recycled only once quiesced (the
+        crash invariant). Blocks up to ``timeout`` for quiescence; → True
+        when the replica reached QUIESCED (its resources are then released
+        and the service epoch is bumped so the fleet membership change is
+        a re-key event), False when it is still DRAINING (nothing is
+        recycled; call again to keep waiting)."""
+        fleet = self.fleet(name)
+        if fleet.drain(rid, timeout=timeout):
+            self._rekey_service(name)
+            return True
+        return False
+
+    def fleet_stats(self) -> Dict[str, List[Dict[str, object]]]:
+        """Per-service replica snapshots (for supervisors/monitoring and
+        :func:`repro.runtime.elastic.plan_fleet_scaling`)."""
+        with self._glock:
+            fleets = dict(self._fleets)
+        return {name: f.snapshot() for name, f in fleets.items()}
+
     def health(self) -> Dict[str, Dict[str, object]]:
         """Per-service health snapshot (for supervisors/monitoring)."""
         with self._glock:
@@ -503,6 +611,10 @@ class ServiceGateway:
         self.transport.close()
         for sh in self._shards:
             sh.close()
+        with self._glock:
+            fleets = list(self._fleets.values())
+        for f in fleets:
+            f.close()
 
     def shard_stats(self) -> List[Dict[str, int]]:
         """Executor observability: per-shard executed/queued counts."""
@@ -687,8 +799,12 @@ class ServiceGateway:
                         f"batch handler returned {len(outs)} responses "
                         f"for {len(good)} requests")
                 svc.health.success()
+                # a batch handler may return a typed exception INSTANCE in
+                # an item's slot (a fleet replica's per-item remote error)
+                # — it becomes that item's typed error, like the loop path
                 for (i, _), o in zip(good, outs):
-                    results[i] = _as_frameable(np.asarray(o))
+                    results[i] = o if isinstance(o, BaseException) \
+                        else _as_frameable(np.asarray(o))
             except HandlerCrash:
                 self._service_failure(svc, crashed=True)
                 raise
@@ -950,6 +1066,11 @@ class ServiceGateway:
             out.extend((idx, e) for idx, _, _, _ in runnable)
             return
         for (idx, token, fseq, _), k in zip(runnable, slot_of):
+            if isinstance(outs[k], BaseException):
+                # per-item typed error from the batch handler (a fleet
+                # replica's remote failure): this item's fate, not dedup'd
+                out.append((idx, outs[k]))
+                continue
             try:
                 resp = _as_frameable(np.asarray(outs[k]))
                 self._dedup_put(svc, cid, token, resp)
@@ -1837,3 +1958,393 @@ class CallCoalescer:
         # mpklint: disable=MPK105 reason=best-effort carrier close at shutdown
         except Exception:
             pass
+
+
+# ---------------------------------------------------------------------------
+# replica fleets (the replicated serving layer)
+# ---------------------------------------------------------------------------
+
+EWMA_ALPHA = 0.2                    # replica service-time EWMA smoothing
+
+
+class _ReplicaGone(Exception):
+    """Internal routing signal: the picked replica died between admission
+    and wire submission. The request was NEVER sent, so it is safe to
+    re-route to a survivor — unlike a true in-flight loss, which must
+    surface as the typed ServiceCrashed. Never escapes the fleet."""
+
+
+class ReplicaRouter:
+    """Seeded power-of-two-choices least-loaded router.
+
+    Per decision the router draws exactly ``choices`` distinct candidate
+    indices from its private seeded stream and picks the least-loaded by
+    ``(inflight, ewma_ms, rid)``. Everything is deterministic in (seed,
+    observation sequence): two routers built from the same seed and fed
+    the same load observations produce the identical assignment sequence
+    — the FaultPlan property that makes fleet bugs reproduce from a
+    one-line seed. With ``record=True`` every decision is appended to
+    ``trace`` as ``(loads, candidates, picked)`` and :meth:`replay`
+    re-derives the picks from a fresh router, failing loudly on the first
+    divergence."""
+
+    def __init__(self, seed: int = 0x524F5554, *,
+                 choices: int = FLEET_CHOICES, record: bool = False):
+        if choices < 1:
+            raise ValueError("choices must be >= 1")
+        self.seed = seed
+        self.choices = choices
+        self.record = record
+        self._rng = random.Random(seed)
+        self.picks = 0
+        self.assigned: Dict[int, int] = {}      # rid -> decisions won
+        self.trace: List[Tuple] = []            # (loads, cands, picked)
+
+    def pick(self, loads) -> int:
+        """One routing decision. ``loads`` is the ordered ACTIVE set as
+        ``(rid, inflight, ewma_ms)`` triples; → the picked rid."""
+        n = len(loads)
+        if n == 0:
+            raise ServiceUnavailable("router invoked with no active replicas")
+        cands = [loads[i] for i in self._draw(n)]
+        picked = min(cands, key=lambda t: (t[1], t[2], t[0]))[0]
+        self.picks += 1
+        self.assigned[picked] = self.assigned.get(picked, 0) + 1
+        if self.record:
+            self.trace.append((tuple(loads),
+                               tuple(c[0] for c in cands), picked))
+        return picked
+
+    def _draw(self, n: int) -> List[int]:
+        """``min(choices, n)`` distinct indices. The draw count depends
+        only on ``n`` (part of every observation), keeping the stream
+        position — and therefore every later decision — deterministic."""
+        k = min(self.choices, n)
+        out: List[int] = []
+        for d in range(k):
+            j = self._rng.randrange(n - d)
+            for prev in sorted(out):
+                if j >= prev:
+                    j += 1
+            out.append(j)
+        return out
+
+    def replay(self, trace) -> List[int]:
+        """Re-derive a recorded decision sequence from a FRESH router with
+        this router's seed/choices; raises AssertionError on the first
+        divergent pick. → the replayed assignment sequence."""
+        fresh = ReplicaRouter(self.seed, choices=self.choices)
+        out = []
+        for k, (loads, _cands, picked) in enumerate(trace):
+            got = fresh.pick(list(loads))
+            if got != picked:
+                raise AssertionError(
+                    f"router replay diverged at decision {k}: "
+                    f"recorded rid {picked}, replayed rid {got} "
+                    f"(seed {self.seed:#x})")
+            out.append(got)
+        return out
+
+
+def simulate_assignments(seed: int, arrivals_ms, n_replicas: int,
+                         service_ms=1.0, *,
+                         choices: int = FLEET_CHOICES) -> List[int]:
+    """Deterministic discrete-event model of fleet routing: each replica
+    serves serially at ``service_ms`` per item (scalar or per-arrival
+    sequence); inflight at each arrival instant is derived from completion
+    times, never from wall clock. Pure function of its arguments —
+    identical ``(seed, arrival trace)`` yields the identical replica
+    assignment sequence, which is both the determinism property the tests
+    pin and the offline tool for reproducing a fleet imbalance from a
+    one-line seed."""
+    router = ReplicaRouter(seed, choices=choices)
+    svc = list(service_ms) if np.ndim(service_ms) else \
+        [float(service_ms)] * len(list(arrivals_ms))
+    arrivals = list(arrivals_ms)
+    if len(svc) != len(arrivals):
+        raise ValueError(f"{len(svc)} service times for "
+                         f"{len(arrivals)} arrivals")
+    outstanding: List[List[float]] = [[] for _ in range(n_replicas)]
+    finish = [0.0] * n_replicas
+    ewma = [0.0] * n_replicas
+    out: List[int] = []
+    for t, s in zip(arrivals, svc):
+        loads = []
+        for rid in range(n_replicas):
+            outstanding[rid] = [c for c in outstanding[rid] if c > t]
+            loads.append((rid, len(outstanding[rid]), ewma[rid]))
+        picked = router.pick(loads)
+        done = max(t, finish[picked]) + s
+        finish[picked] = done
+        outstanding[picked].append(done)
+        ewma[picked] = s if ewma[picked] == 0.0 else \
+            (1.0 - EWMA_ALPHA) * ewma[picked] + EWMA_ALPHA * s
+        out.append(picked)
+    return out
+
+
+class Replica:
+    """One fleet member: its own transport instance (its own key registry,
+    protection domain and epoch — proc-backed by default, so the handler
+    runs in a forked child over a private POSIX shm segment) plus the one
+    session the fleet drives it through. The session is serial per the
+    session model; ``rlock`` is the fleet-side serializer. ``inflight``
+    counts admission→completion (queued + on the wire), which is what the
+    power-of-two router balances on."""
+
+    def __init__(self, rid: int, service: str, transport, session):
+        self.rid = rid
+        self.service = service
+        self.transport = transport
+        self.session = session
+        self.state = REPLICA_ACTIVE
+        self.inflight = 0
+        self.ewma_ms: Optional[float] = None
+        self.served = 0
+        self.crashes = 0
+        self.released = False
+        self.rlock = threading.Lock()       # serializes wire use
+        self.quiesced = threading.Event()
+
+
+class ServiceFleet:
+    """N replicas behind one service name, with routing, cohort-whole
+    admission, drain/join and crash containment (docs/protocol.md §8,
+    docs/architecture.md "The replica fleet").
+
+    * ``dispatch`` is the service handler: seeded power-of-two-choices
+      least-loaded admission, then one ``session.request`` on the picked
+      replica. A replica that dies between admission and submission is
+      re-routed (the request never reached a wire); a true in-flight death
+      surfaces as the typed :class:`ServiceCrashed` and marks the replica
+      DEAD — the router never picks it again.
+    * ``dispatch_batch`` is the service ``batch_handler``: a batch
+      envelope or auto-coalesced cohort lands WHOLE on one replica and
+      rides its ring as one pipelined ``call_batch`` (cohort-aware
+      admission — a cohort is never split across replicas).
+    * ``drain``/``add`` implement the live-traffic membership machinery;
+      both epoch-bump the service domain through the gateway so clients
+      re-key exactly once per membership change.
+    """
+
+    def __init__(self, gw: "ServiceGateway", name: str, *,
+                 router_seed: int = 0x524F5554):
+        self.gw = gw
+        self.name = name
+        self.router = ReplicaRouter(router_seed)
+        self._lock = threading.Lock()
+        self._replicas: "OrderedDict[int, Replica]" = OrderedDict()
+        self._rid_counter = itertools.count(0)
+        self.stats = {"routed": 0, "cohorts": 0, "rerouted": 0,
+                      "crashes": 0, "drains": 0, "joins": 0}
+
+    # -- membership ---------------------------------------------------------
+    def add(self, handler: Handler, *,
+            transport: Union[str, type] = "mpklink_opt_proc",
+            transport_kwargs: Optional[dict] = None) -> int:
+        """Start one replica of ``handler`` behind its own transport
+        instance and place it in the routing set. → replica id."""
+        if isinstance(transport, str):
+            from repro.core import ALL_TRANSPORTS
+            transport = ALL_TRANSPORTS[transport]
+        tr = transport(handler, **dict(transport_kwargs or {}))
+        try:
+            with self._lock:
+                rid = next(self._rid_counter)
+                session = tr.connect(f"replica:{self.name}#{rid}")
+                self._replicas[rid] = Replica(rid, self.name, tr, session)
+                self.stats["joins"] += 1
+        except BaseException:
+            tr.close()
+            raise
+        return rid
+
+    def drain(self, rid: int, timeout: Optional[float] = 30.0) -> bool:
+        """ACTIVE → DRAINING immediately (the router stops picking it; new
+        admissions are impossible), then wait up to ``timeout`` for the
+        admitted in-flight work to complete. Quiescence releases the
+        replica's session/transport (segment slots recycle ONLY now — the
+        crash invariant); a timeout releases nothing and the replica stays
+        DRAINING. A DEAD replica drains trivially: nothing is in flight
+        that can still complete, and procwire's own close path keeps its
+        in-flight slots unrecycled forever. → True once quiesced."""
+        with self._lock:
+            rep = self._replicas[rid]
+            if rep.state == REPLICA_ACTIVE:
+                rep.state = REPLICA_DRAINING
+                self.stats["drains"] += 1
+            if rep.state == REPLICA_QUIESCED:
+                return True
+            if rep.inflight == 0 or rep.state == REPLICA_DEAD:
+                rep.quiesced.set()
+        if not rep.quiesced.wait(timeout):
+            return False
+        with self._lock:
+            if rep.state == REPLICA_DRAINING:
+                rep.state = REPLICA_QUIESCED
+        self._release(rep)
+        return True
+
+    def _release(self, rep: Replica) -> None:
+        with self._lock:
+            if rep.released:
+                return
+            rep.released = True
+        try:
+            rep.session.close()
+        # mpklint: disable=MPK105 reason=best-effort release of a quiesced/dead replica session
+        except Exception:
+            pass
+        try:
+            rep.transport.close()
+        # mpklint: disable=MPK105 reason=best-effort release of a quiesced/dead replica transport
+        except Exception:
+            pass
+
+    def close(self) -> None:
+        """Gateway teardown: release every replica. Unquiesced replicas
+        are torn down too — the process is exiting; procwire's own close
+        path preserves the crash invariant for anything still in flight."""
+        with self._lock:
+            reps = list(self._replicas.values())
+        for rep in reps:
+            self._release(rep)
+
+    # -- routing ------------------------------------------------------------
+    def _route(self, weight: int = 1) -> Replica:
+        with self._lock:
+            loads = [(r.rid, r.inflight,
+                      r.ewma_ms if r.ewma_ms is not None else 0.0)
+                     for r in self._replicas.values()
+                     if r.state == REPLICA_ACTIVE]
+            if not loads:
+                raise ServiceUnavailable(
+                    f"service {self.name!r}: no active replicas")
+            rep = self._replicas[self.router.pick(loads)]
+            rep.inflight += weight
+            self.stats["routed"] += weight
+            return rep
+
+    def _complete(self, rep: Replica, weight: int, elapsed_ms: float,
+                  ok: bool) -> None:
+        with self._lock:
+            rep.inflight -= weight
+            if ok:
+                rep.served += weight
+                per = elapsed_ms / max(1, weight)
+                rep.ewma_ms = per if rep.ewma_ms is None else \
+                    (1.0 - EWMA_ALPHA) * rep.ewma_ms + EWMA_ALPHA * per
+            if rep.state in (REPLICA_DRAINING, REPLICA_DEAD) \
+                    and rep.inflight == 0:
+                rep.quiesced.set()
+
+    def _mark_dead(self, rep: Replica) -> None:
+        with self._lock:
+            if rep.state in (REPLICA_DEAD, REPLICA_QUIESCED):
+                return
+            rep.state = REPLICA_DEAD
+            rep.crashes += 1
+            self.stats["crashes"] += 1
+
+    def _link_died(self, rep: Replica) -> bool:
+        """True when the replica LINK is gone (child death / poisoned
+        session) — as opposed to a remote handler raising a typed error
+        that merely reconstructs as the same class on this side."""
+        s = rep.session
+        return bool(getattr(s, "_crashed", False)
+                    or getattr(s, "_poisoned", False)
+                    or getattr(s, "_closed", False))
+
+    # -- data plane (the service handler / batch_handler) -------------------
+    def dispatch(self, payload: np.ndarray) -> np.ndarray:
+        """Route one request to one replica. Runs on the gateway's session
+        service threads / shards — concurrency across replicas is real;
+        within a replica, ``rlock`` keeps the session serial."""
+        attempts = 0
+        while True:
+            rep = self._route()
+            t0 = time.perf_counter()
+            ok = False
+            try:
+                with rep.rlock:
+                    if rep.state != REPLICA_ACTIVE \
+                            and rep.state != REPLICA_DRAINING:
+                        raise _ReplicaGone()
+                    # mpklint: disable=MPK002 reason=rlock IS the replica wire lock; the proc session is serial by contract and callers park here by design
+                    out = rep.session.request(payload)
+                ok = True
+                return out
+            except _ReplicaGone:
+                attempts += 1
+                with self._lock:
+                    self.stats["rerouted"] += 1
+                if attempts > 32:
+                    raise ServiceUnavailable(
+                        f"service {self.name!r}: re-route budget exhausted")
+            except ServiceCrashed:
+                if self._link_died(rep):
+                    self._mark_dead(rep)
+                raise
+            except ResponseTimeout:
+                # a ring/lockstep deadline expiry poisons the session —
+                # the replica can no longer be driven; retire it
+                self._mark_dead(rep)
+                raise
+            finally:
+                self._complete(rep, 1, (time.perf_counter() - t0) * 1e3, ok)
+
+    def dispatch_batch(self, payloads) -> list:
+        """Cohort-aware admission: the WHOLE batch lands on ONE replica
+        and rides its ring as one pipelined ``call_batch`` (ring-windowed
+        for cohorts larger than the slot ring). Per-item remote failures
+        come back as typed exception instances in their slots (the
+        gateway's batch paths map them to per-item typed errors); a child
+        death mid-cohort marks the replica DEAD and every not-yet-served
+        item of the cohort carries the typed ServiceCrashed."""
+        n = len(payloads)
+        with self._lock:
+            self.stats["cohorts"] += 1
+        attempts = 0
+        while True:
+            rep = self._route(weight=n)
+            t0 = time.perf_counter()
+            ok = False
+            try:
+                with rep.rlock:
+                    if rep.state != REPLICA_ACTIVE \
+                            and rep.state != REPLICA_DRAINING:
+                        raise _ReplicaGone()
+                    outs = rep.session.call_batch(payloads,
+                                                  return_exceptions=True)
+                ok = True
+            except _ReplicaGone:
+                attempts += 1
+                with self._lock:
+                    self.stats["rerouted"] += n
+                if attempts > 32:
+                    raise ServiceUnavailable(
+                        f"service {self.name!r}: re-route budget exhausted")
+                continue
+            except (ServiceCrashed, ResponseTimeout):
+                if self._link_died(rep):
+                    self._mark_dead(rep)
+                raise
+            finally:
+                self._complete(rep, n, (time.perf_counter() - t0) * 1e3, ok)
+            if self._link_died(rep):
+                self._mark_dead(rep)
+            return outs
+
+    # -- observability -------------------------------------------------------
+    def snapshot(self) -> List[Dict[str, object]]:
+        """Deterministically ordered per-replica view (rid ascending) for
+        supervisors and :func:`repro.runtime.elastic.plan_fleet_scaling`."""
+        with self._lock:
+            return [{"rid": r.rid,
+                     "state": _REPLICA_STATE_NAMES[r.state],
+                     "inflight": r.inflight,
+                     "ewma_ms": None if r.ewma_ms is None
+                     else round(r.ewma_ms, 3),
+                     "served": r.served,
+                     "crashes": r.crashes}
+                    for r in self._replicas.values()]

@@ -267,6 +267,18 @@ class _ShmSegment:
 
 _DOORBELL_SPIN = 2              # bounded predicate probes before select()
 _WAIT_SLICE = 0.1               # max single select() slice (liveness re-check)
+_LIVENESS_SLICE = 0.25          # client waits re-consult the is_alive()
+                                # backstop at least this often: EOF is the
+                                # fast path, but a foreign fd keeping a dead
+                                # child's bell open must not stretch crash
+                                # detection to the full call deadline
+
+# Every live ProcSession, so a newly forked service child can close the
+# OTHER sessions' doorbell fds (fork copies the whole fd table): a sibling
+# child holding a dead child's bell write end would otherwise suppress the
+# EOF that makes kill -9 detection prompt. Guarded by _FORK_LOCK (forks
+# and registration serialize on it).
+_LIVE_PROC_SESSIONS: "weakref.WeakSet" = weakref.WeakSet()
 
 
 class ProcDoorbell:
@@ -445,6 +457,8 @@ class ProcSession(Session):
         self._ctrl[_W_MODE] = self._mode
         self._pbell_svc = ProcDoorbell()    # client rings → child waits
         self._pbell_cli = ProcDoorbell()    # child rings → client waits
+        with _FORK_LOCK:
+            _LIVE_PROC_SESSIONS.add(self)
         self._proc: Optional[multiprocessing.process.BaseProcess] = None
         # ticket → (req_buf, resp_buf, seq); buffers of slots a dead child
         # may have held are deliberately NEVER released (crash invariant)
@@ -555,8 +569,12 @@ class ProcSession(Session):
             else min(credit_deadline, deadline)
         self.flush()
         while True:
+            # slice-bounded park: each lap re-consults the is_alive()
+            # backstop below, so a kill -9 whose EOF is suppressed by an
+            # inherited fd still surfaces within _LIVENESS_SLICE
             self._pbell_cli.wait(
-                free, max(0.0, eff_deadline - time.monotonic()),
+                free, min(_LIVENESS_SLICE,
+                          max(0.0, eff_deadline - time.monotonic())),
                 on_eof=self._mark_crashed)
             if w[state_i] == _FREE:
                 return
@@ -676,8 +694,11 @@ class ProcSession(Session):
                     and w[b + _S_TICKET] == tick) \
                 or self._crashed or self._closed
         while True:
+            # slice-bounded park (see _await_slot): crash detection is
+            # bounded by _LIVENESS_SLICE even without the EOF fast path
             self._pbell_cli.wait(
-                settled, max(0.0, deadline - time.monotonic()),
+                settled, min(_LIVENESS_SLICE,
+                             max(0.0, deadline - time.monotonic())),
                 on_eof=self._mark_crashed)
             if w[b + _S_STATE] == _DONE and w[b + _S_TICKET] == tick:
                 break
@@ -974,8 +995,11 @@ class ProcMPKLinkSession(ProcSession):
                     and w[b + _S_TICKET] == tick) \
                 or self._crashed or self._closed
         while True:
+            # slice-bounded park (see _await_slot): crash detection is
+            # bounded by _LIVENESS_SLICE even without the EOF fast path
             self._pbell_cli.wait(
-                settled, max(0.0, deadline - time.monotonic()),
+                settled, min(_LIVENESS_SLICE,
+                             max(0.0, deadline - time.monotonic())),
                 on_eof=self._mark_crashed)
             if w[b + _S_STATE] == _DONE and w[b + _S_TICKET] == tick:
                 break
@@ -1054,6 +1078,14 @@ def _service_child_main(session: ProcSession) -> None:
         # for ~100ms. New per-request garbage is refcount-reclaimed.
         gc.freeze()
         session._seg.disown()
+        # fd hygiene: the fork snapshot carries every OTHER live session's
+        # doorbell fds; while this child holds a sibling's bell write end,
+        # that sibling's client would never see EOF when its own child is
+        # killed. Close all foreign bells so peer-death EOF stays prompt.
+        for other in list(_LIVE_PROC_SESSIONS):
+            if other is not session:
+                other._pbell_svc.close()
+                other._pbell_cli.close()
         session._pbell_svc.keep_reader()
         session._pbell_cli.keep_writer()
         _child_loop(session)
@@ -1335,6 +1367,9 @@ class _ServerProcessTransport(Transport):
             def child():
                 try:
                     gc.freeze()     # same hygiene as the shm service child
+                    for sess in list(_LIVE_PROC_SESSIONS):
+                        sess._pbell_svc.close()     # inherited foreign bells
+                        sess._pbell_cli.close()     # (see _service_child_main)
                     lifeline.child_watch()
                     self._child_serve(listener)
                 # mpklint: disable=MPK105 reason=child exit path; clients see connection reset

@@ -69,3 +69,37 @@ def plan_gateway_recovery(health: dict, restartable: set) -> list:
         elif state == "half_open":
             actions.append(("probe", name))
     return actions
+
+
+def plan_fleet_scaling(snapshot: list, target: int) -> list:
+    """Replica-fleet remesh policy (pure decision, no side effects): given
+    one service's ``ServiceFleet.snapshot()`` (rid-ordered dicts with
+    ``state``/``inflight``/``ewma_ms``), decide what the supervisor should
+    actuate to hold ``target`` ACTIVE replicas:
+
+      dead replica      → ("release", rid)   drain() it — trivially quiesced,
+                                             frees segment + child bookkeeping
+      active < target   → ("join", n)        register n fresh replicas; each
+                                             join epoch-bumps the service once
+      active > target   → ("drain", rid)     drain the least-loaded actives,
+                                             newest first on ties
+
+    DRAINING/QUIESCED replicas count as neither active nor reclaimable —
+    a prior sweep already decided them. Deterministic and order-stable
+    (releases by rid, drains by (inflight, ewma, -rid)) so supervision
+    sweeps are replayable in chaos tests, mirroring
+    :func:`plan_gateway_recovery`."""
+    actions = []
+    for r in sorted((r for r in snapshot if r["state"] == "dead"),
+                    key=lambda r: r["rid"]):
+        actions.append(("release", r["rid"]))
+    active = [r for r in snapshot if r["state"] == "active"]
+    deficit = target - len(active)
+    if deficit > 0:
+        actions.append(("join", deficit))
+    elif deficit < 0:
+        surplus = sorted(active,
+                         key=lambda r: (r["inflight"], r["ewma_ms"] or 0.0,
+                                        -r["rid"]))[:-deficit]
+        actions.extend(("drain", r["rid"]) for r in surplus)
+    return actions

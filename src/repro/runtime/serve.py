@@ -17,7 +17,7 @@ import itertools
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -395,3 +395,50 @@ class EngineService:
         return outs
 
     __call__ = handler
+
+
+# ---------------------------------------------------------------------------
+# replica fleets (N engines behind one service name)
+# ---------------------------------------------------------------------------
+
+def fleet_handler(engine_factory: Callable[[], ServingEngine], *,
+                  timeout: float = 300.0):
+    """Service handler for one proc-backed engine replica.
+
+    The EngineService — engine, slot grid, AND its tick-loop thread — is
+    constructed lazily inside the replica's forked child on first request:
+    threads do not survive ``fork``, so an EngineService started in the
+    gateway process would reach the child as a dead tick loop and every
+    submit would stall out its deadline. Lazy construction also keeps
+    replica registration cheap (the fork itself is already lazy in
+    procwire) and gives each replica a fully private engine.
+    """
+    state: Dict[str, EngineService] = {}
+
+    def handler(req: np.ndarray) -> np.ndarray:
+        svc = state.get("svc")
+        if svc is None:
+            svc = state["svc"] = EngineService(
+                engine_factory(), timeout=timeout).start()
+        return svc.handler(req)
+
+    return handler
+
+
+def register_engine_fleet(gw, name: str,
+                          engine_factory: Callable[[], ServingEngine],
+                          replicas: int, *,
+                          transport: str = "mpklink_opt_proc",
+                          transport_kwargs: Optional[dict] = None,
+                          timeout: float = 300.0) -> List[int]:
+    """Register ``replicas`` independent engine replicas behind one service
+    name on ``gw`` (a :class:`repro.core.gateway.ServiceGateway`). Each
+    replica is its own transport instance — own protection domain, epoch,
+    shm segment, and (for proc transports) its own child process running a
+    private engine via :func:`fleet_handler`. → the replica ids, in join
+    order."""
+    return [gw.register_replica(name, fleet_handler(engine_factory,
+                                                    timeout=timeout),
+                                transport=transport,
+                                transport_kwargs=transport_kwargs)
+            for _ in range(replicas)]

@@ -1,5 +1,7 @@
+import gc
 import os
 import sys
+import time
 
 # Tests run on the single real CPU device. Only the dry-run sets the
 # 512-device flag (in its own process); multi-device tests here spawn
@@ -19,3 +21,35 @@ def rng():
 @pytest.fixture
 def key():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def proc_hygiene():
+    """Per-module leak detector for the process-backed suites: after every
+    test module, this process must own zero ``/dev/shm/mpk_<pid>_*``
+    segments and zero unreaped service children. procwire defers the final
+    segment close of a crashed child (the crash invariant pins in-flight
+    slots), so the check first reaps (``active_children`` joins finished
+    processes) and sweeps the deferred-close list, with a short retry loop
+    for teardowns that are still settling — then fails the module loudly
+    instead of letting a leak bill the next module's tests."""
+    yield
+    import multiprocessing
+
+    from repro.core import procwire
+
+    gc.collect()
+    mine = f"mpk_{os.getpid()}_"
+    deadline = time.monotonic() + 10.0
+    while True:
+        procwire._sweep_deferred_closes()
+        kids = multiprocessing.active_children()
+        segs = ([f for f in os.listdir("/dev/shm") if f.startswith(mine)]
+                if os.path.isdir("/dev/shm") else [])
+        if not kids and not segs:
+            return
+        if time.monotonic() > deadline:
+            pytest.fail(
+                f"proc hygiene: unreaped children={[k.pid for k in kids]} "
+                f"leaked shm segments={segs}")
+        time.sleep(0.05)

@@ -109,3 +109,12 @@ def test_committed_benchmark_jsons_match_docs_claims():
                         / "chaos_bench.json").read_text())
     gates = chaos["gates"]
     assert gates["mpklink_opt_10pct_sustains_half"] is not False
+    # PR 8 gates: replica-fleet scaling + kill -9 chaos cell
+    fleet = json.loads((ROOT / "benchmarks" / "results"
+                        / "fleet_bench.json").read_text())
+    fgates = fleet["gates"]
+    for g in ("all_answers_correct", "no_lost_requests",
+              "kill_cell_zero_lost", "kill_victim_marked_dead",
+              "fleet_4r_2x_1r_poisson"):
+        assert fgates[g] is True, g
+    assert fgates["fleet_4r_vs_1r_rps_ratio_poisson"] >= 2.0

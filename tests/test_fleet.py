@@ -1,0 +1,528 @@
+"""Replica fleets (docs/protocol.md §8): seeded power-of-two routing,
+cohort-aware admission, drain/join under live traffic with one epoch
+re-key per membership change, and the chaos kill -9 matrix over real
+forked replica children.
+
+Router and scaling-policy tests are pure and tier-1; everything that
+forks replica processes is marked ``proc`` (CI runs those in the fleet
+job with a flake-detector repeat pass)."""
+import os
+import signal
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.gateway import (FLEET_CHOICES, REPLICA_ACTIVE,
+                                REPLICA_DEAD, REPLICA_DRAINING,
+                                REPLICA_QUIESCED, ReplicaRouter,
+                                ServiceGateway, simulate_assignments)
+from repro.core.transports import (ResponseTimeout, ServiceCrashed,
+                                   ServiceUnavailable)
+from repro.core.wordcount import make_text, parse_count, wordcount_handler
+from repro.runtime.elastic import plan_fleet_scaling
+
+_PROC_KW = {"ring_slots": 2, "timeout": 30.0}
+
+
+def _tagged(i):
+    """Replica handler that appends its replica index to the payload —
+    the child-side identity that proves where a request actually ran."""
+    def handler(req):
+        return np.concatenate([np.asarray(req, np.uint8),
+                               np.array([i], np.uint8)])
+    return handler
+
+
+def _tag(out):
+    return int(np.asarray(out)[-1])
+
+
+# ---------------------------------------------------------------------------
+# router: power-of-two choices, determinism, replay
+# ---------------------------------------------------------------------------
+
+def test_router_skew_bounded():
+    """Power-of-two + least-loaded keeps per-replica assignment counts
+    near-uniform at full load: no replica gets starved or doubled."""
+    n, total = 4, 2000
+    picks = simulate_assignments(0xBEEF, [i * 1.0 for i in range(total)],
+                                 n, 4.0)
+    counts = [picks.count(rid) for rid in range(n)]
+    mean = total / n
+    assert min(counts) > 0.7 * mean, counts
+    assert max(counts) < 1.3 * mean, counts
+
+
+def test_router_skew_beats_single_choice():
+    """The '2' in power-of-two is load-bearing: with choices=1 (pure
+    random) the max/min spread is measurably worse than with choices=2 on
+    the identical arrival trace."""
+    arrivals = [i * 1.0 for i in range(2000)]
+
+    def spread(choices):
+        picks = simulate_assignments(7, arrivals, 4, 4.0, choices=choices)
+        counts = [picks.count(r) for r in range(4)]
+        return max(counts) - min(counts)
+
+    assert spread(2) < spread(1), (spread(2), spread(1))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 7, 0xDEADBEEF])
+def test_router_determinism_property(seed):
+    """Identical (seed, arrival trace) → identical replica assignment
+    sequence — the FaultPlan property that makes a fleet imbalance
+    reproduce from a one-line seed."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0, size=300)).tolist()
+    svc = rng.uniform(0.5, 6.0, size=300).tolist()
+    a = simulate_assignments(seed, arrivals, 3, svc)
+    b = simulate_assignments(seed, arrivals, 3, svc)
+    assert a == b
+    # a different seed almost surely routes differently on a 300-long trace
+    assert a != simulate_assignments(seed + 1, arrivals, 3, svc)
+
+
+def test_router_trace_replay():
+    """A recorded decision trace replays bit-for-bit from a fresh router
+    with the same seed; a tampered pick is caught loudly."""
+    r = ReplicaRouter(0x5EED, record=True)
+    rng = np.random.default_rng(3)
+    for _ in range(200):
+        loads = [(rid, int(rng.integers(0, 5)), float(rng.uniform(0, 4)))
+                 for rid in range(5)]
+        r.pick(loads)
+    assert r.replay(r.trace) == [t[2] for t in r.trace]
+    bad = list(r.trace)
+    loads, cands, picked = bad[57]
+    other = next(rid for rid, _, _ in loads if rid != picked)
+    bad[57] = (loads, cands, other)
+    with pytest.raises(AssertionError, match="decision 57"):
+        r.replay(bad)
+
+
+def test_router_candidates_distinct_and_least_loaded():
+    r = ReplicaRouter(1, record=True)
+    for _ in range(100):
+        # rid 2 is always strictly least-loaded: whenever it is drawn it
+        # must win; candidates must always be distinct
+        r.pick([(0, 5, 9.0), (1, 5, 9.0), (2, 0, 0.1), (3, 5, 9.0)])
+    for loads, cands, picked in r.trace:
+        assert len(cands) == len(set(cands)) == FLEET_CHOICES
+        if 2 in cands:
+            assert picked == 2
+    assert r.picks == 100 and sum(r.assigned.values()) == 100
+
+
+def test_router_single_replica_and_empty():
+    r = ReplicaRouter(0)
+    assert r.pick([(9, 3, 1.0)]) == 9
+    with pytest.raises(ServiceUnavailable):
+        r.pick([])
+
+
+def test_simulate_service_time_vector_validation():
+    with pytest.raises(ValueError):
+        simulate_assignments(0, [0.0, 1.0, 2.0], 2, [1.0, 2.0])
+
+
+# ---------------------------------------------------------------------------
+# elastic scaling policy (pure decision)
+# ---------------------------------------------------------------------------
+
+def _snap(rid, state, inflight=0, ewma=1.0):
+    return {"rid": rid, "state": state, "inflight": inflight,
+            "ewma_ms": ewma, "served": 0, "crashes": 0}
+
+
+def test_plan_fleet_scaling_release_join_drain():
+    snap = [_snap(0, "active", inflight=2), _snap(1, "dead"),
+            _snap(2, "active", inflight=0, ewma=None)]
+    assert plan_fleet_scaling(snap, 4) == [("release", 1), ("join", 2)]
+    # surplus: drains the least-loaded active (rid 2: inflight 0)
+    assert plan_fleet_scaling(snap, 1) == [("release", 1), ("drain", 2)]
+    assert plan_fleet_scaling(snap, 2) == [("release", 1)]
+    assert plan_fleet_scaling([], 2) == [("join", 2)]
+    # draining/quiesced replicas are neither active nor reclaimable
+    assert plan_fleet_scaling([_snap(0, "draining"), _snap(1, "quiesced"),
+                               _snap(2, "active")], 1) == []
+
+
+def test_plan_fleet_scaling_deterministic_order():
+    snap = [_snap(3, "dead"), _snap(1, "dead"),
+            _snap(0, "active", inflight=1), _snap(2, "active", inflight=1)]
+    a = plan_fleet_scaling(snap, 0)
+    assert a == plan_fleet_scaling(list(reversed(snap)), 0)
+    # ties on load drain the NEWEST replica first
+    assert a == [("release", 1), ("release", 3),
+                 ("drain", 2), ("drain", 0)]
+
+
+# ---------------------------------------------------------------------------
+# in-process fleet: routing, cohort wholeness, drain/join (tier-1 fast)
+# ---------------------------------------------------------------------------
+
+def _inproc_fleet(n=3, **replica_kw):
+    gw = ServiceGateway("mpklink_opt")
+    for i in range(n):
+        gw.register_replica("echo", _tagged(i), transport="mpklink_opt",
+                            **replica_kw)
+    return gw.start()
+
+
+def test_fleet_routes_across_replicas():
+    gw = _inproc_fleet(3)
+    try:
+        cli = gw.connect("c0")
+        seen = set()
+        for _ in range(40):
+            out = cli.call("echo", np.arange(4, dtype=np.uint8))
+            assert np.asarray(out)[:4].tolist() == [0, 1, 2, 3]
+            seen.add(_tag(out))
+        assert len(seen) >= 2, seen
+        snap = gw.fleet_stats()["echo"]
+        assert sum(s["served"] for s in snap) == 40
+        assert all(s["state"] == "active" and s["inflight"] == 0
+                   for s in snap)
+        cli.close()
+    finally:
+        gw.close()
+
+
+def test_fleet_cohorts_never_split():
+    """A batch envelope lands WHOLE on one replica — every item of every
+    cohort carries the same replica tag, across many cohorts."""
+    gw = _inproc_fleet(3)
+    try:
+        cli = gw.connect("c0")
+        tags_per_cohort = []
+        for k in range(12):
+            outs = cli.call_batch("echo",
+                                  [np.arange(3, dtype=np.uint8)] * (4 + k))
+            tags = {_tag(o) for o in outs}
+            assert len(tags) == 1, f"cohort {k} split across replicas {tags}"
+            tags_per_cohort.append(tags.pop())
+        assert len(set(tags_per_cohort)) >= 2, tags_per_cohort
+        assert gw.fleet("echo").stats["cohorts"] == 12
+        cli.close()
+    finally:
+        gw.close()
+
+
+def test_fleet_coalesced_cohorts_never_split():
+    """Auto-coalesced inline calls (the mux's scatter cohort) reach the
+    fleet through the same batch path and stay on one replica per
+    cohort."""
+    gw = _inproc_fleet(3)
+    gw.enable_coalescing(max_wait_us=2000.0)
+    try:
+        clients = [gw.connect(f"c{i}") for i in range(8)]
+        results = [None] * 8
+        start = threading.Barrier(8)
+
+        def caller(i):
+            start.wait()
+            results[i] = clients[i].call("echo",
+                                         np.arange(2, dtype=np.uint8))
+
+        threads = [threading.Thread(target=caller, args=(i,))
+                   for i in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+        assert all(r is not None for r in results)
+        tags = {_tag(r) for r in results}
+        fleet = gw.fleet("echo")
+        # every admission unit (coalesced cohort or single call) stayed
+        # whole: one routing decision = one replica, so the distinct
+        # replica tags observed can never exceed the router's pick count
+        assert len(tags) <= fleet.router.picks
+        assert fleet.stats["routed"] == 8
+        for c in clients:
+            c.close()
+    finally:
+        gw.close()
+
+
+def test_fleet_drain_then_join_rekeys_once():
+    """Drain: the drained replica quiesces and never serves again; join:
+    the service-domain epoch bumps exactly ONCE and traffic continues
+    (clients transparently re-key on their next call)."""
+    gw = _inproc_fleet(2)
+    try:
+        cli = gw.connect("c0")
+        for _ in range(10):
+            cli.call("echo", np.arange(2, dtype=np.uint8))
+        svc = gw._services["echo"]
+        epoch0 = gw.registry.epoch(svc.domain)
+        assert gw.drain_replica("echo", 0, timeout=10.0)
+        assert gw.registry.epoch(svc.domain) == epoch0 + 1
+        snap = {s["rid"]: s for s in gw.fleet_stats()["echo"]}
+        assert snap[0]["state"] == "quiesced"
+        for _ in range(10):
+            assert _tag(cli.call("echo", np.arange(2, dtype=np.uint8))) == 1
+        # join under live traffic: one more epoch bump, then the new
+        # replica joins the routing set
+        epoch1 = gw.registry.epoch(svc.domain)
+        rid = gw.register_replica("echo", _tagged(7),
+                                  transport="mpklink_opt")
+        assert gw.registry.epoch(svc.domain) == epoch1 + 1
+        seen = set()
+        for _ in range(40):
+            seen.add(_tag(cli.call("echo", np.arange(2, dtype=np.uint8))))
+        assert seen == {1, 7}, seen
+        assert rid == 2
+        cli.close()
+    finally:
+        gw.close()
+
+
+def test_fleet_and_plain_service_names_do_not_mix():
+    gw = ServiceGateway("mpklink_opt")
+    try:
+        gw.register_service("plain", _tagged(0))
+        with pytest.raises(ValueError, match="plain"):
+            gw.register_replica("plain", _tagged(1))
+        with pytest.raises(KeyError):
+            gw.fleet("nope")
+    finally:
+        gw.close()
+
+
+def test_fleet_all_replicas_gone_is_typed_unavailable():
+    gw = _inproc_fleet(1)
+    try:
+        cli = gw.connect("c0")
+        cli.call("echo", np.arange(2, dtype=np.uint8))
+        assert gw.drain_replica("echo", 0, timeout=10.0)
+        with pytest.raises(ServiceUnavailable):
+            cli.call("echo", np.arange(2, dtype=np.uint8))
+        cli.close()
+    finally:
+        gw.close()
+
+
+# ---------------------------------------------------------------------------
+# proc-backed fleet: real children, drain zero-loss, kill -9 chaos
+# ---------------------------------------------------------------------------
+
+def _slow_tagged(i, sleep_s=0.004):
+    def handler(req):
+        time.sleep(sleep_s)
+        return np.concatenate([np.asarray(req, np.uint8),
+                               np.array([i], np.uint8)])
+    return handler
+
+
+def _proc_fleet(n, handler_factory=_tagged, service="echo"):
+    gw = ServiceGateway("mpklink_opt")
+    for i in range(n):
+        gw.register_replica(service, handler_factory(i),
+                            transport_kwargs=dict(_PROC_KW))
+    return gw.start()
+
+
+@pytest.mark.proc
+def test_fleet_proc_drain_loses_zero_inflight():
+    """Drain a proc replica while 4 client threads hammer the service:
+    every request completes correctly (the draining replica finishes its
+    admitted work, new work routes to the survivor), and the drained
+    replica ends quiesced with its child gone."""
+    gw = _proc_fleet(2, _slow_tagged)
+    errors, tags = [], []
+    stop = threading.Event()
+    try:
+        def worker(i):
+            cli = gw.connect(f"c{i}")
+            try:
+                for k in range(25):
+                    out = cli.call("echo", np.arange(3, dtype=np.uint8))
+                    assert np.asarray(out)[:3].tolist() == [0, 1, 2]
+                    tags.append(_tag(out))
+            except Exception as e:      # pragma: no cover - fails below
+                errors.append(f"client {i}: {type(e).__name__}: {e}")
+            finally:
+                cli.close()
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(4)]
+        for t in threads:
+            t.start()
+        while len(tags) < 20 and not errors:    # live traffic established
+            time.sleep(0.005)
+        assert gw.drain_replica("echo", 0, timeout=20.0)
+        for t in threads:
+            t.join(timeout=60)
+        assert not errors, errors
+        assert len(tags) == 100
+        snap = {s["rid"]: s for s in gw.fleet_stats()["echo"]}
+        assert snap[0]["state"] == "quiesced"
+        assert snap[0]["inflight"] == 0
+        # everything admitted after the drain decision ran on the survivor
+        assert tags and tags[-1] == 1
+    finally:
+        stop.set()
+        gw.close()
+
+
+@pytest.mark.proc
+def test_fleet_proc_join_under_live_traffic():
+    """Scale out mid-traffic: a replica forked and registered while 3
+    clients are in flight serves real requests after exactly one epoch
+    re-key, with zero client-visible errors."""
+    gw = _proc_fleet(1, _slow_tagged)
+    errors, tags = [], []
+    try:
+        def worker(i):
+            cli = gw.connect(f"c{i}")
+            try:
+                for _ in range(30):
+                    tags.append(_tag(cli.call(
+                        "echo", np.arange(2, dtype=np.uint8))))
+            except Exception as e:      # pragma: no cover - fails below
+                errors.append(f"client {i}: {type(e).__name__}: {e}")
+            finally:
+                cli.close()
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(3)]
+        for t in threads:
+            t.start()
+        while len(tags) < 10 and not errors:
+            time.sleep(0.005)
+        svc = gw._services["echo"]
+        epoch0 = gw.registry.epoch(svc.domain)
+        gw.register_replica("echo", _slow_tagged(1),
+                            transport_kwargs=dict(_PROC_KW))
+        assert gw.registry.epoch(svc.domain) == epoch0 + 1
+        for t in threads:
+            t.join(timeout=120)
+        assert not errors, errors
+        assert len(tags) == 90
+        assert set(tags) == {0, 1}, set(tags)
+    finally:
+        gw.close()
+
+
+@pytest.mark.proc
+def test_fleet_proc_kill9_chaos():
+    """kill -9 one replica child mid-burst: the ONLY client-visible
+    failures are typed ServiceCrashed on items that were truly in flight
+    on the victim's wire; the router never picks the victim again; the
+    survivors keep serving with bounded tail latency."""
+    gw = _proc_fleet(3, _slow_tagged)
+    outcomes = []                       # (kind, value) per call, all threads
+    lock = threading.Lock()
+    killed = threading.Event()
+    try:
+        fleet = gw.fleet("echo")
+        # force the forks now so the victim has a child to kill
+        warm = gw.connect("warm")
+        for _ in range(9):
+            warm.call("echo", np.arange(2, dtype=np.uint8))
+        warm.close()
+
+        def worker(i):
+            cli = gw.connect(f"c{i}")
+            try:
+                for _ in range(30):
+                    t0 = time.perf_counter()
+                    try:
+                        out = cli.call("echo",
+                                       np.arange(2, dtype=np.uint8))
+                        rec = ("ok", time.perf_counter() - t0, _tag(out))
+                    except ServiceCrashed:
+                        rec = ("crashed", time.perf_counter() - t0, None)
+                    with lock:
+                        outcomes.append(rec + (killed.is_set(),))
+            except Exception as e:      # pragma: no cover - fails below
+                with lock:
+                    outcomes.append(("fatal",
+                                     f"{type(e).__name__}: {e}", None,
+                                     killed.is_set()))
+            finally:
+                cli.close()
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(6)]
+        for t in threads:
+            t.start()
+        while len(outcomes) < 30:
+            time.sleep(0.002)
+        victim = fleet._replicas[1]
+        os.kill(victim.session._proc.pid, signal.SIGKILL)
+        killed.set()
+        for t in threads:
+            t.join(timeout=120)
+
+        fatal = [o for o in outcomes if o[0] == "fatal"]
+        assert not fatal, fatal
+        crashed = [o for o in outcomes if o[0] == "crashed"]
+        ok_after = [o for o in outcomes if o[0] == "ok" and o[3]]
+        # typed ServiceCrashed only for the victim's truly in-flight items:
+        # the wire carries at most one request per replica at a time, and
+        # queued-but-unsent work re-routes, so failures stay rare
+        assert len(crashed) <= 6, outcomes
+        snap = {s["rid"]: s for s in gw.fleet_stats()["echo"]}
+        assert snap[1]["state"] == "dead" and snap[1]["crashes"] == 1
+        # post-kill traffic kept flowing with bounded tail latency (a few
+        # pre-kill victim responses may still land after the flag flips —
+        # that's the kill racing the last served request, not a route)
+        assert ok_after, "no post-kill traffic observed"
+        p99 = float(np.percentile([o[1] for o in ok_after], 99))
+        assert p99 < 2.0, f"survivor p99 {p99 * 1e3:.1f}ms"
+        # router never picks the dead replica again: every fresh probe
+        # lands on a survivor
+        probe = gw.connect("probe")
+        probe_tags = {_tag(probe.call("echo", np.arange(2, dtype=np.uint8)))
+                      for _ in range(20)}
+        probe.close()
+        assert probe_tags <= {0, 2} and probe_tags, probe_tags
+        # the supervisor policy reclaims the corpse deterministically
+        assert ("release", 1) in plan_fleet_scaling(
+            gw.fleet_stats()["echo"], 2)
+        assert gw.drain_replica("echo", 1, timeout=10.0)
+    finally:
+        gw.close()
+
+
+@pytest.mark.proc
+def test_fleet_proc_batch_cohort_on_one_child():
+    """Cohort admission holds across process boundaries: a pipelined
+    batch rides ONE replica's ring even with several proc replicas up."""
+    gw = _proc_fleet(2)
+    try:
+        cli = gw.connect("c0")
+        for k in range(6):
+            outs = cli.call_batch("echo",
+                                  [np.arange(4, dtype=np.uint8)] * 6)
+            assert len({_tag(o) for o in outs}) == 1
+        assert gw.fleet("echo").stats["cohorts"] == 6
+        cli.close()
+    finally:
+        gw.close()
+
+
+@pytest.mark.proc
+def test_fleet_proc_wordcount_end_to_end():
+    """The paper's workload over a 3-replica proc fleet: every answer
+    exact, load observed on more than one child."""
+    gw = ServiceGateway("mpklink_opt")
+    for _ in range(3):
+        gw.register_replica("wc", lambda req: wordcount_handler(req),
+                            transport_kwargs=dict(_PROC_KW))
+    gw.start()
+    try:
+        cli = gw.connect("c0")
+        for n in (10, 100, 350):
+            for s in range(4):
+                text = make_text(n, seed=s)
+                assert parse_count(np.asarray(cli.call("wc", text))) == n
+        snap = gw.fleet_stats()["wc"]
+        assert sum(s["served"] for s in snap) == 12
+        assert sum(1 for s in snap if s["served"]) >= 2
+        cli.close()
+    finally:
+        gw.close()

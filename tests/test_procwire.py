@@ -20,6 +20,9 @@ from repro.core.transports import (CapacityError, HandlerCrash,
                                    TransportError, _recv_exact)
 from repro.core.wordcount import make_text, parse_count, wordcount_handler
 
+pytestmark = pytest.mark.proc       # forks real service children; the CI
+                                    # fleet job runs + flake-checks these
+
 NEW_TRANSPORTS = sorted(PROC_TRANSPORTS) + sorted(BASELINE_TRANSPORTS)
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
