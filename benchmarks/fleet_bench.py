@@ -27,14 +27,36 @@ either a correct answer or a typed error (ServiceCrashed for the
 victim's truly in-flight items); anything else (hang, wrong answer,
 untyped exception) is a loss and fails the gate.
 
+Mid-scale-event chaos cell (docs/benchmarks.md): a FleetSupervisor holds
+the fleet at target 4 while replica children are SIGKILLed at 50% AND
+70% of the schedule — the second kill lands while the supervisor's
+release/join step list from the first is still converging, i.e. during a
+live scale event. Gates: zero lost, capacity back to target within the
+heal window, one respawn per kill, and >= MIDSCALE_FLOOR of the
+fault-free throughput sustained.
+
+Hedge pair: the same seeded schedule against a fleet with one
+SLOW_FACTOR-slower replica, hedging off vs on (late-binding re-route
+after HEDGE_DELAY_S parked). Gates: hedged p99 <= unhedged p99 AND the
+executed-request count is unchanged (every completion executed on
+exactly one replica — late binding means one wire send ever).
+
 Acceptance gates (exit 1 on violation; CI uses this):
   * 4-replica Poisson at 256 clients sustains >= 2x the 1-replica rps
     (best paired attempt out of up to GATE_ATTEMPTS, same interleaved
     protocol as ipc_baseline_bench — single-box noise is multiplicative);
   * the kill -9 run completes with zero lost requests;
+  * the mid-scale-event run: zero lost, capacity restored, >= 70% rps;
+  * hedging improves p99 without raising the executed-request count;
   * every answered request is bit-correct.
 
+``--clients 1024`` appends the ROADMAP upper-sweep cells (4 replicas,
+Poisson) at the given client counts to the report under
+``client_sweep`` — recorded, not gated (the committed JSON carries the
+reference-box sweep; CI's default gates exclude it).
+
   PYTHONPATH=src python benchmarks/fleet_bench.py [--quick] [--out f.json]
+      [--clients 256,1024]
 """
 from __future__ import annotations
 
@@ -49,7 +71,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core.gateway import ServiceGateway
+from repro.core.gateway import (REPLICA_ACTIVE, FleetSupervisor,
+                                RetryBudget, ServiceGateway)
 from repro.core.transports import (ResponseTimeout, ServiceCrashed,
                                    ServiceUnavailable)
 
@@ -65,6 +88,17 @@ GATE_CLIENTS = CLIENTS
 GATE_FLOOR = 2.0                    # 4r >= 2x 1r rps, Poisson @ 256c
 GATE_ATTEMPTS = 3                   # best paired 1r/4r ratio of <= 3 tries
 PAYLOAD_BYTES = 64
+
+# mid-scale-event chaos (supervised fleet, repeated kill -9)
+MIDSCALE_KILL_AT = (0.5, 0.7)       # schedule fractions of each SIGKILL
+MIDSCALE_FLOOR = 0.7                # >= 70% of fault-free rps sustained
+SUP_INTERVAL = 0.1                  # supervisor sweep cadence (s)
+HEAL_WINDOW_S = 10.0                # capacity must be back within this
+
+# hedge pair (one slow replica, late-binding hedge)
+SLOW_FACTOR = 6.0                   # slow replica: SERVICE_MS * factor
+HEDGE_DELAY_S = SERVICE_MS / 1e3    # hedge a request parked this long
+HEDGE_OFFERED = 0.6 * OFFERED_RPS   # below capacity: tail, not queueing
 
 _REPLICA_KW = {"ring_slots": 2, "timeout": TIMEOUT}
 
@@ -93,25 +127,45 @@ def bursty_schedule(rate_rps: float, n: int, seed: int,
     return np.repeat(instants, burst)[:n]
 
 
-def _fleet_gateway(replicas: int, clients: int) -> ServiceGateway:
+def _fleet_gateway(replicas: int, clients: int,
+                   slow_rid: Optional[int] = None) -> ServiceGateway:
     gw = ServiceGateway("mpklink_opt", max_keys=2 * clients + 64,
                         transport_kwargs={"timeout": TIMEOUT})
     for i in range(replicas):
-        gw.register_replica("decode", _decode_handler(i),
+        ms = SERVICE_MS * (SLOW_FACTOR if i == slow_rid else 1.0)
+        gw.register_replica("decode", _decode_handler(i, ms),
                             transport_kwargs=dict(_REPLICA_KW))
     return gw.start()
 
 
 def run_cell(replicas: int, clients: int, n: int, profile: str, *,
-             seed: int = 0xF1EE7, kill_rid: Optional[int] = None) -> Dict:
+             seed: int = 0xF1EE7, kill_rid: Optional[int] = None,
+             kill_at: Optional[tuple] = None,
+             supervise: Optional[int] = None,
+             hedge: Optional[dict] = None,
+             slow_rid: Optional[int] = None,
+             offered_rps: float = OFFERED_RPS) -> Dict:
     """One fleet size × one arrival profile → metrics dict. With
     ``kill_rid`` set, that replica's child is SIGKILLed at the schedule
-    midpoint (forced-fork warmup guarantees there is a child to kill)."""
+    midpoint (forced-fork warmup guarantees there is a child to kill).
+    ``kill_at`` SIGKILLs a currently-active forked replica at each given
+    schedule fraction (victims chosen live — under a supervisor the rid
+    set changes); ``supervise`` runs a FleetSupervisor at that target and
+    waits up to HEAL_WINDOW_S post-run for capacity to converge;
+    ``hedge`` enables late-binding hedging with those kwargs;
+    ``slow_rid`` makes that replica SLOW_FACTOR× slower."""
     schedule = (poisson_schedule if profile == "poisson"
-                else bursty_schedule)(OFFERED_RPS, n, seed)
+                else bursty_schedule)(offered_rps, n, seed)
     payload = np.frombuffer(os.urandom(PAYLOAD_BYTES), np.uint8)
-    gw = _fleet_gateway(replicas, clients)
+    gw = _fleet_gateway(replicas, clients, slow_rid)
     fleet = gw.fleet("decode")
+    budget = None
+    if hedge is not None:
+        budget = fleet.enable_hedging(**hedge)
+    sup = None
+    if supervise is not None:
+        sup = FleetSupervisor(gw, "decode", supervise,
+                              interval=SUP_INTERVAL, probe_timeout=2.0)
     lock = threading.Lock()
     ok: List[float] = []            # completion-time latencies (s)
     post_kill_ok: List[float] = []
@@ -153,13 +207,34 @@ def run_cell(replicas: int, clients: int, n: int, profile: str, *,
         finally:
             cli.close()
 
+    killed_pids: List[int] = []
+
+    def _kill_one_active() -> bool:
+        """SIGKILL the lowest-rid ACTIVE replica with a live child (the
+        victim set changes under a supervisor). → True if one died."""
+        for rep in fleet._replicas.values():
+            proc = rep.session._proc if rep.state == REPLICA_ACTIVE \
+                else None
+            if proc is not None and proc.pid not in killed_pids:
+                os.kill(proc.pid, signal.SIGKILL)
+                killed_pids.append(proc.pid)
+                with lock:
+                    if killed_at[0] is None:
+                        killed_at[0] = time.perf_counter()
+                return True
+        return False
+
+    capacity_active = None
     try:
         # serial warmup: every client opens its channel and every replica
         # child forks off the clock (also gives the kill cell its victim)
         warm = gw.connect("warm")
-        for _ in range(3 * replicas):
+        warm_calls = 3 * replicas
+        for _ in range(warm_calls):
             warm.call("decode", payload)
         warm.close()
+        if sup is not None:
+            sup.start()
         clis = list(range(clients))
         gc.collect()
         gc.disable()
@@ -177,13 +252,30 @@ def run_cell(replicas: int, clients: int, n: int, profile: str, *,
                 os.kill(proc.pid, signal.SIGKILL)
                 with lock:
                     killed_at[0] = time.perf_counter()
+            for frac in sorted(kill_at or ()):
+                t_kill = t0 + float(schedule[min(n - 1, int(frac * n))])
+                time.sleep(max(0.0, t_kill - time.perf_counter()))
+                _kill_one_active()
             for t in threads:
                 t.join()
         finally:
             gc.enable()
+        if sup is not None:
+            # capacity must converge back to target within the window
+            heal_deadline = time.perf_counter() + HEAL_WINDOW_S
+            while time.perf_counter() < heal_deadline:
+                capacity_active = sum(
+                    1 for r in fleet.snapshot() if r["state"] == "active")
+                if (capacity_active == supervise
+                        and sup.stats["respawns"] >= len(killed_pids)):
+                    break
+                time.sleep(SUP_INTERVAL)
+            sup.stop()
         snapshot = gw.fleet_stats()["decode"]
         stats = dict(fleet.stats)
     finally:
+        if sup is not None:
+            sup.stop()
         gw.close()
 
     span = max(1e-9, last_done[0] - t0)
@@ -194,7 +286,7 @@ def run_cell(replicas: int, clients: int, n: int, profile: str, *,
         "clients": clients,
         "profile": profile,
         "requests": n,
-        "offered_rps": OFFERED_RPS,
+        "offered_rps": offered_rps,
         "service_ms": SERVICE_MS,
         "seconds": round(span, 4),
         "throughput_rps": round(len(ok) / span, 2),
@@ -208,6 +300,18 @@ def run_cell(replicas: int, clients: int, n: int, profile: str, *,
         "killed_rid": kill_rid,
         "post_kill_p99_ms": (round(float(np.percentile(pk, 99)) * 1e3, 3)
                              if pk is not None else None),
+        "kills": len(killed_pids) if kill_at else
+                 (1 if kill_rid is not None else 0),
+        "slow_rid": slow_rid,
+        "warm_requests": warm_calls,
+        "sum_served": sum(s["served"] for s in snapshot),
+        "capacity_active": capacity_active,
+        "supervisor": dict(sup.stats) if sup is not None else None,
+        "hedge": ({"delay_s": hedge.get("delay"),
+                   "hedges_fired": stats["hedges_fired"],
+                   "hedges_won": stats["hedges_won"],
+                   "budget_spent": budget.spent}
+                  if hedge is not None else None),
         "fleet_stats": stats,
         "snapshot": snapshot,
     }
@@ -229,25 +333,69 @@ def fleet_ratio(cells: List[Dict], clients: int = GATE_CLIENTS):
     return round(four / one, 3)
 
 
+def _midscale_cell(clients: int, n: int) -> Dict:
+    """Supervised 4-replica fleet, kill -9 at 50% AND 70% of the
+    schedule — the second lands during the first's release/join scale
+    event."""
+    return run_cell(4, clients, n, "poisson", kill_at=MIDSCALE_KILL_AT,
+                    supervise=4)
+
+
+def _hedge_pair(clients: int, n: int):
+    """Same seeded schedule, one SLOW_FACTOR-slower replica, hedging off
+    vs on. Offered below capacity so p99 measures the slow-replica tail,
+    not queueing collapse."""
+    common = dict(slow_rid=0, offered_rps=HEDGE_OFFERED)
+    unhedged = run_cell(4, clients, n, "poisson", **common)
+    # a standalone fleet budget never earns (earning is the client retry
+    # layer's side of a shared instance — protocol §9.3), so fund it for
+    # the whole schedule: the gate measures hedging, not budget starvation
+    hedged = run_cell(4, clients, n, "poisson", **common,
+                      hedge={"delay": HEDGE_DELAY_S,
+                             "budget": RetryBudget(ratio=1.0, burst=n,
+                                                   initial=n)})
+    return unhedged, hedged
+
+
+def _executed_once(cell: Dict) -> bool:
+    """Every completion executed on exactly one replica: the fleet-wide
+    served count equals completions + warmup, nothing double-ran."""
+    return (cell["sum_served"]
+            == cell["completed"] + cell["warm_requests"]
+            and cell["completed"] == cell["requests"])
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="gate cells only, fewer clients/requests")
     ap.add_argument("--out", default=None, help="write JSON here too")
+    ap.add_argument("--clients", default=None,
+                    help="comma-separated extra client counts for the "
+                         "upper sweep (recorded, not gated)")
     args = ap.parse_args(argv)
 
     clients = 64 if args.quick else CLIENTS
     n = 320 if args.quick else TOTAL_REQUESTS
     profiles = ["poisson"] if args.quick else ["poisson", "bursty"]
 
-    def show(c):
-        print(f"  {c['replicas']}r {c['profile']:<8} c={c['clients']:<4} "
+    def show(c, label=""):
+        extra = ""
+        if c["killed_rid"] is not None:
+            extra += (f" killed=r{c['killed_rid']} "
+                      f"post-kill p99={c['post_kill_p99_ms']}ms")
+        if c["supervisor"] is not None:
+            extra += (f" kills={c['kills']} "
+                      f"respawns={c['supervisor']['respawns']} "
+                      f"active={c['capacity_active']}")
+        if c["hedge"] is not None:
+            extra += f" hedges={c['hedge']['hedges_fired']}"
+        print(f"  {label or str(c['replicas']) + 'r'} "
+              f"{c['profile']:<8} c={c['clients']:<4} "
               f"{c['throughput_rps']:>8} req/s p50={c['p50_ms']}ms "
               f"p99={c['p99_ms']}ms typed={c['typed_error_count']} "
               f"lost={len(c['lost'])} wrong={c['wrong_answers']}"
-              + (f" killed=r{c['killed_rid']} "
-                 f"post-kill p99={c['post_kill_p99_ms']}ms"
-                 if c["killed_rid"] is not None else ""), flush=True)
+              + extra, flush=True)
 
     cells: List[Dict] = []
     for profile in profiles:
@@ -260,6 +408,46 @@ def main(argv=None) -> int:
     kill_cell = run_cell(4, clients, n, "poisson", kill_rid=1)
     cells.append(kill_cell)
     show(kill_cell)
+
+    # mid-scale-event chaos: supervised fleet, repeated kill -9; best of
+    # up to GATE_ATTEMPTS tries vs the fault-free 4r Poisson cell above
+    faultfree_rps = next(c["throughput_rps"] for c in cells
+                         if c["replicas"] == 4 and c["profile"] == "poisson"
+                         and c.get("killed_rid") is None)
+    mid_cell = None
+    mid_ratio = None
+    for attempt in range(GATE_ATTEMPTS):
+        cell = _midscale_cell(clients, n)
+        r = round(cell["throughput_rps"] / faultfree_rps, 3)
+        show(cell, label="mid")
+        if mid_ratio is None or r > mid_ratio:
+            mid_cell, mid_ratio = cell, r
+        healthy = (not cell["lost"] and cell["capacity_active"] == 4
+                   and cell["supervisor"]["respawns"] >= cell["kills"] >= 2)
+        if healthy and r >= MIDSCALE_FLOOR:
+            mid_cell, mid_ratio = cell, r
+            break
+    cells.append(mid_cell)
+
+    # hedge pair: p99 must improve with the executed count unchanged
+    unhedged = hedged = None
+    for attempt in range(GATE_ATTEMPTS):
+        unhedged, hedged = _hedge_pair(clients, n)
+        show(unhedged, label="unhedged")
+        show(hedged, label="hedged")
+        if (hedged["p99_ms"] <= unhedged["p99_ms"]
+                and hedged["hedge"]["hedges_fired"] > 0
+                and _executed_once(hedged) and _executed_once(unhedged)):
+            break
+    cells.extend([unhedged, hedged])
+
+    # ROADMAP upper sweep: extra client counts, recorded but not gated
+    sweep_cells: List[Dict] = []
+    if args.clients:
+        for c in [int(x) for x in args.clients.split(",") if x.strip()]:
+            cell = run_cell(4, c, max(n, 2 * c), "poisson")
+            sweep_cells.append(cell)
+            show(cell, label="sweep")
 
     # scaling gate: best paired 1r/4r attempt (see module docstring)
     attempts = [fleet_ratio(cells, clients)]
@@ -287,6 +475,26 @@ def main(argv=None) -> int:
         "gate_attempt_ratios": attempts,
         "fleet_4r_vs_1r_rps_ratio_poisson": ratio,
         "fleet_4r_2x_1r_poisson": ratio is not None and ratio >= GATE_FLOOR,
+        # mid-scale-event chaos (supervised, repeated kill -9)
+        "midscale_zero_lost": (not mid_cell["lost"]
+                               and mid_cell["completed"]
+                               + mid_cell["typed_error_count"]
+                               == mid_cell["requests"]),
+        "midscale_capacity_restored": mid_cell["capacity_active"] == 4,
+        "midscale_respawns_cover_kills": (
+            mid_cell["kills"] >= 2
+            and mid_cell["supervisor"]["respawns"] >= mid_cell["kills"]),
+        "midscale_rps_ratio_vs_faultfree": mid_ratio,
+        "midscale_70pct_throughput": (mid_ratio is not None
+                                      and mid_ratio >= MIDSCALE_FLOOR),
+        # hedging (late binding: one wire send ever)
+        "hedged_p99_ms": hedged["p99_ms"],
+        "unhedged_p99_ms": unhedged["p99_ms"],
+        "hedges_fired": hedged["hedge"]["hedges_fired"],
+        "hedged_p99_le_unhedged": (hedged["p99_ms"] <= unhedged["p99_ms"]
+                                   and hedged["hedge"]["hedges_fired"] > 0),
+        "hedge_executed_count_unchanged": (_executed_once(hedged)
+                                           and _executed_once(unhedged)),
     }
     report = {
         "meta": {"clients": clients, "requests": n, "profiles": profiles,
@@ -294,8 +502,18 @@ def main(argv=None) -> int:
                  "offered_rps": OFFERED_RPS, "service_ms": SERVICE_MS,
                  "burst": BURST, "timeout_s": TIMEOUT,
                  "gate_floor": GATE_FLOOR, "gate_attempts": GATE_ATTEMPTS,
+                 "midscale_kill_at": list(MIDSCALE_KILL_AT),
+                 "midscale_floor": MIDSCALE_FLOOR,
+                 "heal_window_s": HEAL_WINDOW_S,
+                 "slow_factor": SLOW_FACTOR,
+                 "hedge_delay_s": HEDGE_DELAY_S,
+                 "hedge_offered_rps": HEDGE_OFFERED,
+                 "sweep_clients": ([int(x) for x in
+                                    args.clients.split(",") if x.strip()]
+                                   if args.clients else []),
                  "quick": args.quick},
         "results": cells,
+        "client_sweep": sweep_cells,
         "gates": gates,
     }
     blob = json.dumps(report, indent=2)
@@ -306,7 +524,13 @@ def main(argv=None) -> int:
             f.write(blob)
     ok = (gates["all_answers_correct"] and gates["no_lost_requests"]
           and gates["kill_cell_zero_lost"] and gates["fleet_4r_2x_1r_poisson"]
-          and gates["kill_victim_marked_dead"])
+          and gates["kill_victim_marked_dead"]
+          and gates["midscale_zero_lost"]
+          and gates["midscale_capacity_restored"]
+          and gates["midscale_respawns_cover_kills"]
+          and gates["midscale_70pct_throughput"]
+          and gates["hedged_p99_le_unhedged"]
+          and gates["hedge_executed_count_unchanged"])
     if not ok:
         print("FLEET GATES FAILED", flush=True)
     return 0 if ok else 1

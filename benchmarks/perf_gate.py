@@ -54,7 +54,12 @@ FLEET_RATIO = "fleet_4r_vs_1r_rps_ratio_poisson"
 # committed fleet booleans that must still hold (see fleet_bench.py)
 FLEET_GATES = ("all_answers_correct", "no_lost_requests",
                "kill_cell_zero_lost", "kill_victim_marked_dead",
-               "fleet_4r_2x_1r_poisson")
+               "fleet_4r_2x_1r_poisson",
+               # self-healing: kill -9 x2 during a live scale event under a
+               # FleetSupervisor, plus the late-binding hedge pair
+               "midscale_zero_lost", "midscale_capacity_restored",
+               "midscale_respawns_cover_kills", "midscale_70pct_throughput",
+               "hedged_p99_le_unhedged", "hedge_executed_count_unchanged")
 FLEET_FRESH_CLIENTS = 64            # quick fresh re-measure of the ratio
 FLEET_FRESH_REQUESTS = 320
 
@@ -263,6 +268,31 @@ def main() -> int:
             failures.append(
                 f"{FLEET_RATIO} regressed >{args.tolerance:.0%}: "
                 f"fresh best {best} < floor {floor:.2f} (committed {base})")
+
+    # fresh supervised mid-scale-event chaos cell: kill -9 during a live
+    # scale event must still lose nothing and heal back to target. The
+    # throughput-ratio gate stays on the committed full-size run (a
+    # FLEET_FRESH_REQUESTS-sized schedule is too short for a stable
+    # ratio); this re-assert checks the correctness/healing booleans.
+    ok = False
+    for attempt in range(GATE_ATTEMPTS):
+        cell = fleet_bench._midscale_cell(FLEET_FRESH_CLIENTS,
+                                          FLEET_FRESH_REQUESTS)
+        sup = cell["supervisor"] or {}
+        healed = (cell["capacity_active"] == 4
+                  and sup.get("respawns", 0) >= cell["kills"] >= 1)
+        print(f"fresh midscale cell {attempt}: lost={len(cell['lost'])} "
+              f"wrong={cell['wrong_answers']} kills={cell['kills']} "
+              f"active={cell['capacity_active']} "
+              f"respawns={sup.get('respawns')}", flush=True)
+        if not cell["lost"] and not cell["wrong_answers"] and healed:
+            ok = True
+            break
+    print(f"fresh midscale chaos cell: {'PASS' if ok else 'FAIL'}")
+    if not ok:
+        failures.append(
+            "fresh supervised midscale cell failed: lost requests, wrong "
+            "answers, or the fleet did not heal back to target")
 
     if failures:
         print("PERF GATE FAILED:")

@@ -243,7 +243,8 @@ def all_rules() -> List[Rule]:
     from repro.analysis.rules_concurrency import (BlockingUnderLockRule,
                                                   CrossThreadCounterRule,
                                                   LockOrderCycleRule)
-    from repro.analysis.rules_protocol import (SwallowedErrorRule,
+    from repro.analysis.rules_protocol import (FreshConstantWaitRule,
+                                               SwallowedErrorRule,
                                                TimeTimeDeadlineRule,
                                                TimeoutNotForwardedRule,
                                                UnverifiedPayloadRule,
@@ -259,6 +260,7 @@ def all_rules() -> List[Rule]:
         ViewEscapeRule(),
         TimeTimeDeadlineRule(),
         TimeoutNotForwardedRule(),
+        FreshConstantWaitRule(),
         SwallowedErrorRule(),
         SpecConstantSyncRule(),
         SpecTaxonomySyncRule(),

@@ -280,6 +280,69 @@ class TimeoutNotForwardedRule(Rule):
         return out
 
 
+class FreshConstantWaitRule(Rule):
+    """MPK106: a deadline-accepting function computes a blocking wait
+    from a fresh constant.
+
+    docs/protocol.md §9: once a caller's budget is propagated, every hop
+    computes its waits against the REMAINING budget — a handler or
+    dispatch path that accepts a deadline/timeout parameter but passes a
+    pure numeric literal as a blocking call's timeout re-introduces the
+    fixed slack the deadline word was built to remove (the old
+    ``+ 30.0`` coalescer bound). A wait expression that references any
+    deadline-ish name (``min(remaining, bound)``, ``deadline - now``) is
+    clean; a constant-only expression inside a function that was handed a
+    budget is the bug."""
+
+    id = "MPK106"
+    severity = "warning"
+    hint = ("derive the wait from the propagated deadline/remaining "
+            "budget (e.g. min(remaining, bound)), not a fresh constant")
+
+    def check_module(self, ctx: ModuleContext) -> List[Finding]:
+        out: List[Finding] = []
+        for fn in _functions(ctx.tree):
+            params = [a.arg for a in (list(fn.args.args)
+                                      + list(fn.args.kwonlyargs))
+                      if _DEADLINE_ID.search(a.arg)]
+            if not params:
+                continue            # no budget handed in — out of scope
+            for node in ast.walk(fn):
+                if node is not fn and isinstance(
+                        node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    continue
+                if not (isinstance(node, ast.Call)
+                        and _func_name(node) in _BLOCKING_FWD):
+                    continue
+                wait = next((kw.value for kw in node.keywords
+                             if kw.arg == "timeout"), None)
+                if wait is None and _func_name(node) in ("wait", "acquire") \
+                        and len(node.args) == 1:
+                    wait = node.args[0]
+                if wait is None or not self._constant_only(wait):
+                    continue
+                out.append(self.finding(
+                    ctx, node.lineno,
+                    f"{fn.name}() accepts '{params[0]}' but "
+                    f"{expr_text(node.func)} waits on the fresh constant "
+                    f"{expr_text(wait)} instead of the remaining budget"))
+        return out
+
+    def _constant_only(self, node: ast.AST) -> bool:
+        """True when the expression is built purely from numeric literals
+        (constants, arithmetic over constants) — any Name/Attribute
+        reference means the budget (or some state) participates."""
+        if isinstance(node, ast.Constant):
+            return isinstance(node.value, (int, float)) \
+                and not isinstance(node.value, bool)
+        if isinstance(node, ast.BinOp):
+            return self._constant_only(node.left) \
+                and self._constant_only(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self._constant_only(node.operand)
+        return False
+
+
 class SwallowedErrorRule(Rule):
     """MPK105: a ``pass``-only broad exception handler.
 

@@ -35,6 +35,11 @@ _CONSTANT_FORMS = {
     "REPLICA_QUIESCED": lambda v: [f"REPLICA_QUIESCED = {v}"],
     "REPLICA_DEAD": lambda v: [f"REPLICA_DEAD = {v}"],
     "FLEET_CHOICES": lambda v: [f"FLEET_CHOICES = {v}"],
+    # self-healing / overload control plane (§9)
+    "DEADLINE_LANE": lambda v: [f"DEADLINE_LANE = {v}"],
+    "DEADLINE_US_MAX": lambda v: [f"0x{v:08X}"],
+    "HEDGE_RESERVOIR": lambda v: [f"HEDGE_RESERVOIR = {v}"],
+    "REKEY_LIMIT": lambda v: [f"REKEY_LIMIT = {v}"],
 }
 
 _ERROR_ROOT = "TransportError"

@@ -4,7 +4,7 @@ A frame is a uint32 matrix of 128 lanes (the TPU-native layout the guard
 kernel consumes):
 
   row 0   — header: [MAGIC, seed, seq, nbytes, dtype_code, ndim,
-                     shape[0..3], 0, mac^meta_mix, 0...]
+                     shape[0..3], deadline_us, mac^meta_mix, 0...]
   rows 1+ — payload: raw bytes viewed as little-endian uint32, zero-padded
             to a whole number of 128-lane rows.
 
@@ -16,10 +16,14 @@ check is where MPK access control and the paper's per-message signature
 collapse into one fused operation on-device.
 
 Header integrity: the stored word is ``payload_mac ⊕ _meta_mix(header)``, a
-Horner mix of the ten metadata words — so flipping any header bit (dtype,
-shape, nbytes, ...) fails verification exactly like a payload flip, and the
-reserved lanes (10, 12..127) must be zero. The payload MAC itself is
-unchanged and stays bit-identical to the guard kernel / fast_mac.
+Horner mix of the eleven metadata words (magic..shape[3] plus the lane-10
+deadline word) — so flipping any header bit (dtype, shape, nbytes,
+deadline, ...) fails verification exactly like a payload flip, and the
+reserved lanes (12..127) must be zero. Lane 10 (:data:`DEADLINE_LANE`)
+carries the sender's remaining deadline budget in microseconds (0 = no
+deadline) so a propagated deadline rides every envelope MAC-covered; see
+docs/protocol.md §9. The payload MAC itself is unchanged and stays
+bit-identical to the guard kernel / fast_mac.
 
 Zero-copy path (the arena data plane): :func:`seal_into` writes the header
 and payload of a frame directly into a caller-provided buffer — typically a
@@ -65,6 +69,12 @@ import numpy as np
 
 MAGIC = 0x4D504B4C            # "MPKL"
 LANES = 128
+
+# Header lane carrying the sender's remaining deadline budget in
+# microseconds (0 = no deadline). MAC-covered via the meta mix, so a
+# tampered deadline fails verification like any other header flip.
+DEADLINE_LANE = 10
+DEADLINE_US_MAX = 0xFFFFFFFF
 
 _DTYPES = {0: np.float32, 1: np.int32, 2: np.uint32, 3: np.uint8,
            4: np.dtype("<f8"), 5: np.int64, 6: np.uint16}
@@ -364,15 +374,16 @@ def warm_mac_caches(seed: int = 0) -> None:
     _power_table32(1)
     mac_init_np(seed)
     _mac_row1_const(seed & 0xFFFFFFFF)
-    _meta_mix_words((0,) * 10, 0)
+    _meta_mix_words((0,) * 11, 0)
 
 
 _MAC_PRIME: Optional[int] = None    # lazy: kernels.ref drags in jax
 
 
 def _meta_mix_words(words, seed: int) -> int:
-    """:func:`_meta_mix` over ten already-materialized python ints — the
-    hot-path form for callers that have the header words in hand."""
+    """:func:`_meta_mix` over already-materialized python ints (the eleven
+    MAC-covered header words) — the hot-path form for callers that have the
+    header words in hand."""
     global _MAC_PRIME
     prime = _MAC_PRIME
     if prime is None:
@@ -385,10 +396,11 @@ def _meta_mix_words(words, seed: int) -> int:
 
 
 def _meta_mix(header: np.ndarray, seed: int) -> int:
-    """Horner mix of the ten metadata words (magic..shape[3]) — folded into
-    the stored MAC word so header tampering fails exactly like payload
-    tampering. Pure uint arithmetic, deterministic everywhere."""
-    return _meta_mix_words(np.asarray(header[:10]).tolist(), seed)
+    """Horner mix of the eleven metadata words (magic..shape[3] plus the
+    lane-10 deadline word) — folded into the stored MAC word so header
+    tampering fails exactly like payload tampering. Pure uint arithmetic,
+    deterministic everywhere."""
+    return _meta_mix_words(np.asarray(header[:11]).tolist(), seed)
 
 
 # ---------------------------------------------------------------------------
@@ -434,25 +446,28 @@ def _meta_of(arr: np.ndarray) -> dict:
 
 
 def _write_header(hrow: np.ndarray, meta: dict, seed: int, seq: int,
-                  mac: int) -> None:
+                  mac: int, deadline_us: int = 0) -> None:
     """Fill one 128-lane header row in place (reserved lanes zeroed — the
-    row may be a recycled arena slot holding stale words)."""
+    row may be a recycled arena slot holding stale words). ``deadline_us``
+    lands in lane 10 and is folded into the meta mix, so the propagated
+    deadline is MAC-covered like every other header word."""
     shape = list(meta["shape"])[:4] + [0] * (4 - min(4, len(meta["shape"])))
     if len(meta["shape"]) > 4:
         raise FrameError("rank > 4 payloads unsupported by frame header")
     words = [MAGIC, seed & 0xFFFFFFFF, seq & 0xFFFFFFFF,
              meta["nbytes"] & 0xFFFFFFFF, meta["dtype_code"],
-             len(meta["shape"]), *[s & 0xFFFFFFFF for s in shape]]
+             len(meta["shape"]), *[s & 0xFFFFFFFF for s in shape],
+             int(deadline_us) & 0xFFFFFFFF]
     hrow[12:] = 0
-    hrow[:12] = words + [0, (mac ^ _meta_mix_words(words, seed)) & 0xFFFFFFFF]
+    hrow[:12] = words + [(mac ^ _meta_mix_words(words, seed)) & 0xFFFFFFFF]
 
 
 def _assemble(payload: np.ndarray, meta: dict, seed: int, seq: int,
-              mac: int) -> np.ndarray:
+              mac: int, deadline_us: int = 0) -> np.ndarray:
     """Header row from (meta, seed, seq, precomputed payload MAC) + payload,
     materialized into ONE preallocated frame buffer."""
     frame = np.empty((payload.shape[0] + 1, LANES), np.uint32)
-    _write_header(frame[0], meta, seed, seq, mac)
+    _write_header(frame[0], meta, seed, seq, mac, deadline_us)
     frame[1:] = payload
     STATS.bump(bytes_copied=payload.nbytes)
     return frame
@@ -477,7 +492,8 @@ def _check_buf(buf: np.ndarray, rows: int) -> None:
 
 
 def seal_into(buf: np.ndarray, arr: np.ndarray, *, seed: int, seq: int,
-              mac_impl=None, _inplace: bool = True) -> int:
+              mac_impl=None, deadline_us: int = 0,
+              _inplace: bool = True) -> int:
     """Seal ``arr`` as a frame directly into ``buf`` (no staging buffers).
 
     ``buf`` is any C-contiguous writable ``(>= frame_rows(nbytes), 128)``
@@ -498,7 +514,7 @@ def seal_into(buf: np.ndarray, arr: np.ndarray, *, seed: int, seq: int,
     pbytes[: meta["nbytes"]] = arr.view(np.uint8).reshape(-1)
     pbytes[meta["nbytes"]:] = 0
     mac = (mac_impl or _mac_np)(payload, seed)
-    _write_header(buf[0], meta, seed, seq, mac)
+    _write_header(buf[0], meta, seed, seq, mac, deadline_us)
     STATS.bump(frames_sealed=1, bytes_copied=meta["nbytes"],
                # build_frame seals a FRESH buffer: sealed, not in-place
                frames_sealed_inplace=int(_inplace))
@@ -506,8 +522,8 @@ def seal_into(buf: np.ndarray, arr: np.ndarray, *, seed: int, seq: int,
 
 
 def seal_into_batch(bufs: Sequence[np.ndarray], arrays: Sequence[np.ndarray],
-                    *, seed: int, seqs: Sequence[int],
-                    mac_impl=None) -> List[int]:
+                    *, seed: int, seqs: Sequence[int], mac_impl=None,
+                    deadlines_us: Optional[Sequence[int]] = None) -> List[int]:
     """Seal N frames in place with ONE fused vectorized MAC pass.
 
     The arena twin of :func:`seal_batch`: payload bytes land directly in
@@ -529,14 +545,16 @@ def seal_into_batch(bufs: Sequence[np.ndarray], arrays: Sequence[np.ndarray],
         macs = mac_batch(payloads, seed)
     else:
         macs = [mac_impl(p, seed) for p in payloads]
-    for buf, meta, seq, mac in zip(bufs, metas, seqs, macs):
-        _write_header(buf[0], meta, seed, seq, mac)
+    if deadlines_us is None:
+        deadlines_us = [0] * len(metas)
+    for buf, meta, seq, mac, dl in zip(bufs, metas, seqs, macs, deadlines_us):
+        _write_header(buf[0], meta, seed, seq, mac, dl)
     STATS.bump(frames_sealed=len(arrays), frames_sealed_inplace=len(arrays))
     return rows_list
 
 
 def seal_prefilled(buf: np.ndarray, nbytes: int, *, seed: int, seq: int,
-                   mac_impl=None) -> int:
+                   mac_impl=None, deadline_us: int = 0) -> int:
     """Seal a frame whose payload bytes the caller ALREADY wrote into
     ``buf``'s payload area (``buf[1:]`` viewed as bytes) — the fully
     zero-copy producer path: an upper layer assembles its message directly
@@ -552,7 +570,7 @@ def seal_prefilled(buf: np.ndarray, nbytes: int, *, seed: int, seq: int,
     mac = (mac_impl or _mac_np)(payload, seed)
     meta = {"dtype_code": _DTYPE_CODES[np.dtype(np.uint8)],
             "nbytes": int(nbytes), "shape": (int(nbytes),)}
-    _write_header(buf[0], meta, seed, seq, mac)
+    _write_header(buf[0], meta, seed, seq, mac, deadline_us)
     STATS.bump(frames_sealed=1, frames_sealed_inplace=1)
     return rows
 
@@ -755,7 +773,7 @@ _PENDING_BASELINE_REFS = _measure_pending_baseline()
 # ---------------------------------------------------------------------------
 
 def _build_frame_legacy(arr: np.ndarray, *, seed: int, seq: int,
-                        mac_impl=None) -> np.ndarray:
+                        mac_impl=None, deadline_us: int = 0) -> np.ndarray:
     """The PR 3 copy pattern (pad concat + header concat), kept only for
     A/B benchmarking (``framing.ZERO_COPY = False``) — byte-identical
     output, 3–4× the copies."""
@@ -769,25 +787,27 @@ def _build_frame_legacy(arr: np.ndarray, *, seed: int, seq: int,
     payload = raw.view("<u4").reshape(-1, LANES)
     mac = (mac_impl or _mac_np)(payload, seed)
     header = np.zeros(LANES, np.uint32)
-    _write_header(header, meta, seed, seq, mac)
+    _write_header(header, meta, seed, seq, mac, deadline_us)
     STATS.bump(concat_calls=1, frames_sealed=1,
                bytes_copied=payload.nbytes + header.nbytes)
     return np.concatenate([header[None], payload.view(np.uint32)], axis=0)
 
 
-def build_frame(arr: np.ndarray, *, seed: int, seq: int, mac_impl=None) -> np.ndarray:
+def build_frame(arr: np.ndarray, *, seed: int, seq: int, mac_impl=None,
+                deadline_us: int = 0) -> np.ndarray:
     """array → full frame (header row + payload rows) uint32.
 
     One buffer, one payload write (``seal_into`` into a fresh allocation).
     With ``framing.ZERO_COPY = False`` the PR 3 concat pattern is used
     instead — identical bytes, for benchmark baselines."""
     if not ZERO_COPY:
-        return _build_frame_legacy(arr, seed=seed, seq=seq, mac_impl=mac_impl)
+        return _build_frame_legacy(arr, seed=seed, seq=seq, mac_impl=mac_impl,
+                                   deadline_us=deadline_us)
     arr = np.ascontiguousarray(np.asarray(arr))
     meta = _meta_of(arr)
     frame = np.empty((frame_rows(meta["nbytes"]), LANES), np.uint32)
     seal_into(frame, arr, seed=seed, seq=seq, mac_impl=mac_impl,
-              _inplace=False)
+              deadline_us=deadline_us, _inplace=False)
     return frame
 
 
@@ -805,7 +825,8 @@ def _precheck(frame: np.ndarray, seed: int, expect_seq,
         raise FrameError("seed mismatch — wrong domain key, session or epoch")
     if expect_seq is not None and header[2] != (expect_seq & 0xFFFFFFFF):
         raise FrameError(f"sequence mismatch (got {header[2]}, want {expect_seq})")
-    if header[10] != 0 or any(header[12:]):
+    # lane 10 is the (MAC-covered) deadline word, checked by _check_meta
+    if any(header[12:]):
         raise FrameError("nonzero reserved header lanes — header tampered")
 
 
@@ -817,7 +838,7 @@ def _check_meta(frame: np.ndarray, seed: int, mac: int,
     MAC). Shared by every guard so they cannot diverge. Returns the
     validated meta dict."""
     header = frame[0].tolist() if _hdr is None else _hdr
-    if (mac ^ _meta_mix_words(header[:10], seed)) & 0xFFFFFFFF != header[11]:
+    if (mac ^ _meta_mix_words(header[:11], seed)) & 0xFFFFFFFF != header[11]:
         raise FrameError("MAC mismatch — payload or header tampered/truncated")
     ndim = header[5]
     nbytes = header[3]
@@ -858,6 +879,29 @@ def parse_frame(frame: np.ndarray, *, seed: int, expect_seq=None, mac_impl=None)
 def frame_rows(nbytes: int) -> int:
     """Total frame rows (header + payload) for an nbytes message."""
     return 1 + (nbytes + LANES * 4 - 1) // (LANES * 4)
+
+
+def frame_deadline_us(frame: np.ndarray) -> int:
+    """The lane-10 deadline word of a frame (0 = no deadline). Only
+    meaningful AFTER the frame passed :func:`parse_frame` /
+    :func:`verify_view` / :func:`verify_batch` — the word is MAC-covered,
+    so a verified frame's deadline cannot have been tampered."""
+    return int(np.asarray(frame)[0][DEADLINE_LANE])
+
+
+def deadline_to_us(remaining_s: Optional[float]) -> int:
+    """Encode a remaining budget in seconds as the lane-10 wire word.
+
+    ``None``/non-positive-infinite budgets encode as 0 (no deadline). An
+    already-expired budget encodes as 1µs — the smallest nonzero word — so
+    the receiver sheds it typed instead of silently dropping the deadline.
+    Saturates at :data:`DEADLINE_US_MAX` (~71.6 minutes)."""
+    if remaining_s is None:
+        return 0
+    us = int(remaining_s * 1e6)
+    if us <= 0:
+        return 1
+    return min(us, DEADLINE_US_MAX)
 
 
 # ---------------------------------------------------------------------------

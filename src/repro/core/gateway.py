@@ -87,7 +87,7 @@ import random
 import queue
 import threading
 import time
-from collections import OrderedDict
+from collections import OrderedDict, deque
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Set, Tuple, Union
 
@@ -97,7 +97,8 @@ from repro.core import framing
 from repro.core.ca import CertificateAuthority, enroll
 from repro.core.domains import (AccessViolation, DomainKey, KeyRegistry,
                                 ProtectionDomain, RW, READ, WRITE, mac_seed)
-from repro.core.transports import (HandlerCrash, MPKLinkTransport,
+from repro.core.transports import (DeadlineExpired, HandlerCrash,
+                                   MPKLinkTransport, Overloaded,
                                    ResponseTimeout, ServiceCrashed,
                                    ServiceUnavailable, Transport,
                                    TransportError, _pack_error, _raise_remote,
@@ -126,6 +127,109 @@ _REPLICA_STATE_NAMES = {REPLICA_ACTIVE: "active",
                         REPLICA_QUIESCED: "quiesced",
                         REPLICA_DEAD: "dead"}
 FLEET_CHOICES = 2                   # power-of-two-choices candidate count
+HEDGE_RESERVOIR = 128               # dispatch-latency samples behind the
+                                    # adaptive hedge-delay quantile
+REKEY_LIMIT = 8                     # consecutive stale-epoch re-keys one
+                                    # call survives: each corresponds to a
+                                    # distinct membership/revocation epoch
+                                    # bump racing the call (a supervisor
+                                    # heal is two — release + join); a
+                                    # banned client fails inside reopen()
+                                    # itself, so this cannot spin
+
+
+# ---------------------------------------------------------------------------
+# propagated deadlines (normative: docs/protocol.md §9)
+#
+# A client call's remaining budget rides the envelope in the MAC-covered
+# lane-10 deadline word (framing.DEADLINE_LANE). The gateway's execution
+# cores convert it to an absolute time.monotonic() deadline at arrival,
+# shed already-expired work BEFORE execution with a typed DeadlineExpired,
+# and expose the deadline to in-process hops (fleet dispatch, EngineService)
+# through a thread-local — so every wait downstream derives from the
+# propagated budget instead of a fresh constant.
+# ---------------------------------------------------------------------------
+
+_BUDGET = threading.local()
+
+
+def current_deadline() -> Optional[float]:
+    """Absolute ``time.monotonic()`` deadline of the request the calling
+    thread is currently executing under the gateway (None = no deadline).
+    Set by the execution cores around every handler invocation from the
+    envelope's lane-10 budget word."""
+    return getattr(_BUDGET, "deadline", None)
+
+
+def remaining_budget() -> Optional[float]:
+    """Seconds left on the current request's propagated deadline (None =
+    no deadline; may be <= 0 when already expired). In-process handlers
+    (EngineService, fleet dispatch) clamp their waits with this."""
+    d = current_deadline()
+    return None if d is None else d - time.monotonic()
+
+
+def _push_deadline(deadline: Optional[float]) -> Optional[float]:
+    prev = getattr(_BUDGET, "deadline", None)
+    _BUDGET.deadline = deadline
+    return prev
+
+
+def _pop_deadline(prev: Optional[float]) -> None:
+    _BUDGET.deadline = prev
+
+
+def _frame_deadline(frame: np.ndarray) -> Optional[float]:
+    """Absolute deadline from a VERIFIED frame's lane-10 budget word
+    (relative-budget propagation: the receiver restarts the remaining
+    budget at arrival, the cross-process-safe convention since monotonic
+    clocks don't compare across processes)."""
+    us = framing.frame_deadline_us(frame)
+    return None if us == 0 else time.monotonic() + us / 1e6
+
+
+class RetryBudget:
+    """Token-bucket cap on EXTRA attempts (liveness retries + hedges) so
+    retry storms cannot amplify an outage (docs/protocol.md §9).
+
+    Each primary call earns ``ratio`` tokens (capped at ``burst``); every
+    extra attempt spends one whole token via :meth:`take`. With the
+    default ratio 0.1 a client in steady state retries at most ~10% extra
+    load, with bursts of up to ``burst`` back-to-back retries when the
+    bucket is full. Thread-safe: one budget may be shared by a client's
+    retries and a fleet's hedges — total extra attempts stay bounded by
+    the one bucket."""
+
+    def __init__(self, ratio: float = 0.1, burst: int = 3,
+                 initial: Optional[float] = None):
+        if ratio < 0 or burst < 1:
+            raise ValueError("retry budget needs ratio >= 0, burst >= 1")
+        self.ratio = float(ratio)
+        self.burst = float(burst)
+        self._tokens = self.burst if initial is None else float(initial)
+        self._lock = threading.Lock()
+        self.spent = 0                  # extra attempts granted
+        self.denied = 0                 # extra attempts refused
+
+    def note_primary(self) -> None:
+        """A primary attempt happened: earn ``ratio`` tokens."""
+        with self._lock:
+            self._tokens = min(self.burst, self._tokens + self.ratio)
+
+    def take(self) -> bool:
+        """Spend one token for an extra attempt. → False (and the caller
+        must NOT retry/hedge) when the bucket is dry."""
+        with self._lock:
+            if self._tokens >= 1.0:
+                self._tokens -= 1.0
+                self.spent += 1
+                return True
+            self.denied += 1
+            return False
+
+    def tokens(self) -> float:
+        with self._lock:
+            return self._tokens
 
 
 def _route(a: int, b: int, c: int) -> np.ndarray:
@@ -141,14 +245,15 @@ def _scatter_route(cid: int, n: int) -> np.ndarray:
 
 
 def _seal_envelope(route4, arr: np.ndarray, *, seed: int, seq: int,
-                   mac_impl) -> np.ndarray:
+                   mac_impl, deadline_us: int = 0) -> np.ndarray:
     """``[4 route words] + sealed frame`` assembled in ONE preallocated
     buffer — the frame is sealed in place behind the route words, so an
     envelope costs exactly one payload write (no build/concat chain).
     Honors ``framing.ZERO_COPY`` for A/B benchmarking."""
     if not framing.ZERO_COPY:
         frame = framing.build_frame(arr, seed=seed, seq=seq,
-                                    mac_impl=mac_impl)
+                                    mac_impl=mac_impl,
+                                    deadline_us=deadline_us)
         return np.concatenate([np.array(route4, "<u4").view(np.uint8),
                                frame.reshape(-1).view(np.uint8)])
     arr = np.ascontiguousarray(np.asarray(arr))
@@ -157,7 +262,7 @@ def _seal_envelope(route4, arr: np.ndarray, *, seed: int, seq: int,
     u = env.view("<u4")
     u[:4] = route4
     framing.seal_into(u[4:].reshape(rows, framing.LANES), arr, seed=seed,
-                      seq=seq, mac_impl=mac_impl)
+                      seq=seq, mac_impl=mac_impl, deadline_us=deadline_us)
     return env
 
 
@@ -347,6 +452,85 @@ class ServiceHealth:
                     "sheds": self.sheds, "restarts": self.restarts}
 
 
+class _Brownout:
+    """Hysteretic overload controller for one service (protocol.md §9).
+
+    Tracks an inflight gauge (admission → completion) and an EWMA of
+    service time. Admission with the gauge at/above ``high_water`` — or,
+    when configured, EWMA service time at/above ``high_water_ms`` —
+    ENGAGES brownout: new admissions are shed with a typed
+    :class:`Overloaded` carrying a ``retry_after`` backlog-drain estimate,
+    instead of queueing into timeout collapse. Recovery is hysteretic:
+    once engaged, sheds continue until the gauge drains to ``low_water``
+    (and the EWMA, when gated on it, falls below ``high_water_ms``), so
+    the controller cannot flap at the boundary."""
+
+    def __init__(self, high_water: int = 64, low_water: Optional[int] = None,
+                 high_water_ms: Optional[float] = None,
+                 alpha: float = 0.2):
+        if low_water is None:
+            low_water = max(1, high_water // 2)
+        if not (0 < low_water <= high_water):
+            raise ValueError("brownout needs 0 < low_water <= high_water")
+        self.high_water = int(high_water)
+        self.low_water = int(low_water)
+        self.high_water_ms = high_water_ms
+        self.alpha = float(alpha)
+        self.inflight = 0
+        self.ewma_ms = 0.0
+        self.engaged = False
+        self.sheds = 0                  # admissions turned away
+        self.engagements = 0            # times the high-water mark tripped
+        self._lock = threading.Lock()
+
+    def _over_high(self) -> bool:
+        return (self.inflight >= self.high_water
+                or (self.high_water_ms is not None
+                    and self.ewma_ms >= self.high_water_ms))
+
+    def _under_low(self) -> bool:
+        return (self.inflight <= self.low_water
+                and (self.high_water_ms is None
+                     or self.ewma_ms < self.high_water_ms))
+
+    def admit(self, name: str, weight: int = 1) -> None:
+        """Gate an admission; on success the gauge is charged ``weight``
+        and the caller MUST pair it with :meth:`done`."""
+        with self._lock:
+            if self.engaged:
+                if self._under_low():
+                    self.engaged = False
+            elif self._over_high():
+                self.engaged = True
+                self.engagements += 1
+            if self.engaged:
+                self.sheds += weight
+                retry_after = self.inflight * self.ewma_ms / 1e3
+                raise Overloaded(
+                    f"service {name!r} overloaded ({self.inflight} inflight, "
+                    f"ewma {self.ewma_ms:.1f}ms; high water "
+                    f"{self.high_water}); browning out new admissions",
+                    retry_after=retry_after)
+            self.inflight += weight
+
+    def done(self, weight: int, elapsed_ms: float, ok: bool = True) -> None:
+        with self._lock:
+            self.inflight = max(0, self.inflight - weight)
+            if ok:
+                per = elapsed_ms / max(1, weight)
+                a = self.alpha
+                self.ewma_ms = per if self.ewma_ms == 0.0 else \
+                    (1.0 - a) * self.ewma_ms + a * per
+
+    def snapshot(self) -> Dict[str, object]:
+        with self._lock:
+            return {"engaged": self.engaged, "inflight": self.inflight,
+                    "ewma_ms": round(self.ewma_ms, 3), "sheds": self.sheds,
+                    "engagements": self.engagements,
+                    "high_water": self.high_water,
+                    "low_water": self.low_water}
+
+
 @dataclass
 class _Service:
     sid: int
@@ -356,6 +540,9 @@ class _Service:
     server_key: DomainKey
     allow: Optional[Set[str]]       # client-name allow-list; None = any cert
     factory: Optional[Callable[[], Handler]] = None   # restart hook
+    # overload brownout controller (None = admission never browns out);
+    # installed via ServiceGateway.enable_brownout
+    brownout: Optional[_Brownout] = None
     # optional native batch entry point: takes a list of payloads, returns a
     # same-length list of responses (EngineService.handler_batch feeds the
     # continuous-batching decode loop through this)
@@ -425,7 +612,8 @@ class ServiceGateway:
         self._fleets: Dict[str, "ServiceFleet"] = {}
         self.stats = {"requests": 0, "responses": 0, "macs_verified": 0,
                       "rejected": 0, "deduped": 0, "sheds": 0,
-                      "restarts": 0, "crashes": 0, "scatter_envelopes": 0}
+                      "restarts": 0, "crashes": 0, "scatter_envelopes": 0,
+                      "expired": 0, "overloaded": 0}
 
         if isinstance(transport, str):
             from repro.core import ALL_TRANSPORTS
@@ -604,6 +792,27 @@ class ServiceGateway:
                                   max_wait_us=max_wait_us, name=name)
         return self._mux
 
+    def enable_brownout(self, service: str, *, high_water: int = 64,
+                        low_water: Optional[int] = None,
+                        high_water_ms: Optional[float] = None) -> _Brownout:
+        """Install the hysteretic overload controller on ``service``
+        (docs/protocol.md §9): admissions past ``high_water`` concurrent
+        requests (or past ``high_water_ms`` EWMA service time, when given)
+        are shed with a typed :class:`Overloaded` carrying a
+        ``retry_after`` hint, instead of queueing into timeout collapse;
+        sheds continue until the backlog drains to ``low_water`` (default
+        ``high_water // 2`` — the hysteresis band). Returns the
+        controller (``snapshot()`` for observability)."""
+        with self._glock:
+            svc = self._services[service]
+            if svc.brownout is not None:
+                raise RuntimeError(
+                    f"brownout already enabled for service {service!r}")
+            bo = _Brownout(high_water=high_water, low_water=low_water,
+                           high_water_ms=high_water_ms)
+            svc.brownout = bo
+            return bo
+
     def close(self):
         if self._mux is not None:
             self._mux.close()
@@ -623,9 +832,11 @@ class ServiceGateway:
 
     # -- client lifecycle ---------------------------------------------------
     def connect(self, client_name: str, *, retries: int = 0,
-                backoff: float = 0.005) -> "GatewayClient":
+                backoff: float = 0.005,
+                retry_budget: Optional["RetryBudget"] = None
+                ) -> "GatewayClient":
         return GatewayClient(self, client_name, retries=retries,
-                             backoff=backoff)
+                             backoff=backoff, retry_budget=retry_budget)
 
     def _open_channel(self, client: "GatewayClient", service: str) -> Channel:
         """Control plane: CA-checked issue of a client key on the service's
@@ -737,13 +948,37 @@ class ServiceGateway:
             while len(svc.done) > _DONE_CLIENTS:
                 svc.done.popitem(last=False)
 
-    def _run_guarded(self, svc: _Service, payload: np.ndarray) -> np.ndarray:
+    def _run_guarded(self, svc: _Service, payload: np.ndarray,
+                     deadline: Optional[float] = None) -> np.ndarray:
         """Run the handler behind the circuit breaker with failure
         accounting — the one execution core shared by the single, batch
-        and scatter paths, so breaker semantics cannot diverge."""
+        and scatter paths, so breaker semantics cannot diverge.
+
+        Deadline shed comes FIRST and outside the try block: expired work
+        is dropped before execution (docs/protocol.md §9) and a shed is
+        neither a handler failure (no breaker charge) nor a brownout
+        admission. While the handler runs, the propagated deadline is
+        published thread-locally (``current_deadline``) so downstream hops
+        (fleet dispatch, EngineService waits) compute against it."""
+        if deadline is not None and time.monotonic() >= deadline:
+            self._bump("expired")
+            raise DeadlineExpired(
+                f"service {svc.name!r}: propagated deadline expired "
+                "before execution")
         svc.health.admit(svc.name)      # circuit breaker: shed, don't hang
+        bo = svc.brownout
+        if bo is not None:
+            try:
+                bo.admit(svc.name)      # raises typed Overloaded when shed
+            except Overloaded:
+                self._bump("overloaded")
+                raise
+        prev = _push_deadline(deadline)
+        t0 = time.perf_counter()
+        ok = False
         try:
             resp = _as_frameable(np.asarray(svc.handler(payload)))
+            ok = True
         except HandlerCrash:
             # kills the transport service thread (by design) — record it,
             # then let it propagate past the per-request except nets
@@ -752,11 +987,16 @@ class ServiceGateway:
         except Exception:
             self._service_failure(svc)
             raise
+        finally:
+            _pop_deadline(prev)
+            if bo is not None:
+                bo.done(1, (time.perf_counter() - t0) * 1e3, ok=ok)
         svc.health.success()
         return resp
 
     def _invoke(self, svc: _Service, chan: Channel, cid: int, token: int,
-                fseq: int, payload: np.ndarray) -> np.ndarray:
+                fseq: int, payload: np.ndarray,
+                deadline: Optional[float] = None) -> np.ndarray:
         """Run the service handler behind the circuit breaker + dedup cache.
         Returns the response payload; updates ``chan.server_seq``."""
         cached = self._dedup_get(svc, cid, token)
@@ -773,12 +1013,13 @@ class ServiceGateway:
         if fseq != chan.server_seq:
             raise framing.FrameError(
                 f"sequence mismatch (got {fseq}, want {chan.server_seq})")
-        resp = self._run_guarded(svc, payload)
+        resp = self._run_guarded(svc, payload, deadline)
         self._dedup_put(svc, cid, token, resp)
         chan.server_seq = (fseq + 1) & 0xFFFFFFFF
         return resp
 
-    def _invoke_batch(self, svc: _Service, chan: Channel, parsed) -> list:
+    def _invoke_batch(self, svc: _Service, chan: Channel, parsed,
+                      deadlines=None) -> list:
         """Execute a verified batch. ``parsed`` holds payload arrays with
         FrameError objects in failed positions (verify_batch strict=False);
         those pass through untouched. Every consumed item advances
@@ -786,19 +1027,50 @@ class ServiceGateway:
         the client's batch-wide sequence advance (unlike the single path,
         where a failed exchange advances neither side). Health/circuit
         accounting: per item on the loop path, once per batch on the
-        native ``batch_handler`` path."""
+        native ``batch_handler`` path. ``deadlines`` (absolute monotonic,
+        positional, ``None`` = unbounded) shed expired items pre-execution
+        with a per-slot ``DeadlineExpired``; the batch handler runs under
+        the cohort's TIGHTEST live deadline (thread-local), matching the
+        coalescer's budget model."""
+        if deadlines is None:
+            deadlines = [None] * len(parsed)
         results = list(parsed)
-        good = [(i, p) for i, p in enumerate(parsed)
-                if not isinstance(p, framing.FrameError)]
+        now = time.monotonic()
+        good = []
+        for i, p in enumerate(parsed):
+            if isinstance(p, framing.FrameError):
+                continue
+            if deadlines[i] is not None and now >= deadlines[i]:
+                self._bump("expired")
+                results[i] = DeadlineExpired(
+                    f"service {svc.name!r}: propagated deadline expired "
+                    "before execution")
+                continue
+            good.append((i, p))
         if svc.batch_handler is not None and good:
+            bo = svc.brownout
+            live = [d for i, _ in good
+                    if (d := deadlines[i]) is not None]
+            prev = _push_deadline(min(live) if live else None)
+            t0 = time.perf_counter()
+            bok = False
+            admitted = False
             try:
                 svc.health.admit(svc.name)
+                if bo is not None:
+                    try:
+                        bo.admit(svc.name, weight=len(good))
+                    except Overloaded:
+                        self._bump("overloaded")
+                        raise
+                    admitted = True
                 outs = svc.batch_handler([p for _, p in good])
                 if len(outs) != len(good):
                     raise TransportError(
                         f"batch handler returned {len(outs)} responses "
                         f"for {len(good)} requests")
                 svc.health.success()
+                bok = True
                 # a batch handler may return a typed exception INSTANCE in
                 # an item's slot (a fleet replica's per-item remote error)
                 # — it becomes that item's typed error, like the loop path
@@ -816,10 +1088,15 @@ class ServiceGateway:
                 self._service_failure(svc)
                 for i, _ in good:
                     results[i] = e
+            finally:
+                _pop_deadline(prev)
+                if bo is not None and admitted:
+                    bo.done(len(good), (time.perf_counter() - t0) * 1e3,
+                            ok=bok)
         else:
             for i, p in good:
                 try:
-                    results[i] = self._run_guarded(svc, p)
+                    results[i] = self._run_guarded(svc, p, deadlines[i])
                 except ServiceUnavailable as e:
                     self._bump("sheds")
                     results[i] = e
@@ -867,7 +1144,12 @@ class ServiceGateway:
                 self._bump_n("requests", len(frames))
                 self._bump_n("macs_verified", n_ok)
                 self._bump_n("rejected", len(frames) - n_ok)
-                results = self._invoke_batch(svc, chan, parsed)
+                # deadline words are MAC-covered: only trust them on
+                # frames that verified (FrameError slots get None)
+                deadlines = [None if isinstance(p, framing.FrameError)
+                             else _frame_deadline(f)
+                             for f, p in zip(frames, parsed)]
+                results = self._invoke_batch(svc, chan, parsed, deadlines)
                 try:
                     self.registry.check(svc.server_key, WRITE)
                     self.registry.check(chan.client_key, READ)
@@ -944,7 +1226,7 @@ class ServiceGateway:
             base = chan.server_seq
             saw_fresh = False
             parseable = 0
-            runnable: list = []         # (idx, token, fseq, payload)
+            runnable: list = []         # (idx, token, fseq, payload, dl)
             try:
                 for k, (idx, token, frame) in enumerate(members):
                     try:
@@ -973,17 +1255,31 @@ class ServiceGateway:
                             raise framing.FrameError(
                                 f"sequence mismatch (got {fseq}, want "
                                 f"{(base + k) & 0xFFFFFFFF})")
-                        runnable.append((idx, token, fseq, payload))
+                        runnable.append((idx, token, fseq, payload,
+                                         _frame_deadline(frame)))
                     except ServiceUnavailable as e:
                         self._bump("sheds")
                         out.append((idx, e))
                     except Exception as e:
                         out.append((idx, e))
                 if svc.batch_handler is not None and runnable:
-                    self._scatter_run_batch(svc, chan, cid, runnable,
-                                            ok, out)
+                    # shed expired items BEFORE the cohort admission, so
+                    # one stale straggler cannot ride the native batch
+                    now = time.monotonic()
+                    live = []
+                    for item in runnable:
+                        if item[4] is not None and now >= item[4]:
+                            self._bump("expired")
+                            out.append((item[0], DeadlineExpired(
+                                f"service {svc.name!r}: propagated "
+                                "deadline expired before execution")))
+                        else:
+                            live.append(item)
+                    if live:
+                        self._scatter_run_batch(svc, chan, cid, live,
+                                                ok, out)
                 else:
-                    for idx, token, fseq, payload in runnable:
+                    for idx, token, fseq, payload, dl in runnable:
                         try:
                             # re-consult the window: an EARLIER item of this
                             # very envelope may have executed this token
@@ -993,7 +1289,7 @@ class ServiceGateway:
                             if resp is not None:
                                 self._bump("deduped")
                             else:
-                                resp = self._run_guarded(svc, payload)
+                                resp = self._run_guarded(svc, payload, dl)
                                 self._dedup_put(svc, cid, token, resp)
                             self.registry.check(svc.server_key, WRITE)
                             self.registry.check(chan.client_key, READ)
@@ -1046,26 +1342,45 @@ class ServiceGateway:
             slot_of.append(len(unique))
             unique.append(item)
         outs = None
+        bo = svc.brownout
+        live = [d for item in unique if (d := item[4]) is not None]
+        prev = _push_deadline(min(live) if live else None)
+        t0 = time.perf_counter()
+        bok = False
+        admitted = False
         try:
             svc.health.admit(svc.name)
-            outs = svc.batch_handler([p for _, _, _, p in unique])
+            if bo is not None:
+                try:
+                    bo.admit(svc.name, weight=len(unique))
+                except Overloaded:
+                    self._bump("overloaded")
+                    raise
+                admitted = True
+            outs = svc.batch_handler([p for _, _, _, p, _ in unique])
             if len(outs) != len(unique):
                 raise TransportError(
                     f"batch handler returned {len(outs)} responses "
                     f"for {len(unique)} requests")
             svc.health.success()
+            bok = True
         except HandlerCrash:
             self._service_failure(svc, crashed=True)
             raise
         except ServiceUnavailable as e:     # circuit shed, not a failure
             self._bump("sheds")
-            out.extend((idx, e) for idx, _, _, _ in runnable)
+            out.extend((idx, e) for idx, *_ in runnable)
             return
         except Exception as e:
             self._service_failure(svc)
-            out.extend((idx, e) for idx, _, _, _ in runnable)
+            out.extend((idx, e) for idx, *_ in runnable)
             return
-        for (idx, token, fseq, _), k in zip(runnable, slot_of):
+        finally:
+            _pop_deadline(prev)
+            if bo is not None and admitted:
+                bo.done(len(unique), (time.perf_counter() - t0) * 1e3,
+                        ok=bok)
+        for (idx, token, fseq, _, _), k in zip(runnable, slot_of):
             if isinstance(outs[k], BaseException):
                 # per-item typed error from the batch handler (a fleet
                 # replica's remote failure): this item's fate, not dedup'd
@@ -1206,7 +1521,8 @@ class ServiceGateway:
                     mac_impl=self._mac)
                 fseq = int(frame[0][2])
                 self._bump("requests", "macs_verified")
-                resp = self._invoke(svc, chan, cid, token, fseq, payload)
+                resp = self._invoke(svc, chan, cid, token, fseq, payload,
+                                    _frame_deadline(frame))
                 self.registry.check(svc.server_key, WRITE)
                 self.registry.check(chan.client_key, READ)
                 # response frame sealed in place behind the route words —
@@ -1238,11 +1554,16 @@ class GatewayClient:
     instead of running twice."""
 
     def __init__(self, gw: ServiceGateway, name: str, *, retries: int = 0,
-                 backoff: float = 0.005):
+                 backoff: float = 0.005,
+                 retry_budget: Optional["RetryBudget"] = None):
         self.gw = gw
         self.name = name
         self.retries = retries
         self.backoff = backoff
+        # optional token bucket capping TOTAL extra attempts (liveness
+        # retries here + fleet hedges downstream); share ONE instance
+        # across clients to bound a whole tenant (docs/protocol.md §9)
+        self.retry_budget = retry_budget
         self._kp, _ = enroll(gw.ca, name)
         self.cid = next(gw._cid_counter)
         # the transport session is created lazily on first wire use: a
@@ -1303,58 +1624,102 @@ class GatewayClient:
                 pass
         self._session_obj = self.gw.transport.connect(f"gw:{self.name}")
 
+    def _spend_retry(self) -> bool:
+        """Charge the retry budget for one EXTRA attempt (True = granted).
+        No budget installed = unlimited (the pre-budget behavior)."""
+        return self.retry_budget is None or self.retry_budget.take()
+
+    def _retry_sleep(self, attempts: int,
+                     deadline: Optional[float]) -> None:
+        delay = self.backoff * attempts
+        if deadline is not None:
+            delay = min(delay, max(0.0, deadline - time.monotonic()))
+        if delay > 0:
+            time.sleep(delay)
+
     def call(self, service: str, payload: np.ndarray, *,
              token: Optional[int] = None,
              timeout: Optional[float] = None) -> np.ndarray:
         """One inline request/response. With coalescing enabled on the
         gateway (:meth:`ServiceGateway.enable_coalescing`), a plain call
-        (``retries == 0``, no pinned token or deadline) is transparently
-        folded into the mux's next cohort envelope — AFTER this client's
-        own CA/ACL channel check, so per-client authorization is enforced
-        exactly as on the direct path. ``token`` pins the idempotency
-        token (a manual replay of an earlier call) and ``timeout``
-        tightens this call's transport deadline; either takes the direct
-        path."""
+        (``retries == 0``, no pinned token) is transparently folded into
+        the mux's next cohort envelope — AFTER this client's own CA/ACL
+        channel check, so per-client authorization is enforced exactly as
+        on the direct path. ``token`` pins the idempotency token (a manual
+        replay of an earlier call) and takes the direct path.
+
+        ``timeout`` is the call's TOTAL budget: it spans every retry, is
+        sealed into the envelope's MAC-covered deadline word, and rides
+        hop-by-hop to the replica (docs/protocol.md §9) — an expired call
+        sheds with a typed :class:`DeadlineExpired` wherever it happens to
+        be, instead of burning a fixed per-hop transport timeout."""
         payload = np.asarray(payload)
+        deadline = None if timeout is None \
+            else time.monotonic() + timeout
+        if self.retry_budget is not None:
+            self.retry_budget.note_primary()
         mux = self.gw._mux
-        if (mux is not None and token is None and timeout is None
+        if (mux is not None and token is None
                 and self.retries == 0
                 and not self._direct and mux.accepts(service)):
             self.open(service)          # the CALLER's own CA/ACL gate
-            return mux.call(service, payload)
+            return mux.call(service, payload, deadline=deadline)
         if token is None:
             token = next(self._tokens) & 0xFFFFFFFF \
                 or (next(self._tokens) & 0xFFFFFFFF)
         attempts = 0
-        rekeyed = False
+        rekeys = 0
         while True:
+            if deadline is not None and time.monotonic() >= deadline:
+                raise DeadlineExpired(
+                    f"call to {service!r}: deadline expired "
+                    f"after {attempts} retr{'y' if attempts == 1 else 'ies'}")
             chan = self.open(service)
             try:
                 return self._call_once(chan, payload, token,
-                                       timeout=timeout)
+                                       deadline=deadline)
             except AccessViolation as e:
-                # someone's revocation (or a self-healing restart) bumped
-                # the service-domain epoch; a still-certified client just
-                # re-keys through the CA and retries once per attempt (a
-                # banned client fails the certificate check in reopen())
-                if "stale key epoch" not in str(e) or rekeyed:
+                # someone's revocation (or a supervisor's release/join)
+                # bumped the service-domain epoch; a still-certified
+                # client just re-keys through the CA and retries — up to
+                # REKEY_LIMIT times, because a supervisor healing
+                # repeated kills bumps the epoch once per membership
+                # change and a call can race several (a banned client
+                # fails the certificate check in reopen()). No budget
+                # charge: a re-key is recovery bookkeeping, not an extra
+                # execution attempt
+                if "stale key epoch" not in str(e) or rekeys >= REKEY_LIMIT:
                     raise
-                rekeyed = True
+                rekeys += 1
                 self.reopen(service)
-            except ServiceUnavailable:
+            except DeadlineExpired:
+                raise               # retrying expired work is pointless
+            except Overloaded as e:
                 attempts += 1
-                if attempts > self.retries:
+                if attempts > self.retries or not self._spend_retry():
                     raise
                 self.retried += 1
-                time.sleep(self.backoff * attempts)
+                # honor the server's brownout hint, clamped to the budget
+                delay = max(self.backoff * attempts, e.retry_after)
+                if deadline is not None:
+                    delay = min(delay,
+                                max(0.0, deadline - time.monotonic()))
+                if delay > 0:
+                    time.sleep(delay)
+            except ServiceUnavailable:
+                attempts += 1
+                if attempts > self.retries or not self._spend_retry():
+                    raise
+                self.retried += 1
+                self._retry_sleep(attempts, deadline)
             except (ServiceCrashed, ResponseTimeout):
                 attempts += 1
-                if attempts > self.retries:
+                if attempts > self.retries or not self._spend_retry():
                     raise
                 self.retried += 1
                 rekeyed = False
                 self.heal(service)      # fresh session + channel, same token
-                time.sleep(self.backoff * attempts)
+                self._retry_sleep(attempts, deadline)
 
     def call_batch(self, service: str, payloads,
                    return_exceptions: bool = False) -> list:
@@ -1400,7 +1765,7 @@ class GatewayClient:
                     for _ in range(n)]
 
     def call_many(self, items, return_exceptions: bool = False,
-                  tokens=None) -> list:
+                  tokens=None, deadlines=None) -> list:
         """Scatter call: N (service, payload) pairs in ONE envelope / ONE
         transport round trip, executed across the gateway's worker shards —
         with ``workers=N`` the items' handlers run concurrently per
@@ -1416,12 +1781,31 @@ class GatewayClient:
         original executed are then answered from the gateway's dedup
         window, never re-executed (omitting ``tokens`` mints fresh ones,
         so a bare re-issue re-executes). A stale-epoch rejection surfaces
-        per item; recovery is ``reopen(service)`` + reissue."""
+        per item; recovery is ``reopen(service)`` + reissue.
+
+        ``deadlines`` (positional, absolute ``time.monotonic()`` values or
+        ``None``) seals each item's remaining budget into its frame's
+        MAC-covered deadline word; the WIRE round trip is bounded by the
+        cohort's tightest member so one short-deadline item cannot be held
+        hostage by the transport default (docs/protocol.md §9)."""
         items = [(s, np.ascontiguousarray(np.asarray(p))) for s, p in items]
         if not items:
             return []
         if tokens is not None and len(tokens) != len(items):
             raise ValueError(f"{len(tokens)} tokens for {len(items)} items")
+        if deadlines is not None and len(deadlines) != len(items):
+            raise ValueError(
+                f"{len(deadlines)} deadlines for {len(items)} items")
+        timeout: Optional[float] = None
+        dl_us = [0] * len(items)
+        if deadlines is not None:
+            now = time.monotonic()
+            rems = [None if d is None else d - now for d in deadlines]
+            live = [r for r in rems if r is not None]
+            if live:
+                timeout = max(min(live), 0.001)
+            dl_us = [0 if r is None else framing.deadline_to_us(r)
+                     for r in rems]
         for service, _ in items:            # channel setup (CA-checked)
             self.open(service)
         if tokens is None:
@@ -1445,40 +1829,46 @@ class GatewayClient:
                     _ROUTE_BYTES + r * framing.LANES * 4 for r in rows_list)
 
                 def fill(dst, items=items, seqs=seqs, tokens=tokens,
-                         rows_list=rows_list, chans=chans):
+                         rows_list=rows_list, chans=chans, dl_us=dl_us):
                     u = dst.view("<u4")
                     u[:4] = [GW_SCAT_MAGIC, self.cid, len(items), 0]
                     ofs = 4
                     groups: Dict[str, list] = {}
-                    for (service, p), seq, token, rows in zip(
-                            items, seqs, tokens, rows_list):
+                    for (service, p), seq, token, rows, du in zip(
+                            items, seqs, tokens, rows_list, dl_us):
                         chan = chans[service]
                         u[ofs:ofs + 4] = [GW_MAGIC, chan.sid, token, 0]
                         buf = u[ofs + 4: ofs + 4 + rows * framing.LANES] \
                             .reshape(rows, framing.LANES)
-                        groups.setdefault(service, []).append((buf, p, seq))
+                        groups.setdefault(service, []).append(
+                            (buf, p, seq, du))
                         ofs += 4 + rows * framing.LANES
                     for service, members in groups.items():
                         framing.seal_into_batch(
-                            [b for b, _, _ in members],
-                            [p for _, p, _ in members],
+                            [b for b, _, _, _ in members],
+                            [p for _, p, _, _ in members],
                             seed=chans[service].seed,
-                            seqs=[q for _, _, q in members],
-                            mac_impl=self.gw._batch_mac)
+                            seqs=[q for _, _, q, _ in members],
+                            mac_impl=self.gw._batch_mac,
+                            deadlines_us=[d for _, _, _, d in members])
 
                 # mpklint: disable=MPK002 reason=client lock IS the per-session serializer (spec: sessions are serial per client)
-                raw = self._session.request_into(total, fill)
+                raw = self._session.request_into(total, fill,
+                                                 timeout=timeout)
             else:
                 parts = [_scatter_route(self.cid, len(items))]
-                for (service, p), seq, token in zip(items, seqs, tokens):
+                for (service, p), seq, token, du in zip(items, seqs,
+                                                        tokens, dl_us):
                     chan = chans[service]
                     parts.append(np.array([GW_MAGIC, chan.sid, token, 0],
                                           "<u4").view(np.uint8))
                     frame = framing.build_frame(p, seed=chan.seed, seq=seq,
-                                                mac_impl=self.gw._mac)
+                                                mac_impl=self.gw._mac,
+                                                deadline_us=du)
                     parts.append(frame.reshape(-1).view(np.uint8))
                 # mpklint: disable=MPK002 reason=client lock IS the per-session serializer (spec: sessions are serial per client)
-                raw = self._session.request(np.concatenate(parts))
+                raw = self._session.request(np.concatenate(parts),
+                                            timeout=timeout)
             resp = np.ascontiguousarray(np.asarray(raw)) \
                 .view(np.uint8).reshape(-1)
             if resp.nbytes < _ROUTE_BYTES:
@@ -1620,7 +2010,23 @@ class GatewayClient:
 
     def _call_once(self, chan: Channel, payload: np.ndarray,
                    token: int = 0,
-                   timeout: Optional[float] = None) -> np.ndarray:
+                   deadline: Optional[float] = None) -> np.ndarray:
+        # the remaining budget (not a fresh constant) bounds this attempt's
+        # wire timeout and is sealed into the envelope's deadline word —
+        # the hop-by-hop propagation contract (docs/protocol.md §9). The
+        # wire wait stays clamped to the transport's per-attempt bound so
+        # a lost response costs ONE attempt's wait, not the whole budget
+        # (the remaining retries still get their share)
+        timeout: Optional[float] = None
+        deadline_us = 0
+        if deadline is not None:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise DeadlineExpired(
+                    f"call on channel {chan.service!r}: deadline expired "
+                    "before send")
+            deadline_us = framing.deadline_to_us(remaining)
+            timeout = min(remaining, self.gw.transport.timeout)
         with self._lock:
             if framing.ZERO_COPY:
                 # fully zero-copy send: route words + the sealed gateway
@@ -1631,12 +2037,14 @@ class GatewayClient:
                 frows = framing.frame_rows(p.nbytes)
                 env_nbytes = _ROUTE_BYTES + frows * framing.LANES * 4
 
-                def fill(dst, p=p, frows=frows, chan=chan, token=token):
+                def fill(dst, p=p, frows=frows, chan=chan, token=token,
+                         deadline_us=deadline_us):
                     u = dst.view("<u4")
                     u[:4] = [GW_MAGIC, chan.sid, self.cid, token]
                     framing.seal_into(
                         u[4:].reshape(frows, framing.LANES), p,
-                        seed=chan.seed, seq=chan.seq, mac_impl=self.gw._mac)
+                        seed=chan.seed, seq=chan.seq, mac_impl=self.gw._mac,
+                        deadline_us=deadline_us)
 
                 # mpklint: disable=MPK002 reason=client lock IS the per-session serializer (spec: sessions are serial per client)
                 raw = self._session.request_into(env_nbytes, fill,
@@ -1644,7 +2052,8 @@ class GatewayClient:
             else:
                 env = _seal_envelope([GW_MAGIC, chan.sid, self.cid, token],
                                      payload, seed=chan.seed, seq=chan.seq,
-                                     mac_impl=self.gw._mac)
+                                     mac_impl=self.gw._mac,
+                                     deadline_us=deadline_us)
                 # mpklint: disable=MPK002 reason=client lock IS the per-session serializer (spec: sessions are serial per client)
                 raw = self._session.request(env, timeout=timeout)
             resp = np.ascontiguousarray(np.asarray(raw)) \
@@ -1681,12 +2090,15 @@ class GatewayClient:
 class _PendingCall:
     """One caller's parked inline call while it rides a cohort."""
 
-    __slots__ = ("service", "payload", "token", "event", "result", "error")
+    __slots__ = ("service", "payload", "token", "deadline", "event",
+                 "result", "error")
 
-    def __init__(self, service: str, payload: np.ndarray, token: int):
+    def __init__(self, service: str, payload: np.ndarray, token: int,
+                 deadline: Optional[float] = None):
         self.service = service
         self.payload = payload
         self.token = token
+        self.deadline = deadline        # absolute monotonic, None = no budget
         self.event = threading.Event()
         self.result: Optional[np.ndarray] = None
         self.error: Optional[BaseException] = None
@@ -1788,14 +2200,22 @@ class CallCoalescer:
             self._refused.add(service)
             return False
 
-    def call(self, service: str, payload: np.ndarray) -> np.ndarray:
+    def call(self, service: str, payload: np.ndarray,
+             deadline: Optional[float] = None) -> np.ndarray:
         """Fold one inline call into the next cohort; block for ITS result
-        (or raise its typed error). Callers' wait is bounded past the
-        transport deadline so a wedged cohort can never strand them."""
+        (or raise its typed error). The caller's wait bound DERIVES from
+        its propagated deadline when it has one — remaining budget, plus
+        one wire attempt for the cohort that may already be in flight,
+        plus the batching window and fixed slack — so a 1 s-deadline call
+        fails typed in about a second. Without a deadline the bound is
+        two transport attempts (the cohort's wire trip + the liveness
+        fallback's shared replay budget) plus window and slack: every
+        term is a budget some layer actually spends, no bare constants
+        (docs/protocol.md §9)."""
         if self._stop.is_set():
             raise TransportError("coalescer is closed")
         entry = _PendingCall(service, np.asarray(payload),
-                             self._carrier.mint_tokens(1)[0])
+                             self._carrier.mint_tokens(1)[0], deadline)
         with self._cond:
             # re-check under the lock: close() sets _stop under it too, so
             # an entry can never slip in after close() drained the queue
@@ -1810,7 +2230,12 @@ class CallCoalescer:
             self._last_arrival = now
             self._pending.append(entry)
             self._cond.notify_all()
-        bound = self.gw.transport.timeout * 2 + self.max_wait_us / 1e6 + 30.0
+        window_slack = self.max_wait_us / 1e6 + 1.0
+        if deadline is not None:
+            bound = max(0.0, deadline - time.monotonic()) \
+                + self.gw.transport.timeout + window_slack
+        else:
+            bound = self.gw.transport.timeout * 2 + window_slack
         if not entry.event.wait(bound):
             raise ResponseTimeout(
                 f"coalesced call to {service!r} stalled past the transport "
@@ -1867,11 +2292,13 @@ class CallCoalescer:
         self.stats["max_cohort"] = max(self.stats["max_cohort"], len(batch))
         items = [(e.service, e.payload) for e in batch]
         tokens = [e.token for e in batch]
+        deadlines = [e.deadline for e in batch]
         rekeyed = False
         while True:
             try:
                 results = [self._own(r) for r in self._carrier.call_many(
-                    items, return_exceptions=True, tokens=tokens)]
+                    items, return_exceptions=True, tokens=tokens,
+                    deadlines=deadlines)]
                 break
             except AccessViolation as e:
                 # pre-dispatch stale epoch (carrier channel open): re-key
@@ -1915,7 +2342,10 @@ class CallCoalescer:
         item gets the remaining budget split over the items left, so a
         wedged service costs its items their (shrinking) share instead of
         head-of-line blocking every coalesced caller in the process for
-        items x retries x timeout."""
+        items x retries x timeout. An item that carries its own propagated
+        deadline is bounded by the TIGHTER of the two — and one already
+        expired is failed typed immediately, before any cohort-mate's
+        replay can sit on it."""
         self.stats["fallback_items"] += len(batch)
         deadline = time.monotonic() + self.gw.transport.timeout
         healed: set = set()                 # services reopened this session
@@ -1923,6 +2353,14 @@ class CallCoalescer:
         for k, entry in enumerate(batch):
             per_item = max(0.05,
                            (deadline - time.monotonic()) / (len(batch) - k))
+            if entry.deadline is not None:
+                remaining = entry.deadline - time.monotonic()
+                if remaining <= 0:
+                    out.append(DeadlineExpired(
+                        f"coalesced call to {entry.service!r}: deadline "
+                        "expired during the cohort's liveness fallback"))
+                    continue
+                per_item = min(per_item, remaining)
             try:
                 s = self._carrier._session_obj
                 if s is None or s._crashed or s._closed or s._poisoned:
@@ -1931,9 +2369,12 @@ class CallCoalescer:
                 if entry.service not in healed:
                     self._carrier.reopen(entry.service)     # seqs reset
                     healed.add(entry.service)
+                # budget per_item PER ATTEMPT: a replay that is itself
+                # dropped must still afford the carrier's bounded retries
+                # (wire waits stay clamped per attempt in _call_once)
                 out.append(self._own(self._carrier.call(
                     entry.service, entry.payload, token=entry.token,
-                    timeout=per_item)))
+                    timeout=per_item * (self._carrier.retries + 1))))
             except Exception as e:          # noqa: PERF203 — per-item fate
                 out.append(e)
         return out
@@ -2135,8 +2576,18 @@ class ServiceFleet:
         self._lock = threading.Lock()
         self._replicas: "OrderedDict[int, Replica]" = OrderedDict()
         self._rid_counter = itertools.count(0)
+        # last add()'s (handler, transport, kwargs): what a supervisor
+        # respawns a dead replica FROM (docs/protocol.md §9)
+        self._spawn: Optional[tuple] = None
+        # hedging (enable_hedging): OFF by default
+        self._hedge = False
+        self._hedge_delay: Optional[float] = None
+        self._hedge_quantile = 0.95
+        self.hedge_budget: Optional[RetryBudget] = None
+        self._lat_ms: "deque" = deque(maxlen=HEDGE_RESERVOIR)
         self.stats = {"routed": 0, "cohorts": 0, "rerouted": 0,
-                      "crashes": 0, "drains": 0, "joins": 0}
+                      "crashes": 0, "drains": 0, "joins": 0,
+                      "expired": 0, "hedges_fired": 0, "hedges_won": 0}
 
     # -- membership ---------------------------------------------------------
     def add(self, handler: Handler, *,
@@ -2147,6 +2598,7 @@ class ServiceFleet:
         if isinstance(transport, str):
             from repro.core import ALL_TRANSPORTS
             transport = ALL_TRANSPORTS[transport]
+        self._spawn = (handler, transport, dict(transport_kwargs or {}))
         tr = transport(handler, **dict(transport_kwargs or {}))
         try:
             with self._lock:
@@ -2180,7 +2632,11 @@ class ServiceFleet:
         if not rep.quiesced.wait(timeout):
             return False
         with self._lock:
-            if rep.state == REPLICA_DRAINING:
+            if rep.state in (REPLICA_DRAINING, REPLICA_DEAD):
+                # a released corpse leaves the planners' view too: QUIESCED
+                # replicas are neither active nor reclaimable, so a
+                # supervisor sweep releases (and re-keys for) each death
+                # exactly once
                 rep.state = REPLICA_QUIESCED
         self._release(rep)
         return True
@@ -2210,13 +2666,61 @@ class ServiceFleet:
         for rep in reps:
             self._release(rep)
 
+    # -- hedging ------------------------------------------------------------
+    def enable_hedging(self, *, delay: Optional[float] = None,
+                       quantile: float = 0.95,
+                       budget: Optional[RetryBudget] = None
+                       ) -> "RetryBudget":
+        """Turn on late-binding request hedging (docs/protocol.md §9):
+        a request still PARKED on a busy replica's wire lock after the
+        hedge delay is re-routed to a *different* replica instead of
+        continuing to wait. The request has not been sent when the hedge
+        fires, so exactly ONE wire send ever happens — executed-request
+        count is provably unchanged (no dedup races, no double-execution
+        window). ``delay`` pins a fixed hedge delay in seconds;
+        ``delay=None`` adapts it to the observed ``quantile`` of recent
+        dispatch latencies (a :data:`HEDGE_RESERVOIR`-sized window).
+        Hedges spend from ``budget`` (a shared :class:`RetryBudget`;
+        default a private one) so a fleet-wide stall cannot amplify into
+        a re-route storm. → the budget in use."""
+        with self._lock:
+            self._hedge = True
+            self._hedge_delay = None if delay is None else float(delay)
+            self._hedge_quantile = float(quantile)
+            self.hedge_budget = budget if budget is not None \
+                else RetryBudget()
+            return self.hedge_budget
+
+    def _hedge_after(self) -> Optional[float]:
+        """Current hedge delay in seconds, or None when hedging is off /
+        has no signal yet (adaptive mode needs a seeded reservoir)."""
+        if not self._hedge:
+            return None
+        if self._hedge_delay is not None:
+            return self._hedge_delay
+        with self._lock:
+            lats = sorted(self._lat_ms)
+        if len(lats) < 8:           # not enough signal — don't hedge blind
+            return None
+        q = lats[min(len(lats) - 1, int(self._hedge_quantile * len(lats)))]
+        return q / 1e3
+
+    def _observe_latency(self, ms: float) -> None:
+        with self._lock:
+            self._lat_ms.append(ms)
+
     # -- routing ------------------------------------------------------------
-    def _route(self, weight: int = 1) -> Replica:
+    def _route(self, weight: int = 1,
+               exclude: Optional[int] = None) -> Replica:
         with self._lock:
             loads = [(r.rid, r.inflight,
                       r.ewma_ms if r.ewma_ms is not None else 0.0)
                      for r in self._replicas.values()
                      if r.state == REPLICA_ACTIVE]
+            if exclude is not None and len(loads) > 1:
+                # hedge re-route: a DIFFERENT replica when one exists (a
+                # single-replica fleet just re-queues on the only wire)
+                loads = [t for t in loads if t[0] != exclude]
             if not loads:
                 raise ServiceUnavailable(
                     f"service {self.name!r}: no active replicas")
@@ -2224,6 +2728,39 @@ class ServiceFleet:
             rep.inflight += weight
             self.stats["routed"] += weight
             return rep
+
+    def _acquire(self, rep: Replica, deadline: Optional[float],
+                 may_hedge: bool) -> str:
+        """Admission→submission wait on the replica's wire lock, bounded
+        by the propagated deadline and (optionally) the hedge delay.
+        → ``"acquired"`` (lock held), ``"expired"`` (deadline passed while
+        queued — the request was NEVER sent), or ``"hedge"`` (hedge delay
+        passed AND a budget token was granted — re-route, nothing sent)."""
+        hedge_after = self._hedge_after() if may_hedge else None
+        waited = 0.0
+        while True:
+            bounds = []
+            if deadline is not None:
+                rem = deadline - time.monotonic()
+                if rem <= 0:
+                    return "expired"
+                bounds.append(rem)
+            if hedge_after is not None:
+                bounds.append(max(0.0, hedge_after - waited))
+            if not bounds:
+                rep.rlock.acquire()
+                return "acquired"
+            t0 = time.monotonic()
+            if rep.rlock.acquire(timeout=min(bounds)):
+                return "acquired"
+            waited += time.monotonic() - t0
+            if deadline is not None and time.monotonic() >= deadline:
+                return "expired"
+            if hedge_after is not None and waited >= hedge_after:
+                if self.hedge_budget.take():
+                    return "hedge"
+                hedge_after = None      # budget dry: wait like an unhedged
+                #                         request (no retry-storm boost)
 
     def _complete(self, rep: Replica, weight: int, elapsed_ms: float,
                   ok: bool) -> None:
@@ -2259,20 +2796,59 @@ class ServiceFleet:
     def dispatch(self, payload: np.ndarray) -> np.ndarray:
         """Route one request to one replica. Runs on the gateway's session
         service threads / shards — concurrency across replicas is real;
-        within a replica, ``rlock`` keeps the session serial."""
+        within a replica, ``rlock`` keeps the session serial.
+
+        The admission→submission wait honors the caller's propagated
+        deadline (work that expires while QUEUED is shed typed, never
+        sent) and, with :meth:`enable_hedging` on, re-routes a parked
+        request to a different replica after the hedge delay — late
+        binding: the request has a single wire send either way, so
+        hedging can never double-execute. Deliberately does NOT tighten
+        the replica wire timeout itself: a mid-exchange ``ResponseTimeout``
+        poisons the session and would retire a healthy replica."""
+        deadline = current_deadline()
         attempts = 0
+        hedged = False
+        exclude: Optional[int] = None
         while True:
-            rep = self._route()
+            rep = self._route(exclude=exclude)
+            exclude = None
             t0 = time.perf_counter()
             ok = False
             try:
-                with rep.rlock:
+                acq = self._acquire(rep, deadline, not hedged)
+                if acq == "expired":
+                    with self._lock:
+                        self.stats["expired"] += 1
+                    raise DeadlineExpired(
+                        f"service {self.name!r}: deadline expired while "
+                        f"queued for replica {rep.rid} — shed before send")
+                if acq == "hedge":
+                    hedged = True
+                    exclude = rep.rid
+                    with self._lock:
+                        self.stats["hedges_fired"] += 1
+                    continue        # finally undoes this rep's admission
+                try:
                     if rep.state != REPLICA_ACTIVE \
                             and rep.state != REPLICA_DRAINING:
                         raise _ReplicaGone()
+                    if deadline is not None \
+                            and time.monotonic() >= deadline:
+                        with self._lock:
+                            self.stats["expired"] += 1
+                        raise DeadlineExpired(
+                            f"service {self.name!r}: deadline expired at "
+                            f"replica {rep.rid}'s wire — shed before send")
                     # mpklint: disable=MPK002 reason=rlock IS the replica wire lock; the proc session is serial by contract and callers park here by design
                     out = rep.session.request(payload)
+                finally:
+                    rep.rlock.release()
                 ok = True
+                self._observe_latency((time.perf_counter() - t0) * 1e3)
+                if hedged:
+                    with self._lock:
+                        self.stats["hedges_won"] += 1
                 return out
             except _ReplicaGone:
                 attempts += 1
@@ -2281,6 +2857,10 @@ class ServiceFleet:
                 if attempts > 32:
                     raise ServiceUnavailable(
                         f"service {self.name!r}: re-route budget exhausted")
+            except DeadlineExpired:
+                raise           # a shed, not a replica failure: never
+                #                 retires the replica (subclasses
+                #                 ResponseTimeout — must precede it)
             except ServiceCrashed:
                 if self._link_died(rep):
                     self._mark_dead(rep)
@@ -2300,8 +2880,15 @@ class ServiceFleet:
         come back as typed exception instances in their slots (the
         gateway's batch paths map them to per-item typed errors); a child
         death mid-cohort marks the replica DEAD and every not-yet-served
-        item of the cohort carries the typed ServiceCrashed."""
+        item of the cohort carries the typed ServiceCrashed.
+
+        Honors the tightest propagated deadline of the cohort (the
+        thread-local set by the gateway's batch execution core): a cohort
+        that expires while QUEUED for its replica is shed typed before
+        the wire. Cohorts never hedge — a cohort binds WHOLE to one
+        replica by design (docs/protocol.md §9)."""
         n = len(payloads)
+        deadline = current_deadline()
         with self._lock:
             self.stats["cohorts"] += 1
         attempts = 0
@@ -2310,12 +2897,21 @@ class ServiceFleet:
             t0 = time.perf_counter()
             ok = False
             try:
-                with rep.rlock:
+                if self._acquire(rep, deadline, False) == "expired":
+                    with self._lock:
+                        self.stats["expired"] += n
+                    raise DeadlineExpired(
+                        f"service {self.name!r}: cohort deadline expired "
+                        f"while queued for replica {rep.rid} — shed "
+                        "before send")
+                try:
                     if rep.state != REPLICA_ACTIVE \
                             and rep.state != REPLICA_DRAINING:
                         raise _ReplicaGone()
                     outs = rep.session.call_batch(payloads,
                                                   return_exceptions=True)
+                finally:
+                    rep.rlock.release()
                 ok = True
             except _ReplicaGone:
                 attempts += 1
@@ -2325,6 +2921,9 @@ class ServiceFleet:
                     raise ServiceUnavailable(
                         f"service {self.name!r}: re-route budget exhausted")
                 continue
+            except DeadlineExpired:
+                raise           # shed, not a replica failure (subclasses
+                #                 ResponseTimeout — must precede it)
             except (ServiceCrashed, ResponseTimeout):
                 if self._link_died(rep):
                     self._mark_dead(rep)
@@ -2348,3 +2947,193 @@ class ServiceFleet:
                      "served": r.served,
                      "crashes": r.crashes}
                     for r in self._replicas.values()]
+
+
+# ---------------------------------------------------------------------------
+# the fleet supervisor (self-healing control plane)
+# ---------------------------------------------------------------------------
+
+class FleetSupervisor:
+    """Health-probing supervision loop over one service's
+    :class:`ServiceFleet`: detects DEAD and wedged replicas, ejects
+    EWMA-latency outliers, and actuates the pure planners'
+    (:func:`repro.runtime.elastic.plan_outlier_ejection`,
+    :func:`repro.runtime.elastic.plan_fleet_scaling`) step lists so
+    steady-state capacity converges back to ``target`` ACTIVE replicas
+    under continuous kill -9 (docs/protocol.md §9).
+
+    One sweep =
+
+    1. **probe** every ACTIVE replica, in seeded-shuffled order: grab its
+       wire lock (bounded — a busy wire is NOT a failure, the replica is
+       making progress) and exchange one tiny request. ANY response,
+       including a remote typed error, proves the link + dispatch loop
+       alive; a dead link or a probe timeout retires the replica (a
+       replica that cannot answer a bounded probe cannot be driven — the
+       timeout has already poisoned its session);
+    2. **eject** latency outliers per ``plan_outlier_ejection`` (peer-
+       median EWMA × ``eject_factor``, with warmup/population guards) by
+       draining them under live traffic;
+    3. **converge** per ``plan_fleet_scaling``: release dead replicas
+       (trivially quiesced), respawn the deficit from the fleet's stored
+       spawn spec as fresh proc-backed sessions — each with its own
+       segment/domain/epoch, each membership change exactly one re-key —
+       and drain any surplus.
+
+    Decisions come from pure planners over an immutable snapshot, so a
+    recorded trace (``record=True``) replays exactly: :meth:`replay`
+    re-derives every sweep's plan from its recorded snapshot and fails
+    loudly on the first divergence, mirroring :class:`ReplicaRouter`."""
+
+    def __init__(self, gw: ServiceGateway, name: str, target: int, *,
+                 interval: float = 0.25, probe_timeout: float = 1.0,
+                 seed: int = 0x53555056, eject_factor: float = 4.0,
+                 record: bool = False):
+        if target < 1:
+            raise ValueError("target must be >= 1")
+        self.gw = gw
+        self.name = name
+        self.target = int(target)
+        self.interval = float(interval)
+        self.probe_timeout = float(probe_timeout)
+        self.seed = seed
+        self.eject_factor = float(eject_factor)
+        self.record = record
+        self._rng = random.Random(seed)
+        self._probe_payload = np.zeros(1, np.int32)
+        self._draining: set = set()     # ejected/surplus rids to re-drain
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.trace: List[Tuple] = []    # (sweep#, probes, snapshot, plan)
+        self.stats = {"sweeps": 0, "probes": 0, "deaths_detected": 0,
+                      "ejections": 0, "respawns": 0, "releases": 0,
+                      "drains": 0}
+
+    # -- probing ------------------------------------------------------------
+    def _probe(self, rep: Replica) -> str:
+        """One liveness probe. → ``"alive"`` | ``"dead"`` | ``"busy"``
+        (wire lock held past the bound — not probed, not failed)."""
+        if not rep.rlock.acquire(timeout=self.probe_timeout):
+            return "busy"
+        try:
+            if rep.state != REPLICA_ACTIVE:
+                return "busy"           # decided by another path meanwhile
+            try:
+                rep.session.request(self._probe_payload,
+                                    timeout=self.probe_timeout)
+            except (ServiceCrashed, ResponseTimeout):
+                # link death, or a probe the replica could not answer
+                # within the bound (the timeout has poisoned the session
+                # either way — the replica can no longer be driven)
+                return "dead"
+            except Exception:
+                # a remote TYPED error (the probe payload is not a valid
+                # request for every handler) — the link answered: alive
+                return "alive"
+            return "alive"
+        finally:
+            rep.rlock.release()
+
+    # -- one sweep ----------------------------------------------------------
+    def sweep(self) -> list:
+        """Run one supervision sweep; → the actuated plan_fleet_scaling
+        step list (after probing and outlier ejection)."""
+        from repro.runtime.elastic import (plan_fleet_scaling,
+                                           plan_outlier_ejection)
+        fleet = self.gw.fleet(self.name)
+        sweep_no = self.stats["sweeps"]
+        self.stats["sweeps"] += 1
+
+        with fleet._lock:
+            actives = [r for r in fleet._replicas.values()
+                       if r.state == REPLICA_ACTIVE]
+        self._rng.shuffle(actives)
+        probes = []
+        for rep in actives:
+            verdict = self._probe(rep)
+            self.stats["probes"] += 1
+            probes.append((rep.rid, verdict))
+            if verdict == "dead":
+                self.stats["deaths_detected"] += 1
+                fleet._mark_dead(rep)
+
+        snap = fleet.snapshot()
+        for op, rid in plan_outlier_ejection(snap,
+                                             factor=self.eject_factor):
+            assert op == "eject"
+            self.stats["ejections"] += 1
+            self._draining.add(rid)
+
+        # re-drain anything decided earlier that has not quiesced yet
+        for rid in sorted(self._draining):
+            if self.gw.drain_replica(self.name, rid,
+                                     timeout=self.probe_timeout):
+                self._draining.discard(rid)
+                self.stats["drains"] += 1
+
+        snap = fleet.snapshot()
+        plan = plan_fleet_scaling(snap, self.target)
+        for step in plan:
+            op, arg = step
+            if op == "release":
+                # a DEAD replica drains trivially; one re-key on release
+                if self.gw.drain_replica(self.name, arg,
+                                         timeout=self.probe_timeout):
+                    self.stats["releases"] += 1
+            elif op == "join":
+                handler, transport, kwargs = fleet._spawn
+                for _ in range(arg):
+                    # a fresh proc-backed replica: own segment/domain/
+                    # epoch; the join epoch-bumps the service exactly once
+                    self.gw.register_replica(self.name, handler,
+                                             transport=transport,
+                                             transport_kwargs=kwargs)
+                    self.stats["respawns"] += 1
+            elif op == "drain":
+                self._draining.add(arg)
+        if self.record:
+            self.trace.append((sweep_no, tuple(probes), tuple(
+                tuple(sorted(r.items())) for r in snap), tuple(plan)))
+        return plan
+
+    def replay(self) -> None:
+        """Re-derive every recorded sweep's plan from its recorded
+        snapshot with the PURE planner; raise AssertionError on the first
+        divergence (the supervision analogue of ReplicaRouter.replay)."""
+        from repro.runtime.elastic import plan_fleet_scaling
+        for sweep_no, _probes, snap_t, plan in self.trace:
+            snap = [dict(items) for items in snap_t]
+            fresh = tuple(plan_fleet_scaling(snap, self.target))
+            if fresh != plan:
+                raise AssertionError(
+                    f"supervisor replay diverged at sweep {sweep_no}: "
+                    f"recorded {plan}, replayed {fresh} "
+                    f"(seed {self.seed:#x})")
+
+    # -- lifecycle ----------------------------------------------------------
+    def start(self) -> "FleetSupervisor":
+        if self._thread is not None:
+            raise RuntimeError("supervisor already started")
+        # pre-warm the planner import HERE: a cold import inside the first
+        # sweep would stall the whole probe loop for its duration
+        from repro.runtime import elastic as _elastic  # noqa: F401
+        self._thread = threading.Thread(
+            target=self._run, daemon=True,
+            name=f"fleet-supervisor-{self.name}")
+        self._thread.start()
+        return self
+
+    def _run(self) -> None:
+        while not self._stop.wait(self.interval):
+            try:
+                self.sweep()
+            # mpklint: disable=MPK105 reason=supervision loop must survive any single sweep failure; failures surface via stats/snapshot
+            except Exception:
+                pass
+
+    def stop(self) -> None:
+        self._stop.set()
+        t = self._thread
+        if t is not None:
+            t.join(timeout=30)
+            self._thread = None

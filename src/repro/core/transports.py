@@ -118,6 +118,16 @@ class ResponseTimeout(TransportError):
     alive — e.g. a dropped/late response). The session poisons itself."""
 
 
+class DeadlineExpired(ResponseTimeout):
+    """The request's propagated deadline (the lane-10 budget word — see
+    docs/protocol.md §9) expired before the work could run: the request was
+    shed *before* execution, or stood down while queued. Subclasses
+    :class:`ResponseTimeout` so existing typed-error nets treat it as a
+    timeout, but retrying is pointless — the caller's budget is spent, so
+    retry layers re-raise instead of healing. Never poisons a session (the
+    wire exchange itself completed)."""
+
+
 class ServiceCrashed(TransportError):
     """The service handler/thread died while a request was in flight —
     distinguished from :class:`ResponseTimeout` so retry layers fail over
@@ -127,6 +137,21 @@ class ServiceCrashed(TransportError):
 class ServiceUnavailable(TransportError):
     """A circuit breaker is shedding load for this service — the request
     was rejected up-front instead of being allowed to hang."""
+
+
+class Overloaded(ServiceUnavailable):
+    """Brownout admission shed: the service crossed its overload high-water
+    mark (inflight depth × EWMA service time), so new admissions are turned
+    away typed instead of queueing into timeout collapse. Carries a
+    ``retry_after`` hint in seconds (an estimate of when the backlog
+    drains); a well-behaved client backs off at least that long before
+    retrying. Subclasses :class:`ServiceUnavailable` so existing shed
+    accounting and retry nets apply unchanged."""
+
+    def __init__(self, msg: str = "service overloaded",
+                 retry_after: float = 0.0):
+        super().__init__(msg)
+        self.retry_after = float(retry_after)
 
 
 class HandlerCrash(BaseException):
@@ -148,21 +173,29 @@ _REMOTE_ERRORS: Dict[str, type] = {
     "CapacityError": CapacityError,
     "TransportError": TransportError,
     "ResponseTimeout": ResponseTimeout,
+    "DeadlineExpired": DeadlineExpired,
     "ServiceCrashed": ServiceCrashed,
     "ServiceUnavailable": ServiceUnavailable,
+    "Overloaded": Overloaded,
     "AccessViolation": AccessViolation,
     "FrameError": framing.FrameError,
 }
 
 
 def _pack_error(exc: BaseException) -> bytes:
-    return msgpack.packb({"type": type(exc).__name__, "msg": str(exc)},
-                         use_bin_type=True)
+    info = {"type": type(exc).__name__, "msg": str(exc)}
+    retry_after = getattr(exc, "retry_after", None)
+    if retry_after is not None:
+        info["retry_after"] = float(retry_after)
+    return msgpack.packb(info, use_bin_type=True)
 
 
 def _raise_remote(blob: bytes):
     info = msgpack.unpackb(bytes(blob), raw=False)
     cls = _REMOTE_ERRORS.get(info.get("type", ""), TransportError)
+    if cls is Overloaded:
+        raise Overloaded(info.get("msg", "remote service error"),
+                         retry_after=info.get("retry_after", 0.0))
     raise cls(info.get("msg", "remote service error"))
 
 

@@ -103,3 +103,42 @@ def plan_fleet_scaling(snapshot: list, target: int) -> list:
                                         -r["rid"]))[:-deficit]
         actions.extend(("drain", r["rid"]) for r in surplus)
     return actions
+
+
+def plan_outlier_ejection(snapshot: list, *, factor: float = 4.0,
+                          min_peers: int = 3, min_served: int = 32) -> list:
+    """EWMA-latency outlier ejection policy (pure decision, no side
+    effects), the service-mesh guard against the wedged-but-alive replica
+    a liveness probe cannot catch: given one service's
+    ``ServiceFleet.snapshot()``, eject ACTIVE replicas whose EWMA service
+    time exceeds ``factor`` × the peer median.
+
+      eject candidate → ("eject", rid)    the supervisor drains it and lets
+                                          plan_fleet_scaling respawn capacity
+
+    Guard rails, so ejection can't thrash a small or cold fleet:
+
+    * needs ``min_peers`` ACTIVE replicas with an observed EWMA — with
+      fewer there is no meaningful peer population to be an outlier OF;
+    * a replica must have ``min_served`` completions before it can be
+      ejected (its EWMA must be signal, not warmup noise);
+    * the median is computed over the OTHER replicas (peer median), so one
+      giant outlier cannot drag the threshold up past itself.
+
+    Deterministic and order-stable (ejections by rid ascending) so
+    supervision sweeps are replayable, mirroring the other planners."""
+    observed = [r for r in snapshot
+                if r["state"] == "active" and r["ewma_ms"] is not None]
+    if len(observed) < min_peers:
+        return []
+    actions = []
+    for r in sorted(observed, key=lambda r: r["rid"]):
+        if r["served"] < min_served:
+            continue
+        peers = sorted(p["ewma_ms"] for p in observed
+                       if p["rid"] != r["rid"])
+        med = peers[len(peers) // 2] if len(peers) % 2 else \
+            0.5 * (peers[len(peers) // 2 - 1] + peers[len(peers) // 2])
+        if med > 0.0 and r["ewma_ms"] > factor * med:
+            actions.append(("eject", r["rid"]))
+    return actions

@@ -335,8 +335,27 @@ class EngineService:
                 f"EngineService closed while request {rid} was in flight")
         with self._lock:
             self._cancel(rid)
+        from repro.core import gateway as _gw     # no import cycle: lazy
+        from repro.core.transports import DeadlineExpired
+        remaining = _gw.remaining_budget()
+        if remaining is not None and remaining <= 0:
+            raise DeadlineExpired(
+                f"inference request {rid}: caller's propagated deadline "
+                "expired while decoding — request cancelled")
         raise TimeoutError(f"inference request {rid} timed out "
                            f"after {self.timeout}s")
+
+    def _deadline(self) -> float:
+        """This request's retirement deadline: the service's configured
+        bound, TIGHTENED by the caller's propagated budget when the request
+        arrived through the gateway with a deadline word (docs/protocol.md
+        §9) — a 1 s caller budget bounds the decode wait at ~1 s instead of
+        the service-wide default."""
+        from repro.core import gateway as _gw     # no import cycle: lazy
+        remaining = _gw.remaining_budget()
+        bound = self.timeout if remaining is None \
+            else min(self.timeout, max(0.0, remaining))
+        return time.monotonic() + bound
 
     def handler(self, req: np.ndarray) -> np.ndarray:
         """One prompt in, one int32 token array out (the gateway/transport
@@ -351,7 +370,7 @@ class EngineService:
             self._events[rid] = ev
             self.engine.submit(Request(rid=rid, prompt=prompt, max_new=max_new))
         self._work.set()
-        return self._await(rid, ev, time.monotonic() + self.timeout)
+        return self._await(rid, ev, self._deadline())
 
     def handler_batch(self, reqs) -> List[np.ndarray]:
         """Batched prompt submission (the gateway's ``batch_handler``).
@@ -382,7 +401,7 @@ class EngineService:
                     Request(rid=rid, prompt=prompt, max_new=max_new))
                 waits.append((rid, ev))
         self._work.set()
-        deadline = time.monotonic() + self.timeout
+        deadline = self._deadline()
         outs: List[np.ndarray] = []
         for k, (rid, ev) in enumerate(waits):
             try:

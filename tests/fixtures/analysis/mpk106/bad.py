@@ -1,0 +1,8 @@
+"""True positive: a deadline-accepting dispatch waits on a fresh constant."""
+
+
+class Dispatcher:
+    def run(self, rep, deadline):
+        if not rep.rlock.acquire(timeout=30.0):
+            raise TimeoutError
+        return rep.session.request(b"x", timeout=5.0 + 25.0)

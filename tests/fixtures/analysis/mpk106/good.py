@@ -1,0 +1,10 @@
+"""True negative: every wait derives from the remaining budget."""
+import time
+
+
+class Dispatcher:
+    def run(self, rep, deadline):
+        remaining = deadline - time.monotonic()
+        if not rep.rlock.acquire(timeout=min(remaining, 30.0)):
+            raise TimeoutError
+        return rep.session.request(b"x", timeout=remaining)

@@ -1,0 +1,32 @@
+"""Slow 1024-client open-loop sweep through the fleet_bench cell path.
+
+One test, marked ``slow`` (NOT ``proc`` — mpklink_opt in-proc replicas,
+no forked children): the point is that open-loop admission at 4x the
+gated client count neither loses requests nor wedges, using the exact
+``run_cell`` machinery that produced the committed
+``benchmarks/results/fleet_bench.json`` sweep. Excluded from the tier-1
+CI job (``-m "not proc and not slow"``) and from the fleet job's
+explicit file list; ``pytest tests/test_fleet_sweep.py`` runs it.
+"""
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "benchmarks"))
+
+import fleet_bench  # noqa: E402
+
+
+@pytest.mark.slow
+def test_1024_client_poisson_cell_no_lost():
+    clients = 1024
+    n = 2 * clients                  # the bench's sweep floor for a count
+    cell = fleet_bench.run_cell(4, clients, n, "poisson")
+    assert not cell["lost"], cell["lost"]
+    assert cell["wrong_answers"] == 0
+    assert cell["completed"] + cell["typed_error_count"] == n
+    # open-loop throughput should be replica-bound, not client-bound:
+    # 4 replicas x ~1/SERVICE_MS each, with generous scheduling slack
+    floor = 0.5 * 4 * (1000.0 / fleet_bench.SERVICE_MS)
+    assert cell["throughput_rps"] >= floor, cell["throughput_rps"]

@@ -1,0 +1,337 @@
+"""Retry-budget and hedging properties (ISSUE 9 / docs/protocol.md §9):
+under every FaultPlan kind — and real kill -9 — total attempts
+(primary + liveness retries + hedges) never exceed the token-bucket
+budget, no request double-executes, and identical seeds produce
+identical outcome sequences AND identical budget spend.
+
+The fault-matrix properties are in-process and tier-1; the kill -9
+property forks real replica children and is marked ``proc``."""
+import os
+import signal
+import threading
+import time
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core import ServiceGateway
+from repro.core.faultwire import (ALL_KINDS, FaultFabric, FaultPlan,
+                                  FaultyClient)
+from repro.core.gateway import REPLICA_ACTIVE, RetryBudget
+from repro.core.wordcount import make_text, parse_count, wordcount_handler
+
+TIMEOUT = 0.4
+WALL_BUDGET = 60.0
+_PROC_KW = {"ring_slots": 2, "timeout": 30.0}
+
+
+def _counting_gateway():
+    """Gateway whose wordcount handler counts executions PER PAYLOAD —
+    the ground truth for the no-double-execution property."""
+    counts = {}
+    lock = threading.Lock()
+
+    def counting(req):
+        key = bytes(np.asarray(req, np.uint8).tobytes())
+        with lock:
+            counts[key] = counts.get(key, 0) + 1
+        return wordcount_handler(req)
+
+    gw = ServiceGateway("mpklink_opt", transport_kwargs={"timeout": TIMEOUT})
+    gw.register_service("wordcount", counting, factory=lambda: counting)
+    return gw.start(), counts
+
+
+def _run_plan(plan, *, retries=3, budget=None):
+    gw, counts = _counting_gateway()
+    fab = FaultFabric(plan).attach(gw)
+    fc = FaultyClient(gw.connect("prop-client", retries=retries,
+                                 retry_budget=budget), fab, "wordcount")
+    t0 = time.perf_counter()
+    try:
+        for i in range(plan.n_requests):
+            n = 4 + i % 9
+            out = fc.step(make_text(n, seed=i))
+            if out.status == "ok":
+                assert parse_count(out.value) == n, \
+                    f"wrong answer at {i} — replay: {plan.describe()}"
+    finally:
+        wall = time.perf_counter() - t0
+        gw.close()
+    sig = [(o.index, o.status, o.kind, type(o.value).__name__)
+           for o in fc.outcomes]
+    return sig, wall, counts, fc
+
+
+# ---------------------------------------------------------------------------
+# the two core properties, per fault kind
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ALL_KINDS)
+def test_budget_and_single_execution_per_kind(kind):
+    """For every fault kind: (1) no payload ever executes more than once
+    — dedup answers retried duplicates from the window; (2) extra
+    attempts stay within the token bucket's mathematical bound
+    ``initial + ratio × primaries``; (3) the run is wall-bounded."""
+    # NOT hash(): builtin hash is salted per process (PYTHONHASHSEED), and
+    # an unlucky plan can drift a server-side drop onto a non-faulted wire
+    # index once retries shift the schedule — the seed must be stable
+    plan = FaultPlan(seed=(zlib.crc32(kind.encode()) + 3) & 0xFFFF,
+                     n_requests=24, rate=0.25, kinds=(kind,))
+    assert len(plan.events) >= 2
+    budget = RetryBudget(ratio=0.25, burst=3)
+    sig, wall, counts, fc = _run_plan(plan, budget=budget)
+    assert wall < WALL_BUDGET, f"hung? — replay: {plan.describe()}"
+    over = {k: v for k, v in counts.items() if v > 1}
+    assert not over, \
+        f"double-executed under {kind}: {len(over)} payloads — " \
+        f"replay: {plan.describe()}"
+    allowance = 3 + 0.25 * plan.n_requests
+    assert budget.spent <= allowance, (budget.spent, allowance)
+    assert fc.counts()["error"] == 0, f"replay: {plan.describe()}"
+
+
+def test_budget_and_single_execution_full_matrix():
+    """All 8 kinds interleaved in one seeded run — the properties hold
+    jointly, not just per-kind."""
+    plan = FaultPlan(seed=0x90B, n_requests=48, rate=0.3)
+    budget = RetryBudget(ratio=0.25, burst=3)
+    sig, wall, counts, fc = _run_plan(plan, budget=budget)
+    assert wall < WALL_BUDGET
+    assert all(v <= 1 for v in counts.values()), \
+        f"replay: {plan.describe()}"
+    assert budget.spent <= 3 + 0.25 * plan.n_requests
+    assert fc.counts()["error"] == 0, f"replay: {plan.describe()}"
+
+
+def test_dry_budget_means_zero_extra_attempts():
+    """With an empty bucket the client may not retry at all, whatever
+    ``retries`` says: executions ≤ primaries, spend stays zero, and the
+    refusals are counted."""
+    plan = FaultPlan(seed=0xD0, n_requests=24, rate=0.3,
+                     kinds=("drop_response", "crash_handler"))
+    budget = RetryBudget(ratio=0.0, burst=1, initial=0.0)
+    sig, wall, counts, fc = _run_plan(plan, budget=budget)
+    assert budget.spent == 0
+    assert budget.denied >= 1
+    assert sum(counts.values()) <= plan.n_requests
+    assert all(v <= 1 for v in counts.values())
+
+
+def test_identical_seed_identical_outcomes_and_spend():
+    """Seeded determinism extends to the budget: two runs of the same
+    plan fingerprint identically AND spend identically."""
+    spec = FaultPlan(seed=424, n_requests=30, rate=0.3).spec()
+    b1 = RetryBudget(ratio=0.25, burst=3)
+    b2 = RetryBudget(ratio=0.25, burst=3)
+    sig1, _, _, _ = _run_plan(FaultPlan.from_spec(spec), budget=b1)
+    sig2, _, _, _ = _run_plan(FaultPlan.from_spec(spec), budget=b2)
+    assert sig1 == sig2
+    assert (b1.spent, b1.denied) == (b2.spent, b2.denied)
+
+
+# ---------------------------------------------------------------------------
+# hedging: late binding — one wire send ever, budget-capped
+# ---------------------------------------------------------------------------
+
+def _tagged_counting(i, counts, lock):
+    def handler(req):
+        with lock:
+            counts[i] = counts.get(i, 0) + 1
+        return np.concatenate([np.asarray(req, np.uint8),
+                               np.array([i], np.uint8)])
+    return handler
+
+
+def _hedge_fleet(n=2):
+    counts, lock = {}, threading.Lock()
+    gw = ServiceGateway("mpklink_opt")
+    for i in range(n):
+        gw.register_replica("echo", _tagged_counting(i, counts, lock),
+                            transport="mpklink_opt")
+    return gw.start(), counts
+
+
+def test_hedge_fires_once_and_executes_once():
+    """Both replicas' wire locks held → the parked request hedges to the
+    other replica after the delay, completes there when released, and the
+    handler population executed EXACTLY once (late binding: the hedge
+    re-routes before any send)."""
+    gw, counts = _hedge_fleet(2)
+    fleet = gw.fleet("echo")
+    budget = fleet.enable_hedging(delay=0.05)
+    try:
+        for rep in fleet._replicas.values():
+            assert rep.rlock.acquire(timeout=1.0)
+        cli = gw.connect("c0")
+        result = {}
+
+        def caller():
+            result["out"] = cli.call("echo", np.arange(4, dtype=np.uint8))
+
+        t = threading.Thread(target=caller)
+        t.start()
+        time.sleep(0.4)                 # well past the hedge delay
+        assert fleet.stats["hedges_fired"] == 1
+        for rep in fleet._replicas.values():
+            rep.rlock.release()
+        t.join(timeout=10)
+        assert np.asarray(result["out"])[:4].tolist() == [0, 1, 2, 3]
+        assert sum(counts.values()) == 1
+        assert fleet.stats["hedges_won"] == 1
+        assert budget.spent == 1
+        cli.close()
+    finally:
+        for rep in fleet._replicas.values():
+            try:
+                rep.rlock.release()
+            except RuntimeError:
+                pass
+        gw.close()
+
+
+def test_hedge_respects_dry_budget():
+    """Bucket empty → the parked request waits like an unhedged one;
+    zero hedges fire and the refusal is counted."""
+    gw, counts = _hedge_fleet(2)
+    fleet = gw.fleet("echo")
+    budget = fleet.enable_hedging(
+        delay=0.05, budget=RetryBudget(ratio=0.0, burst=1, initial=0.0))
+    try:
+        for rep in fleet._replicas.values():
+            assert rep.rlock.acquire(timeout=1.0)
+        cli = gw.connect("c0")
+        result = {}
+
+        def caller():
+            result["out"] = cli.call("echo", np.arange(4, dtype=np.uint8))
+
+        t = threading.Thread(target=caller)
+        t.start()
+        time.sleep(0.4)
+        assert fleet.stats["hedges_fired"] == 0
+        assert budget.denied >= 1
+        for rep in fleet._replicas.values():
+            rep.rlock.release()
+        t.join(timeout=10)
+        assert np.asarray(result["out"])[:4].tolist() == [0, 1, 2, 3]
+        assert sum(counts.values()) == 1
+        cli.close()
+    finally:
+        for rep in fleet._replicas.values():
+            try:
+                rep.rlock.release()
+            except RuntimeError:
+                pass
+        gw.close()
+
+
+def test_hedge_load_single_execution_per_request():
+    """Concurrent clients against slow replicas with hedging on: every
+    request executes exactly once fleet-wide (sum of handler executions
+    == completed requests) and hedge spend stays within the bucket."""
+    counts, lock = {}, threading.Lock()
+
+    def slow_counting(i):
+        def handler(req):
+            with lock:
+                counts[bytes(np.asarray(req, np.uint8).tobytes())] = \
+                    counts.get(bytes(np.asarray(req, np.uint8).tobytes()),
+                               0) + 1
+            time.sleep(0.02)
+            return np.asarray(req, np.uint8)
+        return handler
+
+    gw = ServiceGateway("mpklink_opt")
+    for i in range(2):
+        gw.register_replica("echo", slow_counting(i),
+                            transport="mpklink_opt")
+    gw.start()
+    fleet = gw.fleet("echo")
+    budget = fleet.enable_hedging(delay=0.01,
+                                  budget=RetryBudget(ratio=1.0, burst=64,
+                                                     initial=64))
+    try:
+        n_clients, reps = 6, 5
+        errors = []
+
+        def worker(i):
+            try:
+                c = gw.connect(f"c{i}")
+                for j in range(reps):
+                    payload = np.array([i, j, i + j], np.uint8)
+                    out = c.call("echo", payload)
+                    np.testing.assert_array_equal(np.asarray(out), payload)
+                c.close()
+            except Exception as e:      # pragma: no cover - surfaced below
+                errors.append((i, repr(e)))
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(n_clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+        assert not errors, errors
+        assert all(v == 1 for v in counts.values()), \
+            {k: v for k, v in counts.items() if v > 1}
+        assert len(counts) == n_clients * reps
+        assert budget.spent == fleet.stats["hedges_fired"]
+        assert budget.spent <= 64
+    finally:
+        gw.close()
+
+
+# ---------------------------------------------------------------------------
+# proc: the properties under real kill -9 (CI fleet job)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.proc
+def test_kill9_no_lost_no_double_budget_bounded():
+    """kill -9 a live replica mid-traffic: every request either succeeds
+    (correct answer) or fails TYPED; each success executed on exactly one
+    replica (sum of served == successes); client retry spend stays within
+    the bucket."""
+    def tagged(i):
+        def handler(req):
+            return np.concatenate([np.asarray(req, np.uint8),
+                                   np.array([i], np.uint8)])
+        return handler
+
+    gw = ServiceGateway("mpklink_opt")
+    for i in range(2):
+        gw.register_replica("echo", tagged(i), transport_kwargs=_PROC_KW)
+    gw.start()
+    fleet = gw.fleet("echo")
+    budget = RetryBudget(ratio=0.25, burst=3)
+    try:
+        cli = gw.connect("c0", retries=3, retry_budget=budget)
+        warm = 0
+        while not all(r.session._proc is not None
+                      for r in fleet._replicas.values()):
+            cli.call("echo", np.arange(4, dtype=np.uint8))
+            warm += 1
+            assert warm < 100, "fleet never warmed"
+        victim = next(r for r in fleet._replicas.values()
+                      if r.session._proc is not None)
+        os.kill(victim.session._proc.pid, signal.SIGKILL)
+        ok = 0
+        n = 40
+        for k in range(n):
+            try:
+                out = cli.call("echo", np.arange(4, dtype=np.uint8))
+            except Exception as e:
+                # typed liveness failure only — never silence, never hang
+                from repro.core.transports import TransportError
+                assert isinstance(e, TransportError), repr(e)
+            else:
+                assert np.asarray(out)[:4].tolist() == [0, 1, 2, 3]
+                ok += 1
+        served = sum(r.served for r in fleet._replicas.values())
+        assert served == warm + ok, (served, warm, ok)
+        assert budget.spent <= 3 + 0.25 * (warm + n)
+        assert ok >= n // 2, f"only {ok}/{n} healed"
+        cli.close()
+    finally:
+        gw.close()

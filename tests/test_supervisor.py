@@ -1,0 +1,320 @@
+"""FleetSupervisor (docs/protocol.md §9): health probing, EWMA outlier
+ejection, and pure-planner actuation so capacity converges back to the
+target under continuous kill -9.
+
+Planner tests are pure and tier-1; the supervisor-over-in-proc-fleet
+tests are tier-1 too (deaths injected via ``_mark_dead``); everything
+that forks and kill -9s real replica children is marked ``proc``."""
+import os
+import signal
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.gateway import (REPLICA_ACTIVE, REPLICA_DEAD,
+                                FleetSupervisor, ServiceGateway)
+from repro.runtime.elastic import plan_fleet_scaling, plan_outlier_ejection
+
+_PROC_KW = {"ring_slots": 2, "timeout": 30.0}
+
+
+def _tagged(i):
+    def handler(req):
+        return np.concatenate([np.asarray(req, np.uint8),
+                               np.array([i], np.uint8)])
+    return handler
+
+
+def _tag(out):
+    return int(np.asarray(out)[-1])
+
+
+def _snap(rid, state="active", ewma=5.0, served=100, inflight=0):
+    return {"rid": rid, "state": state, "ewma_ms": ewma,
+            "served": served, "inflight": inflight}
+
+
+# ---------------------------------------------------------------------------
+# plan_outlier_ejection: pure policy, guard rails
+# ---------------------------------------------------------------------------
+
+def test_ejection_flags_the_slow_replica():
+    snap = [_snap(0), _snap(1), _snap(2), _snap(3, ewma=40.0)]
+    assert plan_outlier_ejection(snap, factor=4.0) == [("eject", 3)]
+
+
+def test_ejection_peer_median_excludes_self():
+    """One giant outlier cannot drag the median up past itself: with
+    peers at 5ms the 500ms replica is ejected even though the median OF
+    ALL FOUR would include its own value."""
+    snap = [_snap(0), _snap(1), _snap(2), _snap(3, ewma=500.0)]
+    assert plan_outlier_ejection(snap) == [("eject", 3)]
+
+
+def test_ejection_needs_min_peers():
+    """Two replicas are not a population — neither can be an outlier of
+    the other."""
+    snap = [_snap(0), _snap(1, ewma=500.0)]
+    assert plan_outlier_ejection(snap, min_peers=3) == []
+
+
+def test_ejection_spares_warming_replicas():
+    """A replica below min_served keeps its EWMA grace period: warmup
+    noise (cold caches, lazy fork) must not read as pathology."""
+    snap = [_snap(0), _snap(1), _snap(2),
+            _snap(3, ewma=500.0, served=5)]
+    assert plan_outlier_ejection(snap, min_served=32) == []
+
+
+def test_ejection_ignores_non_active_and_unobserved():
+    snap = [_snap(0), _snap(1), _snap(2, ewma=None),
+            _snap(3, state="dead", ewma=900.0),
+            _snap(4, state="draining", ewma=900.0)]
+    assert plan_outlier_ejection(snap) == []
+
+
+def test_ejection_orders_by_rid():
+    snap = [_snap(5, ewma=90.0), _snap(0), _snap(1), _snap(2),
+            _snap(3, ewma=80.0)]
+    assert plan_outlier_ejection(snap) == [("eject", 3), ("eject", 5)]
+
+
+# ---------------------------------------------------------------------------
+# supervisor over an in-process fleet (tier-1)
+# ---------------------------------------------------------------------------
+
+def _inproc_fleet(n=3):
+    gw = ServiceGateway("mpklink_opt")
+    for i in range(n):
+        gw.register_replica("echo", _tagged(i), transport="mpklink_opt")
+    return gw.start()
+
+
+def test_supervisor_steady_state_is_a_no_op():
+    """A healthy fleet at target: probes come back alive, every sweep's
+    plan is empty, nothing is respawned, and the trace replays."""
+    gw = _inproc_fleet(3)
+    sup = FleetSupervisor(gw, "echo", target=3, record=True)
+    try:
+        for _ in range(3):
+            assert sup.sweep() == []
+        assert sup.stats["sweeps"] == 3
+        assert sup.stats["probes"] == 9
+        assert sup.stats["respawns"] == sup.stats["deaths_detected"] == 0
+        assert all(v == "alive" for _, probes, _, _ in sup.trace
+                   for _, v in probes)
+        sup.replay()
+    finally:
+        gw.close()
+
+
+def test_supervisor_resurrects_a_dead_replica():
+    """A DEAD replica is released (one re-key) and a fresh one joins from
+    the fleet's spawn spec — capacity returns to target in one sweep and
+    traffic lands on the resurrected set."""
+    gw = _inproc_fleet(3)
+    fleet = gw.fleet("echo")
+    sup = FleetSupervisor(gw, "echo", target=3, record=True)
+    try:
+        cli = gw.connect("c0")
+        for k in range(12):
+            cli.call("echo", np.arange(4, dtype=np.uint8))
+        victim = fleet._replicas[1]
+        fleet._mark_dead(victim)
+        plan = sup.sweep()
+        assert ("release", 1) in plan and ("join", 1) in plan
+        assert sup.stats["releases"] == 1 and sup.stats["respawns"] == 1
+        active = [r for r in fleet.snapshot() if r["state"] == "active"]
+        assert len(active) == 3
+        assert victim.state not in (REPLICA_ACTIVE, REPLICA_DEAD)
+        # the next sweep sees a converged fleet: the corpse was released
+        # exactly once (no re-key storm)
+        assert sup.sweep() == []
+        assert sup.stats["releases"] == 1
+        # respawns come from the fleet's stored spawn spec (the LAST
+        # add()'s handler — tag 2 here); the corpse's tag can never
+        # reappear and every post-heal call still lands correctly
+        seen = set()
+        for _ in range(30):
+            out = cli.call("echo", np.arange(4, dtype=np.uint8))
+            assert np.asarray(out)[:4].tolist() == [0, 1, 2, 3]
+            seen.add(_tag(out))
+        assert 1 not in seen
+        sup.replay()
+        cli.close()
+    finally:
+        gw.close()
+
+
+def test_supervisor_drains_surplus_to_target():
+    gw = _inproc_fleet(4)
+    fleet = gw.fleet("echo")
+    sup = FleetSupervisor(gw, "echo", target=2)
+    try:
+        plan = sup.sweep()
+        assert sum(1 for op, _ in plan if op == "drain") == 2
+        # drains actuate asynchronously via the re-drain set; one more
+        # sweep quiesces them (nothing is in flight)
+        sup.sweep()
+        active = [r for r in fleet.snapshot() if r["state"] == "active"]
+        assert len(active) == 2
+        assert sup.stats["drains"] == 2
+    finally:
+        gw.close()
+
+
+def test_supervisor_ejects_latency_outlier():
+    """A wedged-but-alive replica (EWMA far past the peer median) is
+    drained and replaced: the probe can't catch it, the ejection policy
+    does."""
+    gw = _inproc_fleet(4)
+    fleet = gw.fleet("echo")
+    sup = FleetSupervisor(gw, "echo", target=4, eject_factor=4.0)
+    try:
+        for rep in fleet._replicas.values():
+            rep.served = 100
+            rep.ewma_ms = 5.0
+        fleet._replicas[2].ewma_ms = 500.0
+        sup.sweep()
+        assert sup.stats["ejections"] == 1
+        sup.sweep()                     # re-drain + converge
+        snap = fleet.snapshot()
+        active = [r for r in snap if r["state"] == "active"]
+        assert len(active) == 4
+        assert all(r["rid"] != 2 for r in active)
+        assert sup.stats["respawns"] >= 1
+    finally:
+        gw.close()
+
+
+def test_supervisor_lifecycle_guards():
+    gw = _inproc_fleet(1)
+    try:
+        with pytest.raises(ValueError):
+            FleetSupervisor(gw, "echo", target=0)
+        sup = FleetSupervisor(gw, "echo", target=1,
+                              interval=0.05).start()
+        with pytest.raises(RuntimeError):
+            sup.start()
+        time.sleep(0.3)
+        sup.stop()
+        assert sup.stats["sweeps"] >= 1
+    finally:
+        gw.close()
+
+
+def test_supervisor_replay_detects_divergence():
+    """A tampered trace fails replay loudly — the planner really is the
+    single source of the actuation decisions."""
+    gw = _inproc_fleet(2)
+    sup = FleetSupervisor(gw, "echo", target=2, record=True)
+    try:
+        sup.sweep()
+        no, probes, snap, _plan = sup.trace[0]
+        sup.trace[0] = (no, probes, snap, (("join", 5),))
+        with pytest.raises(AssertionError):
+            sup.replay()
+    finally:
+        gw.close()
+
+
+# ---------------------------------------------------------------------------
+# proc: real forked replicas, real kill -9 (CI fleet job)
+# ---------------------------------------------------------------------------
+
+def _proc_fleet(n=3):
+    gw = ServiceGateway("mpklink_opt")
+    for i in range(n):
+        gw.register_replica("echo", _tagged(i), transport_kwargs=_PROC_KW)
+    return gw.start()
+
+
+def _warm(cli, fleet, n):
+    """Drive enough traffic that every replica has forked its child
+    (procwire forks lazily on first request)."""
+    for _ in range(12 * n):
+        cli.call("echo", np.arange(4, dtype=np.uint8))
+        if all(r.session._proc is not None
+               for r in fleet._replicas.values()
+               if r.state == REPLICA_ACTIVE):
+            return
+    raise AssertionError("fleet never warmed")
+
+
+def _wait_healed(sup, fleet, target, min_respawns, timeout=30.0):
+    """Wait until the supervisor has actually detected + replaced the
+    corpse (a freshly killed child still snapshots as 'active' until a
+    probe or routed request notices)."""
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        active = [r for r in fleet.snapshot() if r["state"] == "active"]
+        if (sup.stats["respawns"] >= min_respawns
+                and len(active) == target):
+            return active
+        time.sleep(0.05)
+    raise AssertionError(
+        f"never healed to {target} with >= {min_respawns} respawns: "
+        f"{sup.stats} {fleet.snapshot()}")
+
+
+@pytest.mark.proc
+def test_supervisor_converges_under_continuous_kill9():
+    """Two rounds of kill -9 against live proc replicas: the probe loop
+    detects each death, releases the corpse (one re-key each), respawns
+    fresh proc-backed capacity, and traffic stays correct after every
+    heal. The recorded trace replays exactly."""
+    gw = _proc_fleet(3)
+    fleet = gw.fleet("echo")
+    sup = FleetSupervisor(gw, "echo", target=3, interval=0.05,
+                          probe_timeout=2.0, record=True)
+    try:
+        cli = gw.connect("c0", retries=3)
+        _warm(cli, fleet, 3)
+        sup.start()
+        for round_no in range(2):
+            victims = [r for r in fleet._replicas.values()
+                       if r.state == REPLICA_ACTIVE
+                       and r.session._proc is not None]
+            os.kill(victims[0].session._proc.pid, signal.SIGKILL)
+            _wait_healed(sup, fleet, 3, round_no + 1)
+            _warm(cli, fleet, 3)        # fresh replicas fork lazily too
+            for k in range(10):
+                out = cli.call("echo", np.arange(4, dtype=np.uint8))
+                assert np.asarray(out)[:4].tolist() == [0, 1, 2, 3]
+        sup.stop()
+        assert sup.stats["deaths_detected"] >= 2
+        assert sup.stats["respawns"] >= 2
+        assert sup.stats["releases"] >= 2
+        sup.replay()
+        cli.close()
+    finally:
+        sup.stop()
+        gw.close()
+
+
+@pytest.mark.proc
+def test_supervisor_probe_detects_silent_death():
+    """A kill -9 victim with NO traffic against it is still detected:
+    the probe RPC itself proves the link dead (the router alone would
+    only learn at the next routed request)."""
+    gw = _proc_fleet(2)
+    fleet = gw.fleet("echo")
+    sup = FleetSupervisor(gw, "echo", target=2, interval=0.05,
+                          probe_timeout=2.0)
+    try:
+        cli = gw.connect("c0", retries=3)
+        _warm(cli, fleet, 2)
+        victim = next(r for r in fleet._replicas.values()
+                      if r.session._proc is not None)
+        os.kill(victim.session._proc.pid, signal.SIGKILL)
+        # no traffic at all — only the supervisor's probes run
+        sup.start()
+        _wait_healed(sup, fleet, 2, 1)
+        sup.stop()
+        assert sup.stats["deaths_detected"] >= 1
+        assert sup.stats["respawns"] >= 1
+        cli.close()
+    finally:
+        sup.stop()
+        gw.close()
