@@ -10,13 +10,20 @@
                    behind one service name under open-loop Poisson/bursty
                    load + kill -9 chaos, with the 2x-scaling and
                    zero-lost acceptance gates
+  qos            — benchmarks/qos_bench.py: noisy-neighbor cell (one
+                   abuser flooding at 20x fair share vs 15 victims) with
+                   the victim-p99 and abuser-throttle acceptance gates
   tableX         — benchmarks/kernel_bench.py: guarded copy vs plain copy
                    (the "security rides the copy" comparative analysis §VIII-A)
                    + attention / SSD kernel twins
   roofline       — benchmarks/roofline_report.py: per-cell roofline terms
                    from the dry-run artifacts (if present)
 
-``python -m benchmarks.run [--full]``
+``python -m benchmarks.run [--full] [--only <bench>]``
+
+``--only`` runs a single sub-bench by name (``ipc_wordcount``,
+``ipc_baseline``, ``fleet``, ``qos``, ``kernel``, ``roofline``) — the CI
+jobs use it to gate one bench without paying for the whole suite.
 
 Exits nonzero when any sub-bench fails — a crashed bench or a FAILed
 paper claim must fail the invoking job, not scroll past in the log.
@@ -25,56 +32,37 @@ import argparse
 import sys
 
 
-def main() -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--full", action="store_true",
-                    help="word-count sweep to 1e8 words (paper endpoint)")
-    ap.add_argument("--skip-ipc", action="store_true")
-    args = ap.parse_args()
+def _run_ipc_wordcount(full: bool, failures):
+    from benchmarks import ipc_wordcount
+    try:
+        results = ipc_wordcount.main(full=full)
+        # claim lines print PASS / FAIL / DEVIATION; only FAIL (a
+        # measured contradiction, not an env deviation) is fatal
+        failed = [line for line
+                  in ipc_wordcount.validate_claims(results)
+                  if ": FAIL" in line]
+        if failed:
+            failures.append(f"ipc_wordcount: {len(failed)} claim(s) FAILed")
+    except Exception as e:
+        failures.append(f"ipc_wordcount crashed: {type(e).__name__}: {e}")
 
-    failures = []
 
-    print("# === ipc_wordcount (paper Figs 1-3, Table I) ===")
-    if not args.skip_ipc:
-        from benchmarks import ipc_wordcount
+def _module_bench(name):
+    """Runner for the gate benches whose ``main(argv)`` takes
+    ``--quick``/full argv (ipc_baseline_bench, fleet_bench, qos_bench)."""
+    def run(full: bool, failures):
+        import importlib
+        mod = importlib.import_module(f"benchmarks.{name}")
         try:
-            results = ipc_wordcount.main(full=args.full)
-            # claim lines print PASS / FAIL / DEVIATION; only FAIL (a
-            # measured contradiction, not an env deviation) is fatal
-            failed = [line for line
-                      in ipc_wordcount.validate_claims(results)
-                      if ": FAIL" in line]
-            if failed:
-                failures.append(f"ipc_wordcount: {len(failed)} claim(s) "
-                                f"FAILed")
-        except Exception as e:
-            failures.append(f"ipc_wordcount crashed: "
-                            f"{type(e).__name__}: {e}")
-    print()
-    print("# === ipc_baseline_bench (paper §VI: process-backed vs REST) ===")
-    if not args.skip_ipc:
-        from benchmarks import ipc_baseline_bench
-        try:
-            rc = ipc_baseline_bench.main(
-                [] if args.full else ["--quick"])
+            rc = mod.main([] if full else ["--quick"])
             if rc not in (None, 0):
-                failures.append(f"ipc_baseline_bench exited {rc}")
+                failures.append(f"{name} exited {rc}")
         except Exception as e:
-            failures.append(f"ipc_baseline_bench crashed: "
-                            f"{type(e).__name__}: {e}")
-    print()
-    print("# === fleet_bench (replicated serving fleet, 1 vs 4 replicas) ===")
-    if not args.skip_ipc:
-        from benchmarks import fleet_bench
-        try:
-            rc = fleet_bench.main([] if args.full else ["--quick"])
-            if rc not in (None, 0):
-                failures.append(f"fleet_bench exited {rc}")
-        except Exception as e:
-            failures.append(f"fleet_bench crashed: "
-                            f"{type(e).__name__}: {e}")
-    print()
-    print("# === kernel_bench (paper §VIII-A comparative analysis) ===")
+            failures.append(f"{name} crashed: {type(e).__name__}: {e}")
+    return run
+
+
+def _run_kernel(full: bool, failures):
     from benchmarks import kernel_bench
     try:
         rc = kernel_bench.main()
@@ -82,8 +70,9 @@ def main() -> int:
             failures.append(f"kernel_bench exited {rc}")
     except Exception as e:
         failures.append(f"kernel_bench crashed: {type(e).__name__}: {e}")
-    print()
-    print("# === roofline (dry-run artifacts) ===")
+
+
+def _run_roofline(full: bool, failures):
     from benchmarks import roofline_report
     try:
         rc = roofline_report.main()
@@ -91,6 +80,46 @@ def main() -> int:
             failures.append(f"roofline_report exited {rc}")
     except Exception as e:
         failures.append(f"roofline_report crashed: {type(e).__name__}: {e}")
+
+
+# (name, banner, runner, skipped by --skip-ipc)
+BENCHES = [
+    ("ipc_wordcount", "ipc_wordcount (paper Figs 1-3, Table I)",
+     _run_ipc_wordcount, True),
+    ("ipc_baseline",
+     "ipc_baseline_bench (paper §VI: process-backed vs REST)",
+     _module_bench("ipc_baseline_bench"), True),
+    ("fleet", "fleet_bench (replicated serving fleet, 1 vs 4 replicas)",
+     _module_bench("fleet_bench"), True),
+    ("qos", "qos_bench (multi-tenant noisy neighbor, §10 QoS gates)",
+     _module_bench("qos_bench"), True),
+    ("kernel", "kernel_bench (paper §VIII-A comparative analysis)",
+     _run_kernel, False),
+    ("roofline", "roofline (dry-run artifacts)",
+     _run_roofline, False),
+]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="word-count sweep to 1e8 words (paper endpoint)")
+    ap.add_argument("--skip-ipc", action="store_true")
+    ap.add_argument("--only", default=None,
+                    choices=[name for name, _, _, _ in BENCHES],
+                    help="run a single sub-bench by name")
+    args = ap.parse_args()
+
+    failures = []
+    for name, banner, runner, ipc_gated in BENCHES:
+        if args.only is not None and name != args.only:
+            continue
+        print(f"# === {banner} ===")
+        if args.only is None and ipc_gated and args.skip_ipc:
+            print()
+            continue
+        runner(args.full, failures)
+        print()
 
     if failures:
         print()

@@ -245,6 +245,7 @@ def all_rules() -> List[Rule]:
                                                   LockOrderCycleRule)
     from repro.analysis.rules_protocol import (FreshConstantWaitRule,
                                                SwallowedErrorRule,
+                                               SwallowedShedRule,
                                                TimeTimeDeadlineRule,
                                                TimeoutNotForwardedRule,
                                                UnverifiedPayloadRule,
@@ -262,6 +263,7 @@ def all_rules() -> List[Rule]:
         TimeoutNotForwardedRule(),
         FreshConstantWaitRule(),
         SwallowedErrorRule(),
+        SwallowedShedRule(),
         SpecConstantSyncRule(),
         SpecTaxonomySyncRule(),
     ]

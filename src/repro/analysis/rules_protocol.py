@@ -380,3 +380,66 @@ class SwallowedErrorRule(Rule):
                 ctx, node.lineno,
                 f"{what}: pass swallows every typed error on this path"))
         return out
+
+
+_SHED_TYPES = {"TransportError", "ServiceUnavailable", "Overloaded",
+               "RateLimited"}
+_ADMISSION_FN = re.compile(r"(admit|dispatch|submit|call|invoke|acquire|"
+                           r"route)", re.IGNORECASE)
+
+
+class SwallowedShedRule(Rule):
+    """MPK107: an admission-path handler eats a typed shed signal.
+
+    docs/protocol.md §7/§10: ``RateLimited`` and ``Overloaded`` carry a
+    ``retry_after`` hint the caller's backoff depends on, and counting a
+    shed requires observing it.  An admission-path function (admit/
+    dispatch/submit/call/invoke/acquire/route) that catches one of the
+    shed types and neither re-raises nor touches the bound exception
+    silently converts back-pressure into success — the client retries at
+    full rate and the noisy-neighbor gate loses its signal.  Handlers
+    that log, map, or wrap the error (any reference to the bound name)
+    or re-raise are clean."""
+
+    id = "MPK107"
+    severity = "warning"
+    hint = ("re-raise the shed (or map it via its bound name) so "
+            "RateLimited/Overloaded back-pressure reaches the caller")
+
+    def check_module(self, ctx: ModuleContext) -> List[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            caught = self._shed_names(node.type)
+            if not caught:
+                continue
+            fn = _enclosing_function(node)
+            if fn is None or not _ADMISSION_FN.search(fn.name):
+                continue
+            if any(isinstance(n, ast.Raise)
+                   for s in node.body for n in ast.walk(s)):
+                continue
+            if node.name and any(
+                    isinstance(n, ast.Name) and n.id == node.name
+                    for s in node.body for n in ast.walk(s)):
+                continue            # error is logged/mapped/wrapped
+            out.append(self.finding(
+                ctx, node.lineno,
+                f"{fn.name}() catches {'/'.join(sorted(caught))} without "
+                f"re-raising or mapping it — the shed signal dies here"))
+        return out
+
+    def _shed_names(self, type_node: Optional[ast.AST]) -> Set[str]:
+        """Shed-taxonomy class names named by the except clause."""
+        names: Set[str] = set()
+        if type_node is None:
+            return names
+        nodes = type_node.elts if isinstance(type_node, ast.Tuple) \
+            else [type_node]
+        for n in nodes:
+            if isinstance(n, ast.Name) and n.id in _SHED_TYPES:
+                names.add(n.id)
+            elif isinstance(n, ast.Attribute) and n.attr in _SHED_TYPES:
+                names.add(n.attr)
+        return names

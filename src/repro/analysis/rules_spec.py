@@ -40,6 +40,12 @@ _CONSTANT_FORMS = {
     "DEADLINE_US_MAX": lambda v: [f"0x{v:08X}"],
     "HEDGE_RESERVOIR": lambda v: [f"HEDGE_RESERVOIR = {v}"],
     "REKEY_LIMIT": lambda v: [f"REKEY_LIMIT = {v}"],
+    # multi-tenant QoS control plane (§10): priority lane + fair queuing
+    "PRIORITY_LANE": lambda v: [f"PRIORITY_LANE = {v}"],
+    "PRIO_NORMAL": lambda v: [f"PRIO_NORMAL = {v}"],
+    "PRIO_HIGH": lambda v: [f"PRIO_HIGH = {v}"],
+    "PRIO_BULK": lambda v: [f"PRIO_BULK = {v}"],
+    "WFQ_QUANTUM": lambda v: [f"WFQ_QUANTUM = {v}"],
 }
 
 _ERROR_ROOT = "TransportError"

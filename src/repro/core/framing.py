@@ -4,7 +4,8 @@ A frame is a uint32 matrix of 128 lanes (the TPU-native layout the guard
 kernel consumes):
 
   row 0   — header: [MAGIC, seed, seq, nbytes, dtype_code, ndim,
-                     shape[0..3], deadline_us, mac^meta_mix, 0...]
+                     shape[0..3], deadline_us, mac^meta_mix, priority,
+                     0...]
   rows 1+ — payload: raw bytes viewed as little-endian uint32, zero-padded
             to a whole number of 128-lane rows.
 
@@ -16,14 +17,17 @@ check is where MPK access control and the paper's per-message signature
 collapse into one fused operation on-device.
 
 Header integrity: the stored word is ``payload_mac ⊕ _meta_mix(header)``, a
-Horner mix of the eleven metadata words (magic..shape[3] plus the lane-10
-deadline word) — so flipping any header bit (dtype, shape, nbytes,
-deadline, ...) fails verification exactly like a payload flip, and the
-reserved lanes (12..127) must be zero. Lane 10 (:data:`DEADLINE_LANE`)
-carries the sender's remaining deadline budget in microseconds (0 = no
-deadline) so a propagated deadline rides every envelope MAC-covered; see
-docs/protocol.md §9. The payload MAC itself is unchanged and stays
-bit-identical to the guard kernel / fast_mac.
+Horner mix of the twelve metadata words (magic..shape[3], the lane-10
+deadline word, plus the lane-12 priority word) — so flipping any header bit
+(dtype, shape, nbytes, deadline, priority, ...) fails verification exactly
+like a payload flip, and the reserved lanes (13..127) must be zero. Lane 10
+(:data:`DEADLINE_LANE`) carries the sender's remaining deadline budget in
+microseconds (0 = no deadline) so a propagated deadline rides every
+envelope MAC-covered; see docs/protocol.md §9. Lane 12
+(:data:`PRIORITY_LANE`) carries the sender's QoS class
+(:data:`PRIO_NORMAL` / :data:`PRIO_HIGH` / :data:`PRIO_BULK`), likewise
+MAC-covered; see docs/protocol.md §10. The payload MAC itself is unchanged
+and stays bit-identical to the guard kernel / fast_mac.
 
 Zero-copy path (the arena data plane): :func:`seal_into` writes the header
 and payload of a frame directly into a caller-provided buffer — typically a
@@ -75,6 +79,16 @@ LANES = 128
 # tampered deadline fails verification like any other header flip.
 DEADLINE_LANE = 10
 DEADLINE_US_MAX = 0xFFFFFFFF
+
+# Header lane carrying the sender's QoS priority class (docs/protocol.md
+# §10). PRIO_NORMAL = 0 so a legacy zeroed lane decodes as the default
+# class. Folded into the meta mix like the lane-10 deadline word, so a
+# tampered priority fails verification like any other header flip.
+PRIORITY_LANE = 12
+PRIO_NORMAL = 0
+PRIO_HIGH = 1
+PRIO_BULK = 2
+_PRIO_MAX = PRIO_BULK
 
 _DTYPES = {0: np.float32, 1: np.int32, 2: np.uint32, 3: np.uint8,
            4: np.dtype("<f8"), 5: np.int64, 6: np.uint16}
@@ -374,16 +388,16 @@ def warm_mac_caches(seed: int = 0) -> None:
     _power_table32(1)
     mac_init_np(seed)
     _mac_row1_const(seed & 0xFFFFFFFF)
-    _meta_mix_words((0,) * 11, 0)
+    _meta_mix_words((0,) * 12, 0)
 
 
 _MAC_PRIME: Optional[int] = None    # lazy: kernels.ref drags in jax
 
 
 def _meta_mix_words(words, seed: int) -> int:
-    """:func:`_meta_mix` over already-materialized python ints (the eleven
-    MAC-covered header words) — the hot-path form for callers that have the
-    header words in hand."""
+    """:func:`_meta_mix` over already-materialized python ints (the twelve
+    MAC-covered header words: magic..deadline plus the lane-12 priority) —
+    the hot-path form for callers that have the header words in hand."""
     global _MAC_PRIME
     prime = _MAC_PRIME
     if prime is None:
@@ -396,11 +410,12 @@ def _meta_mix_words(words, seed: int) -> int:
 
 
 def _meta_mix(header: np.ndarray, seed: int) -> int:
-    """Horner mix of the eleven metadata words (magic..shape[3] plus the
-    lane-10 deadline word) — folded into the stored MAC word so header
-    tampering fails exactly like payload tampering. Pure uint arithmetic,
-    deterministic everywhere."""
-    return _meta_mix_words(np.asarray(header[:11]).tolist(), seed)
+    """Horner mix of the twelve metadata words (magic..shape[3], the
+    lane-10 deadline word, plus the lane-12 priority word) — folded into
+    the stored MAC word so header tampering fails exactly like payload
+    tampering. Pure uint arithmetic, deterministic everywhere."""
+    h = np.asarray(header)
+    return _meta_mix_words(h[:11].tolist() + [int(h[PRIORITY_LANE])], seed)
 
 
 # ---------------------------------------------------------------------------
@@ -446,28 +461,34 @@ def _meta_of(arr: np.ndarray) -> dict:
 
 
 def _write_header(hrow: np.ndarray, meta: dict, seed: int, seq: int,
-                  mac: int, deadline_us: int = 0) -> None:
+                  mac: int, deadline_us: int = 0, priority: int = 0) -> None:
     """Fill one 128-lane header row in place (reserved lanes zeroed — the
     row may be a recycled arena slot holding stale words). ``deadline_us``
-    lands in lane 10 and is folded into the meta mix, so the propagated
-    deadline is MAC-covered like every other header word."""
+    lands in lane 10 and ``priority`` in lane 12; both are folded into the
+    meta mix, so the propagated deadline and QoS class are MAC-covered like
+    every other header word."""
     shape = list(meta["shape"])[:4] + [0] * (4 - min(4, len(meta["shape"])))
     if len(meta["shape"]) > 4:
         raise FrameError("rank > 4 payloads unsupported by frame header")
+    prio = int(priority)
+    if not 0 <= prio <= _PRIO_MAX:
+        raise FrameError(f"invalid priority class {priority}")
     words = [MAGIC, seed & 0xFFFFFFFF, seq & 0xFFFFFFFF,
              meta["nbytes"] & 0xFFFFFFFF, meta["dtype_code"],
              len(meta["shape"]), *[s & 0xFFFFFFFF for s in shape],
              int(deadline_us) & 0xFFFFFFFF]
-    hrow[12:] = 0
-    hrow[:12] = words + [(mac ^ _meta_mix_words(words, seed)) & 0xFFFFFFFF]
+    hrow[13:] = 0
+    hrow[:13] = words + [
+        (mac ^ _meta_mix_words(words + [prio], seed)) & 0xFFFFFFFF, prio]
 
 
 def _assemble(payload: np.ndarray, meta: dict, seed: int, seq: int,
-              mac: int, deadline_us: int = 0) -> np.ndarray:
+              mac: int, deadline_us: int = 0,
+              priority: int = 0) -> np.ndarray:
     """Header row from (meta, seed, seq, precomputed payload MAC) + payload,
     materialized into ONE preallocated frame buffer."""
     frame = np.empty((payload.shape[0] + 1, LANES), np.uint32)
-    _write_header(frame[0], meta, seed, seq, mac, deadline_us)
+    _write_header(frame[0], meta, seed, seq, mac, deadline_us, priority)
     frame[1:] = payload
     STATS.bump(bytes_copied=payload.nbytes)
     return frame
@@ -492,7 +513,7 @@ def _check_buf(buf: np.ndarray, rows: int) -> None:
 
 
 def seal_into(buf: np.ndarray, arr: np.ndarray, *, seed: int, seq: int,
-              mac_impl=None, deadline_us: int = 0,
+              mac_impl=None, deadline_us: int = 0, priority: int = 0,
               _inplace: bool = True) -> int:
     """Seal ``arr`` as a frame directly into ``buf`` (no staging buffers).
 
@@ -514,7 +535,7 @@ def seal_into(buf: np.ndarray, arr: np.ndarray, *, seed: int, seq: int,
     pbytes[: meta["nbytes"]] = arr.view(np.uint8).reshape(-1)
     pbytes[meta["nbytes"]:] = 0
     mac = (mac_impl or _mac_np)(payload, seed)
-    _write_header(buf[0], meta, seed, seq, mac, deadline_us)
+    _write_header(buf[0], meta, seed, seq, mac, deadline_us, priority)
     STATS.bump(frames_sealed=1, bytes_copied=meta["nbytes"],
                # build_frame seals a FRESH buffer: sealed, not in-place
                frames_sealed_inplace=int(_inplace))
@@ -523,7 +544,8 @@ def seal_into(buf: np.ndarray, arr: np.ndarray, *, seed: int, seq: int,
 
 def seal_into_batch(bufs: Sequence[np.ndarray], arrays: Sequence[np.ndarray],
                     *, seed: int, seqs: Sequence[int], mac_impl=None,
-                    deadlines_us: Optional[Sequence[int]] = None) -> List[int]:
+                    deadlines_us: Optional[Sequence[int]] = None,
+                    priorities: Optional[Sequence[int]] = None) -> List[int]:
     """Seal N frames in place with ONE fused vectorized MAC pass.
 
     The arena twin of :func:`seal_batch`: payload bytes land directly in
@@ -547,14 +569,18 @@ def seal_into_batch(bufs: Sequence[np.ndarray], arrays: Sequence[np.ndarray],
         macs = [mac_impl(p, seed) for p in payloads]
     if deadlines_us is None:
         deadlines_us = [0] * len(metas)
-    for buf, meta, seq, mac, dl in zip(bufs, metas, seqs, macs, deadlines_us):
-        _write_header(buf[0], meta, seed, seq, mac, dl)
+    if priorities is None:
+        priorities = [0] * len(metas)
+    for buf, meta, seq, mac, dl, pr in zip(bufs, metas, seqs, macs,
+                                           deadlines_us, priorities):
+        _write_header(buf[0], meta, seed, seq, mac, dl, pr)
     STATS.bump(frames_sealed=len(arrays), frames_sealed_inplace=len(arrays))
     return rows_list
 
 
 def seal_prefilled(buf: np.ndarray, nbytes: int, *, seed: int, seq: int,
-                   mac_impl=None, deadline_us: int = 0) -> int:
+                   mac_impl=None, deadline_us: int = 0,
+                   priority: int = 0) -> int:
     """Seal a frame whose payload bytes the caller ALREADY wrote into
     ``buf``'s payload area (``buf[1:]`` viewed as bytes) — the fully
     zero-copy producer path: an upper layer assembles its message directly
@@ -570,7 +596,7 @@ def seal_prefilled(buf: np.ndarray, nbytes: int, *, seed: int, seq: int,
     mac = (mac_impl or _mac_np)(payload, seed)
     meta = {"dtype_code": _DTYPE_CODES[np.dtype(np.uint8)],
             "nbytes": int(nbytes), "shape": (int(nbytes),)}
-    _write_header(buf[0], meta, seed, seq, mac, deadline_us)
+    _write_header(buf[0], meta, seed, seq, mac, deadline_us, priority)
     STATS.bump(frames_sealed=1, frames_sealed_inplace=1)
     return rows
 
@@ -773,7 +799,8 @@ _PENDING_BASELINE_REFS = _measure_pending_baseline()
 # ---------------------------------------------------------------------------
 
 def _build_frame_legacy(arr: np.ndarray, *, seed: int, seq: int,
-                        mac_impl=None, deadline_us: int = 0) -> np.ndarray:
+                        mac_impl=None, deadline_us: int = 0,
+                        priority: int = 0) -> np.ndarray:
     """The PR 3 copy pattern (pad concat + header concat), kept only for
     A/B benchmarking (``framing.ZERO_COPY = False``) — byte-identical
     output, 3–4× the copies."""
@@ -787,14 +814,14 @@ def _build_frame_legacy(arr: np.ndarray, *, seed: int, seq: int,
     payload = raw.view("<u4").reshape(-1, LANES)
     mac = (mac_impl or _mac_np)(payload, seed)
     header = np.zeros(LANES, np.uint32)
-    _write_header(header, meta, seed, seq, mac, deadline_us)
+    _write_header(header, meta, seed, seq, mac, deadline_us, priority)
     STATS.bump(concat_calls=1, frames_sealed=1,
                bytes_copied=payload.nbytes + header.nbytes)
     return np.concatenate([header[None], payload.view(np.uint32)], axis=0)
 
 
 def build_frame(arr: np.ndarray, *, seed: int, seq: int, mac_impl=None,
-                deadline_us: int = 0) -> np.ndarray:
+                deadline_us: int = 0, priority: int = 0) -> np.ndarray:
     """array → full frame (header row + payload rows) uint32.
 
     One buffer, one payload write (``seal_into`` into a fresh allocation).
@@ -802,12 +829,12 @@ def build_frame(arr: np.ndarray, *, seed: int, seq: int, mac_impl=None,
     instead — identical bytes, for benchmark baselines."""
     if not ZERO_COPY:
         return _build_frame_legacy(arr, seed=seed, seq=seq, mac_impl=mac_impl,
-                                   deadline_us=deadline_us)
+                                   deadline_us=deadline_us, priority=priority)
     arr = np.ascontiguousarray(np.asarray(arr))
     meta = _meta_of(arr)
     frame = np.empty((frame_rows(meta["nbytes"]), LANES), np.uint32)
     seal_into(frame, arr, seed=seed, seq=seq, mac_impl=mac_impl,
-              deadline_us=deadline_us, _inplace=False)
+              deadline_us=deadline_us, priority=priority, _inplace=False)
     return frame
 
 
@@ -825,8 +852,11 @@ def _precheck(frame: np.ndarray, seed: int, expect_seq,
         raise FrameError("seed mismatch — wrong domain key, session or epoch")
     if expect_seq is not None and header[2] != (expect_seq & 0xFFFFFFFF):
         raise FrameError(f"sequence mismatch (got {header[2]}, want {expect_seq})")
-    # lane 10 is the (MAC-covered) deadline word, checked by _check_meta
-    if any(header[12:]):
+    # lanes 10/12 are the (MAC-covered) deadline and priority words,
+    # checked by _check_meta; the priority class range is a cheap reject
+    if header[PRIORITY_LANE] > _PRIO_MAX:
+        raise FrameError("invalid priority class — header tampered")
+    if any(header[13:]):
         raise FrameError("nonzero reserved header lanes — header tampered")
 
 
@@ -838,7 +868,8 @@ def _check_meta(frame: np.ndarray, seed: int, mac: int,
     MAC). Shared by every guard so they cannot diverge. Returns the
     validated meta dict."""
     header = frame[0].tolist() if _hdr is None else _hdr
-    if (mac ^ _meta_mix_words(header[:11], seed)) & 0xFFFFFFFF != header[11]:
+    mixed = _meta_mix_words(header[:11] + [header[PRIORITY_LANE]], seed)
+    if (mac ^ mixed) & 0xFFFFFFFF != header[11]:
         raise FrameError("MAC mismatch — payload or header tampered/truncated")
     ndim = header[5]
     nbytes = header[3]
@@ -887,6 +918,15 @@ def frame_deadline_us(frame: np.ndarray) -> int:
     :func:`verify_view` / :func:`verify_batch` — the word is MAC-covered,
     so a verified frame's deadline cannot have been tampered."""
     return int(np.asarray(frame)[0][DEADLINE_LANE])
+
+
+def frame_priority(frame: np.ndarray) -> int:
+    """The lane-12 priority word of a frame (:data:`PRIO_NORMAL` /
+    :data:`PRIO_HIGH` / :data:`PRIO_BULK`). Only meaningful AFTER the frame
+    passed :func:`parse_frame` / :func:`verify_view` / :func:`verify_batch`
+    — the word is MAC-covered, so a verified frame's class cannot have been
+    tampered."""
+    return int(np.asarray(frame)[0][PRIORITY_LANE])
 
 
 def deadline_to_us(remaining_s: Optional[float]) -> int:
@@ -986,8 +1026,9 @@ def mac_batch(payloads: Sequence[np.ndarray], seed: int) -> List[int]:
 
 def seal_batch(arrays: Sequence[np.ndarray], *, seed: int,
                start_seq: Optional[int] = None,
-               seqs: Optional[Sequence[int]] = None,
-               mac_impl=None) -> List[np.ndarray]:
+               seqs: Optional[Sequence[int]] = None, mac_impl=None,
+               priorities: Optional[Sequence[int]] = None
+               ) -> List[np.ndarray]:
     """Frame N messages, MAC'ing all payloads in one vectorized pass.
 
     Sequence numbers come from ``start_seq`` (consecutive:
@@ -1005,8 +1046,10 @@ def seal_batch(arrays: Sequence[np.ndarray], *, seed: int,
         macs = mac_batch([p for p, _ in packed], seed)
     else:
         macs = [mac_impl(p, seed) for p, _ in packed]
+    if priorities is None:
+        priorities = [0] * len(packed)
     STATS.bump(frames_sealed=len(packed))
-    return [_assemble(p, meta, seed, seqs[i], macs[i])
+    return [_assemble(p, meta, seed, seqs[i], macs[i], 0, priorities[i])
             for i, (p, meta) in enumerate(packed)]
 
 

@@ -98,7 +98,7 @@ from repro.core.ca import CertificateAuthority, enroll
 from repro.core.domains import (AccessViolation, DomainKey, KeyRegistry,
                                 ProtectionDomain, RW, READ, WRITE, mac_seed)
 from repro.core.transports import (DeadlineExpired, HandlerCrash,
-                                   MPKLinkTransport, Overloaded,
+                                   MPKLinkTransport, Overloaded, RateLimited,
                                    ResponseTimeout, ServiceCrashed,
                                    ServiceUnavailable, Transport,
                                    TransportError, _pack_error, _raise_remote,
@@ -179,6 +179,50 @@ def _pop_deadline(prev: Optional[float]) -> None:
     _BUDGET.deadline = prev
 
 
+def current_identity() -> Optional[str]:
+    """CA identity (client name) of the request the calling thread is
+    currently executing under the gateway (None = not in a request, or an
+    identity-less hop). Set by the execution cores around every handler
+    invocation; downstream hops (fleet dispatch WFQ) key their per-tenant
+    deficit counters on it (docs/protocol.md §10)."""
+    return getattr(_BUDGET, "identity", None)
+
+
+def current_priority() -> int:
+    """Priority class of the request the calling thread is currently
+    executing (the verified frame's MAC-covered lane-12 word; cohort paths
+    publish the most-urgent class present). ``PRIO_NORMAL`` outside a
+    request. In-process handlers (EngineService admission) order their
+    queues with this (docs/protocol.md §10)."""
+    return getattr(_BUDGET, "priority", framing.PRIO_NORMAL)
+
+
+def _push_qos(identity: Optional[str], priority: int) -> tuple:
+    prev = (getattr(_BUDGET, "identity", None),
+            getattr(_BUDGET, "priority", framing.PRIO_NORMAL))
+    _BUDGET.identity = identity
+    _BUDGET.priority = priority
+    return prev
+
+
+def _pop_qos(prev: tuple) -> None:
+    _BUDGET.identity, _BUDGET.priority = prev
+
+
+# priority classes ordered by urgency: HIGH expedites, BULK yields.
+# Rank order (lower = more urgent) is the ONE comparison every QoS
+# consumer (coalescer window, serving admission) shares.
+_PRIO_RANK = {framing.PRIO_HIGH: 0, framing.PRIO_NORMAL: 1,
+              framing.PRIO_BULK: 2}
+
+
+def priority_rank(priority: int) -> int:
+    """Scheduling rank of a priority class — lower is more urgent.
+    Unknown classes rank as PRIO_NORMAL (defensive: verified frames can
+    only carry the three spec classes)."""
+    return _PRIO_RANK.get(int(priority), 1)
+
+
 def _frame_deadline(frame: np.ndarray) -> Optional[float]:
     """Absolute deadline from a VERIFIED frame's lane-10 budget word
     (relative-budget propagation: the receiver restarts the remaining
@@ -186,6 +230,12 @@ def _frame_deadline(frame: np.ndarray) -> Optional[float]:
     clocks don't compare across processes)."""
     us = framing.frame_deadline_us(frame)
     return None if us == 0 else time.monotonic() + us / 1e6
+
+
+def _frame_priority(frame: np.ndarray) -> int:
+    """Priority class from a VERIFIED frame's lane-12 word (MAC-covered —
+    a tampered class cannot reach scheduling decisions)."""
+    return framing.frame_priority(frame)
 
 
 class RetryBudget:
@@ -212,7 +262,11 @@ class RetryBudget:
         self.denied = 0                 # extra attempts refused
 
     def note_primary(self) -> None:
-        """A primary attempt happened: earn ``ratio`` tokens."""
+        """A primary attempt happened: earn ``ratio`` tokens. Earning is
+        unconditional — a bucket that ran dry refills from later primaries
+        (every layer that drives primaries through a budget MUST call this
+        on completion, not only on the admission branch; a dry bucket that
+        never earns again disables its retries/hedges forever)."""
         with self._lock:
             self._tokens = min(self.burst, self._tokens + self.ratio)
 
@@ -232,6 +286,256 @@ class RetryBudget:
             return self._tokens
 
 
+class TokenBucket:
+    """Per-identity admission token bucket (docs/protocol.md §10).
+
+    Continuous refill at ``rate`` tokens/second up to ``burst`` capacity,
+    lazily computed from the monotonic clock (no refill thread). One
+    request costs one token (batch/scatter envelopes cost one per item).
+    :meth:`try_take` never blocks: it either admits (→ 0.0) or returns the
+    ``retry_after`` seconds until the bucket holds enough tokens for this
+    take — the hint sealed into the typed :class:`RateLimited` shed, so a
+    well-behaved tenant converges onto its configured rate instead of
+    hammering the admission check."""
+
+    def __init__(self, rate: float, burst: float):
+        if rate <= 0 or burst < 1:
+            raise ValueError("token bucket needs rate > 0, burst >= 1")
+        self.rate = float(rate)
+        self.burst = float(burst)
+        self._tokens = self.burst
+        self._stamp = time.monotonic()
+        self._lock = threading.Lock()
+        self.admitted = 0
+        self.shed = 0
+
+    def try_take(self, n: int = 1) -> float:
+        """Charge ``n`` tokens. → 0.0 when admitted, else the seconds
+        until the bucket refills enough for an ``n``-token take."""
+        with self._lock:
+            now = time.monotonic()
+            self._tokens = min(self.burst,
+                               self._tokens + (now - self._stamp) * self.rate)
+            self._stamp = now
+            if self._tokens >= n:
+                self._tokens -= n
+                self.admitted += n
+                return 0.0
+            self.shed += n
+            return (n - self._tokens) / self.rate
+
+    def tokens(self) -> float:
+        with self._lock:
+            return self._tokens
+
+
+# Deficit replenished per round-robin round per unit weight, in request
+# cost units (docs/protocol.md §10). Small enough that interleaving stays
+# fine-grained, large enough that a weight-1 flow clears a single-item
+# turn in one round.
+WFQ_QUANTUM = 4
+
+
+class WeightedFairQueue:
+    """Deficit-round-robin work queue across flows (tenants / services).
+
+    Classic DRR (docs/protocol.md §10): each flow with queued work holds a
+    deficit counter; the flow at the head of the active ring dequeues while
+    its head item's cost fits its deficit, a flow that cannot afford its
+    head item earns ``quantum x weight(flow)`` and rotates to the ring
+    tail, and a flow that empties leaves the ring forfeiting its remaining
+    deficit (no banked credit for idle flows). Long-run service share is
+    proportional to weight, and one flow's backlog can delay another flow
+    by at most one max-cost item per round — the isolation property the
+    sharded executor needs against a noisy tenant.
+
+    Thread-safe; :meth:`pop` blocks. After :meth:`close`, pops drain
+    whatever is queued and then return ``None`` (the shard shutdown
+    contract)."""
+
+    def __init__(self, weight_of: Optional[Callable[[object], float]] = None,
+                 quantum: float = WFQ_QUANTUM):
+        if quantum <= 0:
+            raise ValueError("quantum must be > 0")
+        self._weight_of = weight_of or (lambda key: 1.0)
+        self.quantum = float(quantum)
+        self._cv = threading.Condition()
+        self._flows: "OrderedDict[object, deque]" = OrderedDict()
+        self._deficit: Dict[object, float] = {}
+        self._size = 0
+        self._closed = False
+        self.pushed = 0
+        self.popped = 0
+        self.rounds = 0                 # quantum replenishments handed out
+
+    def push(self, item, key=None, cost: float = 1) -> None:
+        with self._cv:
+            q = self._flows.get(key)
+            if q is None:
+                q = self._flows[key] = deque()
+                self._deficit[key] = 0.0
+            q.append((item, max(0.0, float(cost))))
+            self._size += 1
+            self.pushed += 1
+            self._cv.notify()
+
+    def _pop_locked(self):
+        while self._flows:
+            key, q = next(iter(self._flows.items()))
+            item, cost = q[0]
+            if self._deficit[key] >= cost:
+                q.popleft()
+                self._deficit[key] -= cost
+                self._size -= 1
+                self.popped += 1
+                if not q:               # empty flows forfeit their deficit
+                    del self._flows[key]
+                    del self._deficit[key]
+                return (item, key)
+            # head flow can't afford its item: one round's quantum, rotate.
+            # Terminates: the deficit grows every visit, the cost doesn't.
+            weight = max(1e-9, float(self._weight_of(key)))
+            self._deficit[key] += self.quantum * weight
+            self._flows.move_to_end(key)
+            self.rounds += 1
+        return None
+
+    def pop(self, timeout: Optional[float] = None):
+        """→ ``(item, key)`` in DRR order; ``None`` once closed AND
+        drained (or on ``timeout``)."""
+        end = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            while True:
+                got = self._pop_locked()
+                if got is not None:
+                    return got
+                if self._closed:
+                    return None
+                if end is None:
+                    self._cv.wait()
+                else:
+                    rem = end - time.monotonic()
+                    if rem <= 0:
+                        return None
+                    self._cv.wait(rem)
+
+    def qsize(self) -> int:
+        with self._cv:
+            return self._size
+
+    def close(self) -> None:
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+
+
+class _FairGate:
+    """DRR turnstile bounding concurrent in-flight cost across tenants —
+    the :class:`WeightedFairQueue` discipline applied to the fleet's
+    replica in-flight slots instead of a work queue (docs/protocol.md
+    §10). ``acquire(tenant, cost)`` blocks until the gate grants the
+    cost under ``capacity``; grants among waiting tenants follow the same
+    per-tenant deficit counters, so one tenant's cohort backlog cannot
+    monopolize the replica slots: the moment a second tenant queues, slots
+    free up to it in weight proportion. A cost larger than ``capacity``
+    is clamped to it (charged identically on release), so an oversized
+    cohort admits alone rather than deadlocking."""
+
+    def __init__(self, capacity: float, *,
+                 weight_of: Optional[Callable[[object], float]] = None,
+                 quantum: float = WFQ_QUANTUM):
+        if capacity < 1:
+            raise ValueError("fair gate needs capacity >= 1")
+        self.capacity = float(capacity)
+        self._weight_of = weight_of or (lambda key: 1.0)
+        self.quantum = float(quantum)
+        self._cv = threading.Condition()
+        self._inflight = 0.0
+        self._waiting: "OrderedDict[object, deque]" = OrderedDict()
+        self._deficit: Dict[object, float] = {}
+        self.granted = 0
+        self.queued_waits = 0           # acquires that had to park
+        self.rounds = 0
+
+    def _charge(self, cost: float) -> float:
+        return min(max(1.0, float(cost)), self.capacity)
+
+    def _grant_locked(self) -> None:
+        while self._waiting and self._inflight < self.capacity:
+            key, q = next(iter(self._waiting.items()))
+            ticket = q[0]               # [granted, charge]
+            charge = ticket[1]
+            if self._inflight + charge > self.capacity:
+                return                  # head of ring waits for a release
+            if self._deficit[key] >= charge:
+                q.popleft()
+                self._deficit[key] -= charge
+                if not q:
+                    del self._waiting[key]
+                    del self._deficit[key]
+                self._inflight += charge
+                ticket[0] = True
+                self.granted += 1
+                continue
+            weight = max(1e-9, float(self._weight_of(key)))
+            self._deficit[key] += self.quantum * weight
+            self._waiting.move_to_end(key)
+            self.rounds += 1
+
+    def acquire(self, key, cost: float = 1,
+                deadline: Optional[float] = None) -> bool:
+        """Block until ``cost`` (clamped to capacity) is granted under the
+        DRR discipline. → False when ``deadline`` passes first (nothing
+        charged — the caller sheds typed)."""
+        charge = self._charge(cost)
+        with self._cv:
+            if not self._waiting and self._inflight + charge <= self.capacity:
+                self._inflight += charge    # fast path: nobody parked
+                self.granted += 1
+                return True
+            ticket = [False, charge]
+            q = self._waiting.get(key)
+            if q is None:
+                q = self._waiting[key] = deque()
+                self._deficit[key] = 0.0
+            q.append(ticket)
+            self.queued_waits += 1
+            self._grant_locked()
+            while not ticket[0]:
+                if deadline is None:
+                    self._cv.wait()
+                    continue
+                rem = deadline - time.monotonic()
+                if rem <= 0:
+                    break
+                self._cv.wait(rem)
+                if ticket[0]:
+                    return True
+            if ticket[0]:
+                return True
+            # timed out while parked: withdraw the ticket (never granted)
+            q = self._waiting.get(key)
+            if q is not None:
+                try:
+                    q.remove(ticket)
+                except ValueError:
+                    pass
+                if not q:
+                    self._waiting.pop(key, None)
+                    self._deficit.pop(key, None)
+            return False
+
+    def release(self, cost: float = 1) -> None:
+        with self._cv:
+            self._inflight -= self._charge(cost)
+            self._grant_locked()
+            self._cv.notify_all()
+
+    def inflight(self) -> float:
+        with self._cv:
+            return self._inflight
+
+
 def _route(a: int, b: int, c: int) -> np.ndarray:
     return np.array([GW_MAGIC, a, b, c], "<u4").view(np.uint8)
 
@@ -245,7 +549,8 @@ def _scatter_route(cid: int, n: int) -> np.ndarray:
 
 
 def _seal_envelope(route4, arr: np.ndarray, *, seed: int, seq: int,
-                   mac_impl, deadline_us: int = 0) -> np.ndarray:
+                   mac_impl, deadline_us: int = 0,
+                   priority: int = 0) -> np.ndarray:
     """``[4 route words] + sealed frame`` assembled in ONE preallocated
     buffer — the frame is sealed in place behind the route words, so an
     envelope costs exactly one payload write (no build/concat chain).
@@ -253,7 +558,8 @@ def _seal_envelope(route4, arr: np.ndarray, *, seed: int, seq: int,
     if not framing.ZERO_COPY:
         frame = framing.build_frame(arr, seed=seed, seq=seq,
                                     mac_impl=mac_impl,
-                                    deadline_us=deadline_us)
+                                    deadline_us=deadline_us,
+                                    priority=priority)
         return np.concatenate([np.array(route4, "<u4").view(np.uint8),
                                frame.reshape(-1).view(np.uint8)])
     arr = np.ascontiguousarray(np.asarray(arr))
@@ -262,7 +568,8 @@ def _seal_envelope(route4, arr: np.ndarray, *, seed: int, seq: int,
     u = env.view("<u4")
     u[:4] = route4
     framing.seal_into(u[4:].reshape(rows, framing.LANES), arr, seed=seed,
-                      seq=seq, mac_impl=mac_impl, deadline_us=deadline_us)
+                      seq=seq, mac_impl=mac_impl, deadline_us=deadline_us,
+                      priority=priority)
     return env
 
 
@@ -278,10 +585,15 @@ class _Shard:
     (the session thread dies, the client gets an immediate typed
     ``ServiceCrashed``) and the shard itself keeps serving."""
 
-    def __init__(self, idx: int):
+    def __init__(self, idx: int,
+                 weight_of: Optional[Callable[[object], float]] = None):
         self.idx = idx
         self.executed = 0
-        self._q: "queue.Queue" = queue.Queue()
+        # DRR across tenants (docs/protocol.md §10): work is keyed by the
+        # submitting identity, so one tenant's scatter backlog interleaves
+        # fairly with other tenants' instead of head-of-line blocking the
+        # shard thread. Unkeyed work (key=None) is its own weight-1 flow.
+        self._q = WeightedFairQueue(weight_of=weight_of)
         self._closed = False
         self._lock = threading.Lock()
         self._thread = threading.Thread(target=self._run, daemon=True,
@@ -303,31 +615,25 @@ class _Shard:
 
     def _run(self):
         while True:
-            item = self._q.get()
-            if item is None:
-                # shutdown sentinel: drain anything already enqueued so no
-                # dispatcher is left waiting on a dead shard forever
-                while True:
-                    try:
-                        item = self._q.get_nowait()
-                    except queue.Empty:
-                        return
-                    if item is not None:
-                        self._exec(item)
-            else:
-                self._exec(item)
+            got = self._q.pop()
+            if got is None:
+                # close(): the WFQ drained everything already queued before
+                # reporting empty, so no dispatcher waits on a dead shard
+                return
+            self._exec(got[0])
 
-    def submit(self, fn):
-        """Enqueue ``fn``; returns (box, done) — wait on ``done``, then
-        ``box[0]`` is (ok, result-or-exception). A scatter racing
-        ``close()`` executes inline on the caller (same semantics, no
-        parallelism) instead of queueing behind the shutdown sentinel."""
+    def submit(self, fn, key=None, cost: float = 1):
+        """Enqueue ``fn`` under tenant flow ``key`` with DRR ``cost``
+        (item count for cohort groups); returns (box, done) — wait on
+        ``done``, then ``box[0]`` is (ok, result-or-exception). A scatter
+        racing ``close()`` executes inline on the caller (same semantics,
+        no parallelism) instead of queueing behind the shutdown drain."""
         box: list = []
         done = threading.Event()
         item = (fn, box, done)
         with self._lock:
             if not self._closed:
-                self._q.put(item)
+                self._q.push(item, key=key, cost=cost)
                 return box, done
         self._exec(item)                    # shard gone: run on the caller
         return box, done
@@ -335,7 +641,7 @@ class _Shard:
     def close(self):
         with self._lock:
             self._closed = True
-            self._q.put(None)
+            self._q.close()
 
     def queued(self) -> int:
         return self._q.qsize()
@@ -607,13 +913,21 @@ class ServiceGateway:
         # executes scatter items inline (sequentially) on the dispatching
         # session thread; single/batch envelopes are unaffected either way
         self.workers = workers
-        self._shards: List[_Shard] = [_Shard(i) for i in range(workers)]
+        # per-identity QoS state (docs/protocol.md §10): token buckets gate
+        # admission, weights steer the WFQ shards / fleet fair gates, and
+        # _cid_names resolves an envelope's client id back to its CA
+        # identity (the tenant key) without re-walking the channel table
+        self._tenant_buckets: Dict[str, TokenBucket] = {}
+        self._tenant_weights: Dict[str, float] = {}
+        self._cid_names: Dict[int, str] = {}
+        self._shards: List[_Shard] = [
+            _Shard(i, weight_of=self._tenant_weight) for i in range(workers)]
         self._mux: Optional["CallCoalescer"] = None
         self._fleets: Dict[str, "ServiceFleet"] = {}
         self.stats = {"requests": 0, "responses": 0, "macs_verified": 0,
                       "rejected": 0, "deduped": 0, "sheds": 0,
                       "restarts": 0, "crashes": 0, "scatter_envelopes": 0,
-                      "expired": 0, "overloaded": 0}
+                      "expired": 0, "overloaded": 0, "rate_limited": 0}
 
         if isinstance(transport, str):
             from repro.core import ALL_TRANSPORTS
@@ -813,6 +1127,64 @@ class ServiceGateway:
             svc.brownout = bo
             return bo
 
+    # -- multi-tenant QoS (docs/protocol.md §10) -----------------------------
+    def set_rate_limit(self, identity: str, *, rate: float,
+                       burst: Optional[float] = None) -> TokenBucket:
+        """Install (or replace) the per-identity token bucket: ``identity``
+        (the CA name) may sustain ``rate`` requests/second with bursts up
+        to ``burst`` (default ``rate``). Envelopes past the bucket shed
+        with typed :class:`RateLimited` carrying the refill ``retry_after``
+        — BEFORE the breaker, brownout or any queue is charged, so a
+        rate-limited tenant consumes nothing but the admission check."""
+        bucket = TokenBucket(rate, burst if burst is not None else rate)
+        with self._glock:
+            self._tenant_buckets[identity] = bucket
+        return bucket
+
+    def set_tenant_weight(self, identity: str, weight: float) -> None:
+        """Set ``identity``'s WFQ weight (default 1.0) — its long-run share
+        of shard execution and fleet in-flight slots relative to other
+        backlogged tenants (docs/protocol.md §10)."""
+        if weight <= 0:
+            raise ValueError("tenant weight must be > 0")
+        with self._glock:
+            self._tenant_weights[identity] = float(weight)
+
+    def _tenant_weight(self, key) -> float:
+        return self._tenant_weights.get(key, 1.0)
+
+    def _admit_identity_name(self, name: Optional[str], n: int = 1) -> None:
+        """Token-bucket admission for ``n`` request units under CA identity
+        ``name``. Raises :class:`RateLimited` (with ``retry_after``) on
+        shed; identities with no configured bucket always admit."""
+        if name is None:
+            return
+        bucket = self._tenant_buckets.get(name)
+        if bucket is None:
+            return
+        wait = bucket.try_take(n)
+        if wait > 0.0:
+            self._bump_n("rate_limited", n)
+            raise RateLimited(
+                f"identity {name!r} rate limited "
+                f"({bucket.rate:g}/s, burst {bucket.burst:g})",
+                retry_after=wait)
+
+    def _admit_identity(self, cid: int, n: int = 1) -> None:
+        """Envelope-side admission: resolve the client id to its CA
+        identity and charge its bucket (see :meth:`_admit_identity_name`)."""
+        self._admit_identity_name(self._cid_names.get(cid), n)
+
+    def qos_stats(self) -> Dict[str, Dict[str, float]]:
+        """Per-tenant bucket observability: admitted/shed counts and the
+        current token level."""
+        with self._glock:
+            buckets = dict(self._tenant_buckets)
+        return {name: {"rate": b.rate, "burst": b.burst,
+                       "tokens": b.tokens(), "admitted": b.admitted,
+                       "shed": b.shed}
+                for name, b in buckets.items()}
+
     def close(self):
         if self._mux is not None:
             self._mux.close()
@@ -858,6 +1230,8 @@ class ServiceGateway:
         with self._glock:
             old = self._channels.get((client.cid, svc.sid))
             self._channels[(client.cid, svc.sid)] = chan
+            # cid → CA identity, the tenant key for QoS admission/WFQ
+            self._cid_names[client.cid] = client.name
         if old is not None:             # re-key: retire the replaced grant
             self.registry.retire(old.client_key)
         return chan
@@ -891,6 +1265,7 @@ class ServiceGateway:
                       if k[0] == client.cid]
             for k, ch in doomed:
                 self._channels.pop(k, None)
+            self._cid_names.pop(client.cid, None)
         for _, ch in doomed:
             self.registry.retire(ch.client_key)
 
@@ -949,7 +1324,9 @@ class ServiceGateway:
                 svc.done.popitem(last=False)
 
     def _run_guarded(self, svc: _Service, payload: np.ndarray,
-                     deadline: Optional[float] = None) -> np.ndarray:
+                     deadline: Optional[float] = None,
+                     identity: Optional[str] = None,
+                     priority: int = framing.PRIO_NORMAL) -> np.ndarray:
         """Run the handler behind the circuit breaker with failure
         accounting — the one execution core shared by the single, batch
         and scatter paths, so breaker semantics cannot diverge.
@@ -957,9 +1334,14 @@ class ServiceGateway:
         Deadline shed comes FIRST and outside the try block: expired work
         is dropped before execution (docs/protocol.md §9) and a shed is
         neither a handler failure (no breaker charge) nor a brownout
-        admission. While the handler runs, the propagated deadline is
-        published thread-locally (``current_deadline``) so downstream hops
-        (fleet dispatch, EngineService waits) compute against it."""
+        admission. Rate-limit sheds (docs/protocol.md §10) happen in the
+        dispatch layer BEFORE this core is reached, so a ``RateLimited``
+        tenant never charges the breaker or brownout either. While the
+        handler runs, the propagated deadline and the caller's QoS context
+        (CA identity + frame priority class) are published thread-locally
+        (``current_deadline`` / ``current_identity`` / ``current_priority``)
+        so downstream hops (fleet dispatch, EngineService admission)
+        compute against them."""
         if deadline is not None and time.monotonic() >= deadline:
             self._bump("expired")
             raise DeadlineExpired(
@@ -974,6 +1356,7 @@ class ServiceGateway:
                 self._bump("overloaded")
                 raise
         prev = _push_deadline(deadline)
+        qprev = _push_qos(identity, priority)
         t0 = time.perf_counter()
         ok = False
         try:
@@ -988,6 +1371,7 @@ class ServiceGateway:
             self._service_failure(svc)
             raise
         finally:
+            _pop_qos(qprev)
             _pop_deadline(prev)
             if bo is not None:
                 bo.done(1, (time.perf_counter() - t0) * 1e3, ok=ok)
@@ -996,7 +1380,8 @@ class ServiceGateway:
 
     def _invoke(self, svc: _Service, chan: Channel, cid: int, token: int,
                 fseq: int, payload: np.ndarray,
-                deadline: Optional[float] = None) -> np.ndarray:
+                deadline: Optional[float] = None,
+                priority: int = framing.PRIO_NORMAL) -> np.ndarray:
         """Run the service handler behind the circuit breaker + dedup cache.
         Returns the response payload; updates ``chan.server_seq``."""
         cached = self._dedup_get(svc, cid, token)
@@ -1013,13 +1398,16 @@ class ServiceGateway:
         if fseq != chan.server_seq:
             raise framing.FrameError(
                 f"sequence mismatch (got {fseq}, want {chan.server_seq})")
-        resp = self._run_guarded(svc, payload, deadline)
+        resp = self._run_guarded(svc, payload, deadline,
+                                 identity=self._cid_names.get(cid),
+                                 priority=priority)
         self._dedup_put(svc, cid, token, resp)
         chan.server_seq = (fseq + 1) & 0xFFFFFFFF
         return resp
 
     def _invoke_batch(self, svc: _Service, chan: Channel, parsed,
-                      deadlines=None) -> list:
+                      deadlines=None, priorities=None,
+                      identity: Optional[str] = None) -> list:
         """Execute a verified batch. ``parsed`` holds payload arrays with
         FrameError objects in failed positions (verify_batch strict=False);
         those pass through untouched. Every consumed item advances
@@ -1031,9 +1419,13 @@ class ServiceGateway:
         positional, ``None`` = unbounded) shed expired items pre-execution
         with a per-slot ``DeadlineExpired``; the batch handler runs under
         the cohort's TIGHTEST live deadline (thread-local), matching the
-        coalescer's budget model."""
+        coalescer's budget model. ``priorities`` (positional lane-12
+        classes) publish the cohort's MOST URGENT live class thread-locally
+        on the native path — same "tightest wins" rule as the deadline."""
         if deadlines is None:
             deadlines = [None] * len(parsed)
+        if priorities is None:
+            priorities = [framing.PRIO_NORMAL] * len(parsed)
         results = list(parsed)
         now = time.monotonic()
         good = []
@@ -1052,6 +1444,9 @@ class ServiceGateway:
             live = [d for i, _ in good
                     if (d := deadlines[i]) is not None]
             prev = _push_deadline(min(live) if live else None)
+            qprev = _push_qos(identity,
+                              min((priorities[i] for i, _ in good),
+                                  key=priority_rank))
             t0 = time.perf_counter()
             bok = False
             admitted = False
@@ -1089,6 +1484,7 @@ class ServiceGateway:
                 for i, _ in good:
                     results[i] = e
             finally:
+                _pop_qos(qprev)
                 _pop_deadline(prev)
                 if bo is not None and admitted:
                     bo.done(len(good), (time.perf_counter() - t0) * 1e3,
@@ -1096,7 +1492,9 @@ class ServiceGateway:
         else:
             for i, p in good:
                 try:
-                    results[i] = self._run_guarded(svc, p, deadlines[i])
+                    results[i] = self._run_guarded(svc, p, deadlines[i],
+                                                   identity=identity,
+                                                   priority=priorities[i])
                 except ServiceUnavailable as e:
                     self._bump("sheds")
                     results[i] = e
@@ -1122,6 +1520,10 @@ class ServiceGateway:
             if chan is None:
                 raise AccessViolation(
                     f"client {cid} holds no key for service {svc.name!r}")
+            # token-bucket admission: one unit per item, BEFORE the channel
+            # lock or any sequence slot is consumed — a rate-limited batch
+            # sheds whole with typed RateLimited and leaves nothing charged
+            self._admit_identity(cid, n_items)
             with chan.slock:
                 self.registry.check(chan.client_key, WRITE)
                 self.registry.check(svc.server_key, READ)
@@ -1149,7 +1551,13 @@ class ServiceGateway:
                 deadlines = [None if isinstance(p, framing.FrameError)
                              else _frame_deadline(f)
                              for f, p in zip(frames, parsed)]
-                results = self._invoke_batch(svc, chan, parsed, deadlines)
+                priorities = [framing.PRIO_NORMAL
+                              if isinstance(p, framing.FrameError)
+                              else _frame_priority(f)
+                              for f, p in zip(frames, parsed)]
+                results = self._invoke_batch(svc, chan, parsed, deadlines,
+                                             priorities,
+                                             self._cid_names.get(cid))
                 try:
                     self.registry.check(svc.server_key, WRITE)
                     self.registry.check(chan.client_key, READ)
@@ -1222,11 +1630,12 @@ class ServiceGateway:
             return [(idx, e) for idx, _, _ in members]
         out = []
         ok: list = []                   # (idx, seq, response payload)
+        identity = self._cid_names.get(cid)
         with chan.slock:
             base = chan.server_seq
             saw_fresh = False
             parseable = 0
-            runnable: list = []         # (idx, token, fseq, payload, dl)
+            runnable: list = []         # (idx, token, fseq, payload, dl, pr)
             try:
                 for k, (idx, token, frame) in enumerate(members):
                     try:
@@ -1256,7 +1665,8 @@ class ServiceGateway:
                                 f"sequence mismatch (got {fseq}, want "
                                 f"{(base + k) & 0xFFFFFFFF})")
                         runnable.append((idx, token, fseq, payload,
-                                         _frame_deadline(frame)))
+                                         _frame_deadline(frame),
+                                         _frame_priority(frame)))
                     except ServiceUnavailable as e:
                         self._bump("sheds")
                         out.append((idx, e))
@@ -1277,9 +1687,9 @@ class ServiceGateway:
                             live.append(item)
                     if live:
                         self._scatter_run_batch(svc, chan, cid, live,
-                                                ok, out)
+                                                ok, out, identity)
                 else:
-                    for idx, token, fseq, payload, dl in runnable:
+                    for idx, token, fseq, payload, dl, pr in runnable:
                         try:
                             # re-consult the window: an EARLIER item of this
                             # very envelope may have executed this token
@@ -1289,7 +1699,9 @@ class ServiceGateway:
                             if resp is not None:
                                 self._bump("deduped")
                             else:
-                                resp = self._run_guarded(svc, payload, dl)
+                                resp = self._run_guarded(svc, payload, dl,
+                                                         identity=identity,
+                                                         priority=pr)
                                 self._dedup_put(svc, cid, token, resp)
                             self.registry.check(svc.server_key, WRITE)
                             self.registry.check(chan.client_key, READ)
@@ -1320,12 +1732,15 @@ class ServiceGateway:
         return out
 
     def _scatter_run_batch(self, svc: _Service, chan: Channel, cid: int,
-                           runnable: list, ok: list, out: list) -> None:
+                           runnable: list, ok: list, out: list,
+                           identity: Optional[str] = None) -> None:
         """Execute a scatter channel-group's runnable items as ONE native
         ``batch_handler`` call (the batch envelope's execution model):
         one breaker admission, one cohort submission — per-item dedup
-        recording and post-execution capability checks preserved. Called
-        under ``chan.slock``."""
+        recording and post-execution capability checks preserved. The
+        cohort's tightest deadline AND most-urgent priority class publish
+        thread-locally for the handler's downstream hops. Called under
+        ``chan.slock``."""
         # duplicate tokens inside one envelope execute ONCE (the sequential
         # semantics): only each token's first occurrence enters the native
         # batch; later duplicates are answered from its response below
@@ -1345,6 +1760,9 @@ class ServiceGateway:
         bo = svc.brownout
         live = [d for item in unique if (d := item[4]) is not None]
         prev = _push_deadline(min(live) if live else None)
+        qprev = _push_qos(identity,
+                          min((item[5] for item in unique),
+                              key=priority_rank))
         t0 = time.perf_counter()
         bok = False
         admitted = False
@@ -1357,7 +1775,7 @@ class ServiceGateway:
                     self._bump("overloaded")
                     raise
                 admitted = True
-            outs = svc.batch_handler([p for _, _, _, p, _ in unique])
+            outs = svc.batch_handler([p for _, _, _, p, _, _ in unique])
             if len(outs) != len(unique):
                 raise TransportError(
                     f"batch handler returned {len(outs)} responses "
@@ -1376,11 +1794,12 @@ class ServiceGateway:
             out.extend((idx, e) for idx, *_ in runnable)
             return
         finally:
+            _pop_qos(qprev)
             _pop_deadline(prev)
             if bo is not None and admitted:
                 bo.done(len(unique), (time.perf_counter() - t0) * 1e3,
                         ok=bok)
-        for (idx, token, fseq, _, _), k in zip(runnable, slot_of):
+        for (idx, token, fseq, _, _, _), k in zip(runnable, slot_of):
             if isinstance(outs[k], BaseException):
                 # per-item typed error from the batch handler (a fleet
                 # replica's remote failure): this item's fate, not dedup'd
@@ -1433,6 +1852,10 @@ class ServiceGateway:
                 ofs = end
             if ofs != u.size:
                 raise framing.FrameError("trailing bytes after scatter items")
+            # token-bucket admission, one unit per item: the whole envelope
+            # sheds typed BEFORE any group runs or any channel's sequence
+            # slots are consumed (a RateLimited scatter is fully replayable)
+            self._admit_identity(cid, n_items)
             self._bump("scatter_envelopes")
             self._bump_n("requests", n_items)
             groups: "OrderedDict[int, list]" = OrderedDict()
@@ -1440,11 +1863,16 @@ class ServiceGateway:
                 groups.setdefault(sid, []).append((idx, token, frame))
             results: list = [None] * n_items
             pending = []
+            tenant = self._cid_names.get(cid)
             for sid, members in groups.items():
                 fn = (lambda s=sid, m=members: self._scatter_group(cid, s, m))
                 if self._shards:
+                    # WFQ flow = the submitting tenant, cost = group size:
+                    # one tenant's cohort backlog interleaves fairly with
+                    # other tenants' work on the shard (protocol.md §10)
                     pending.append(
-                        self._shards[sid % len(self._shards)].submit(fn))
+                        self._shards[sid % len(self._shards)]
+                        .submit(fn, key=tenant, cost=len(members)))
                 else:
                     pending.append(([(True, fn())], None))
             for box, done in pending:
@@ -1502,6 +1930,10 @@ class ServiceGateway:
             if chan is None:
                 raise AccessViolation(
                     f"client {cid} holds no key for service {svc.name!r}")
+            # per-identity token bucket (docs/protocol.md §10): shed typed
+            # BEFORE the channel lock / sequence slot — a rate-limited call
+            # charges nothing downstream (no breaker, brownout or dedup)
+            self._admit_identity(cid)
             with chan.slock:
                 # PKRU staging checks: the client may write the request
                 # region, the service may read it (revocation/epoch enforced)
@@ -1522,7 +1954,8 @@ class ServiceGateway:
                 fseq = int(frame[0][2])
                 self._bump("requests", "macs_verified")
                 resp = self._invoke(svc, chan, cid, token, fseq, payload,
-                                    _frame_deadline(frame))
+                                    _frame_deadline(frame),
+                                    _frame_priority(frame))
                 self.registry.check(svc.server_key, WRITE)
                 self.registry.check(chan.client_key, READ)
                 # response frame sealed in place behind the route words —
@@ -1639,7 +2072,8 @@ class GatewayClient:
 
     def call(self, service: str, payload: np.ndarray, *,
              token: Optional[int] = None,
-             timeout: Optional[float] = None) -> np.ndarray:
+             timeout: Optional[float] = None,
+             priority: int = framing.PRIO_NORMAL) -> np.ndarray:
         """One inline request/response. With coalescing enabled on the
         gateway (:meth:`ServiceGateway.enable_coalescing`), a plain call
         (``retries == 0``, no pinned token) is transparently folded into
@@ -1652,7 +2086,12 @@ class GatewayClient:
         sealed into the envelope's MAC-covered deadline word, and rides
         hop-by-hop to the replica (docs/protocol.md §9) — an expired call
         sheds with a typed :class:`DeadlineExpired` wherever it happens to
-        be, instead of burning a fixed per-hop transport timeout."""
+        be, instead of burning a fixed per-hop transport timeout.
+
+        ``priority`` (``framing.PRIO_HIGH`` / ``PRIO_NORMAL`` /
+        ``PRIO_BULK``) is sealed into the frame's MAC-covered lane-12 word
+        (docs/protocol.md §10): HIGH bypasses the coalescer wait window,
+        BULK donates its latency budget to batch filling."""
         payload = np.asarray(payload)
         deadline = None if timeout is None \
             else time.monotonic() + timeout
@@ -1663,7 +2102,12 @@ class GatewayClient:
                 and self.retries == 0
                 and not self._direct and mux.accepts(service)):
             self.open(service)          # the CALLER's own CA/ACL gate
-            return mux.call(service, payload, deadline=deadline)
+            # the cohort rides the CARRIER's cid on the wire, so the
+            # tenant bucket must be charged HERE, against the true caller
+            # — otherwise the mux would launder rate limits (§10)
+            self.gw._admit_identity_name(self.name)
+            return mux.call(service, payload, deadline=deadline,
+                            priority=priority)
         if token is None:
             token = next(self._tokens) & 0xFFFFFFFF \
                 or (next(self._tokens) & 0xFFFFFFFF)
@@ -1677,7 +2121,7 @@ class GatewayClient:
             chan = self.open(service)
             try:
                 return self._call_once(chan, payload, token,
-                                       deadline=deadline)
+                                       deadline=deadline, priority=priority)
             except AccessViolation as e:
                 # someone's revocation (or a supervisor's release/join)
                 # bumped the service-domain epoch; a still-certified
@@ -1765,7 +2209,7 @@ class GatewayClient:
                     for _ in range(n)]
 
     def call_many(self, items, return_exceptions: bool = False,
-                  tokens=None, deadlines=None) -> list:
+                  tokens=None, deadlines=None, priorities=None) -> list:
         """Scatter call: N (service, payload) pairs in ONE envelope / ONE
         transport round trip, executed across the gateway's worker shards —
         with ``workers=N`` the items' handlers run concurrently per
@@ -1787,7 +2231,11 @@ class GatewayClient:
         ``None``) seals each item's remaining budget into its frame's
         MAC-covered deadline word; the WIRE round trip is bounded by the
         cohort's tightest member so one short-deadline item cannot be held
-        hostage by the transport default (docs/protocol.md §9)."""
+        hostage by the transport default (docs/protocol.md §9).
+
+        ``priorities`` (positional lane-12 classes, default ``PRIO_NORMAL``)
+        seals each item's priority into its frame's MAC-covered word
+        (docs/protocol.md §10)."""
         items = [(s, np.ascontiguousarray(np.asarray(p))) for s, p in items]
         if not items:
             return []
@@ -1796,6 +2244,11 @@ class GatewayClient:
         if deadlines is not None and len(deadlines) != len(items):
             raise ValueError(
                 f"{len(deadlines)} deadlines for {len(items)} items")
+        if priorities is None:
+            priorities = [framing.PRIO_NORMAL] * len(items)
+        elif len(priorities) != len(items):
+            raise ValueError(
+                f"{len(priorities)} priorities for {len(items)} items")
         timeout: Optional[float] = None
         dl_us = [0] * len(items)
         if deadlines is not None:
@@ -1829,42 +2282,45 @@ class GatewayClient:
                     _ROUTE_BYTES + r * framing.LANES * 4 for r in rows_list)
 
                 def fill(dst, items=items, seqs=seqs, tokens=tokens,
-                         rows_list=rows_list, chans=chans, dl_us=dl_us):
+                         rows_list=rows_list, chans=chans, dl_us=dl_us,
+                         priorities=priorities):
                     u = dst.view("<u4")
                     u[:4] = [GW_SCAT_MAGIC, self.cid, len(items), 0]
                     ofs = 4
                     groups: Dict[str, list] = {}
-                    for (service, p), seq, token, rows, du in zip(
-                            items, seqs, tokens, rows_list, dl_us):
+                    for (service, p), seq, token, rows, du, pr in zip(
+                            items, seqs, tokens, rows_list, dl_us,
+                            priorities):
                         chan = chans[service]
                         u[ofs:ofs + 4] = [GW_MAGIC, chan.sid, token, 0]
                         buf = u[ofs + 4: ofs + 4 + rows * framing.LANES] \
                             .reshape(rows, framing.LANES)
                         groups.setdefault(service, []).append(
-                            (buf, p, seq, du))
+                            (buf, p, seq, du, pr))
                         ofs += 4 + rows * framing.LANES
                     for service, members in groups.items():
                         framing.seal_into_batch(
-                            [b for b, _, _, _ in members],
-                            [p for _, p, _, _ in members],
+                            [b for b, _, _, _, _ in members],
+                            [p for _, p, _, _, _ in members],
                             seed=chans[service].seed,
-                            seqs=[q for _, _, q, _ in members],
+                            seqs=[q for _, _, q, _, _ in members],
                             mac_impl=self.gw._batch_mac,
-                            deadlines_us=[d for _, _, _, d in members])
+                            deadlines_us=[d for _, _, _, d, _ in members],
+                            priorities=[r for _, _, _, _, r in members])
 
                 # mpklint: disable=MPK002 reason=client lock IS the per-session serializer (spec: sessions are serial per client)
                 raw = self._session.request_into(total, fill,
                                                  timeout=timeout)
             else:
                 parts = [_scatter_route(self.cid, len(items))]
-                for (service, p), seq, token, du in zip(items, seqs,
-                                                        tokens, dl_us):
+                for (service, p), seq, token, du, pr in zip(
+                        items, seqs, tokens, dl_us, priorities):
                     chan = chans[service]
                     parts.append(np.array([GW_MAGIC, chan.sid, token, 0],
                                           "<u4").view(np.uint8))
                     frame = framing.build_frame(p, seed=chan.seed, seq=seq,
                                                 mac_impl=self.gw._mac,
-                                                deadline_us=du)
+                                                deadline_us=du, priority=pr)
                     parts.append(frame.reshape(-1).view(np.uint8))
                 # mpklint: disable=MPK002 reason=client lock IS the per-session serializer (spec: sessions are serial per client)
                 raw = self._session.request(np.concatenate(parts),
@@ -2010,7 +2466,8 @@ class GatewayClient:
 
     def _call_once(self, chan: Channel, payload: np.ndarray,
                    token: int = 0,
-                   deadline: Optional[float] = None) -> np.ndarray:
+                   deadline: Optional[float] = None,
+                   priority: int = framing.PRIO_NORMAL) -> np.ndarray:
         # the remaining budget (not a fresh constant) bounds this attempt's
         # wire timeout and is sealed into the envelope's deadline word —
         # the hop-by-hop propagation contract (docs/protocol.md §9). The
@@ -2038,13 +2495,13 @@ class GatewayClient:
                 env_nbytes = _ROUTE_BYTES + frows * framing.LANES * 4
 
                 def fill(dst, p=p, frows=frows, chan=chan, token=token,
-                         deadline_us=deadline_us):
+                         deadline_us=deadline_us, priority=priority):
                     u = dst.view("<u4")
                     u[:4] = [GW_MAGIC, chan.sid, self.cid, token]
                     framing.seal_into(
                         u[4:].reshape(frows, framing.LANES), p,
                         seed=chan.seed, seq=chan.seq, mac_impl=self.gw._mac,
-                        deadline_us=deadline_us)
+                        deadline_us=deadline_us, priority=priority)
 
                 # mpklint: disable=MPK002 reason=client lock IS the per-session serializer (spec: sessions are serial per client)
                 raw = self._session.request_into(env_nbytes, fill,
@@ -2053,7 +2510,8 @@ class GatewayClient:
                 env = _seal_envelope([GW_MAGIC, chan.sid, self.cid, token],
                                      payload, seed=chan.seed, seq=chan.seq,
                                      mac_impl=self.gw._mac,
-                                     deadline_us=deadline_us)
+                                     deadline_us=deadline_us,
+                                     priority=priority)
                 # mpklint: disable=MPK002 reason=client lock IS the per-session serializer (spec: sessions are serial per client)
                 raw = self._session.request(env, timeout=timeout)
             resp = np.ascontiguousarray(np.asarray(raw)) \
@@ -2090,15 +2548,17 @@ class GatewayClient:
 class _PendingCall:
     """One caller's parked inline call while it rides a cohort."""
 
-    __slots__ = ("service", "payload", "token", "deadline", "event",
-                 "result", "error")
+    __slots__ = ("service", "payload", "token", "deadline", "priority",
+                 "event", "result", "error")
 
     def __init__(self, service: str, payload: np.ndarray, token: int,
-                 deadline: Optional[float] = None):
+                 deadline: Optional[float] = None,
+                 priority: int = framing.PRIO_NORMAL):
         self.service = service
         self.payload = payload
         self.token = token
         self.deadline = deadline        # absolute monotonic, None = no budget
+        self.priority = priority        # lane-12 class (protocol.md §10)
         self.event = threading.Event()
         self.result: Optional[np.ndarray] = None
         self.error: Optional[BaseException] = None
@@ -2201,7 +2661,8 @@ class CallCoalescer:
             return False
 
     def call(self, service: str, payload: np.ndarray,
-             deadline: Optional[float] = None) -> np.ndarray:
+             deadline: Optional[float] = None,
+             priority: int = framing.PRIO_NORMAL) -> np.ndarray:
         """Fold one inline call into the next cohort; block for ITS result
         (or raise its typed error). The caller's wait bound DERIVES from
         its propagated deadline when it has one — remaining budget, plus
@@ -2211,11 +2672,15 @@ class CallCoalescer:
         two transport attempts (the cohort's wire trip + the liveness
         fallback's shared replay budget) plus window and slack: every
         term is a budget some layer actually spends, no bare constants
-        (docs/protocol.md §9)."""
+        (docs/protocol.md §9). ``priority`` steers the batching window
+        (§10): a PRIO_HIGH arrival collapses the wait to zero — the cohort
+        dispatches with whatever has gathered — while an all-PRIO_BULK
+        cohort always waits the full ``max_wait_us`` to fill."""
         if self._stop.is_set():
             raise TransportError("coalescer is closed")
         entry = _PendingCall(service, np.asarray(payload),
-                             self._carrier.mint_tokens(1)[0], deadline)
+                             self._carrier.mint_tokens(1)[0], deadline,
+                             priority)
         with self._cond:
             # re-check under the lock: close() sets _stop under it too, so
             # an entry can never slip in after close() drained the queue
@@ -2253,6 +2718,27 @@ class CallCoalescer:
             return 0.0                  # coalescing can't pay — don't wait
         return min(cap, gap * (self.max_batch - 1))
 
+    def _priority_window_s(self) -> float:
+        """The batching window under the cohort's priority mix
+        (docs/protocol.md §10). Called under the condition lock.
+
+        * any PRIO_HIGH pending → 0 — a latency-sensitive call never
+          donates its budget to batch filling; the cohort goes now;
+        * all PRIO_BULK → the full ``max_wait_us`` cap — throughput
+          traffic always waits out the window so cohorts fill;
+        * mixed/normal → the adaptive EWMA window (§5.4), unchanged.
+        """
+        ranks = [priority_rank(e.priority) for e in self._pending]
+        if min(ranks) == _PRIO_RANK[framing.PRIO_HIGH]:
+            return 0.0
+        if max(ranks) == min(ranks) == _PRIO_RANK[framing.PRIO_BULK]:
+            return self.max_wait_us / 1e6
+        return self._window_s()
+
+    def _has_high(self) -> bool:
+        return any(priority_rank(e.priority)
+                   == _PRIO_RANK[framing.PRIO_HIGH] for e in self._pending)
+
     # -- drainer ------------------------------------------------------------
     def _run(self):
         while True:
@@ -2261,15 +2747,31 @@ class CallCoalescer:
                     if self._stop.is_set():
                         return
                     self._cond.wait(0.5)
-                deadline = time.monotonic() + self._window_s()
+                deadline = time.monotonic() + self._priority_window_s()
                 while (len(self._pending) < self.max_batch
                        and not self._stop.is_set()):
+                    if self._has_high():
+                        break           # a HIGH arrival ends the window NOW
                     remaining = deadline - time.monotonic()
                     if remaining <= 0:
                         break
                     self._cond.wait(remaining)
-                batch = self._pending[: self.max_batch]
-                del self._pending[: len(batch)]
+                if len(self._pending) > self.max_batch:
+                    # overflow cohort: urgent classes board first, arrival
+                    # order preserved within a class (stable selection);
+                    # the bumped tail keeps its relative order for the
+                    # next cohort
+                    take = sorted(sorted(
+                        range(len(self._pending)),
+                        key=lambda i: (priority_rank(
+                            self._pending[i].priority), i))
+                        [: self.max_batch])
+                    batch = [self._pending[i] for i in take]
+                    for i in reversed(take):
+                        del self._pending[i]
+                else:
+                    batch = self._pending[:]
+                    self._pending.clear()
             try:
                 self._execute(batch)
             except BaseException as e:  # noqa: B036 — never strand a caller
@@ -2293,12 +2795,13 @@ class CallCoalescer:
         items = [(e.service, e.payload) for e in batch]
         tokens = [e.token for e in batch]
         deadlines = [e.deadline for e in batch]
+        priorities = [e.priority for e in batch]
         rekeyed = False
         while True:
             try:
                 results = [self._own(r) for r in self._carrier.call_many(
                     items, return_exceptions=True, tokens=tokens,
-                    deadlines=deadlines)]
+                    deadlines=deadlines, priorities=priorities)]
                 break
             except AccessViolation as e:
                 # pre-dispatch stale epoch (carrier channel open): re-key
@@ -2326,7 +2829,8 @@ class CallCoalescer:
                 try:
                     self._carrier.reopen(entry.service)
                     res = self._own(self._carrier.call(
-                        entry.service, entry.payload, token=entry.token))
+                        entry.service, entry.payload, token=entry.token,
+                        priority=entry.priority))
                     self.stats["rekeys"] += 1
                 except Exception as e2:
                     res = e2
@@ -2374,7 +2878,8 @@ class CallCoalescer:
                 # (wire waits stay clamped per attempt in _call_once)
                 out.append(self._own(self._carrier.call(
                     entry.service, entry.payload, token=entry.token,
-                    timeout=per_item * (self._carrier.retries + 1))))
+                    timeout=per_item * (self._carrier.retries + 1),
+                    priority=entry.priority)))
             except Exception as e:          # noqa: PERF203 — per-item fate
                 out.append(e)
         return out
@@ -2585,9 +3090,13 @@ class ServiceFleet:
         self._hedge_quantile = 0.95
         self.hedge_budget: Optional[RetryBudget] = None
         self._lat_ms: "deque" = deque(maxlen=HEDGE_RESERVOIR)
+        # per-tenant WFQ over replica in-flight slots (enable_fair_queue):
+        # OFF by default
+        self._fair_gate: Optional[_FairGate] = None
         self.stats = {"routed": 0, "cohorts": 0, "rerouted": 0,
                       "crashes": 0, "drains": 0, "joins": 0,
-                      "expired": 0, "hedges_fired": 0, "hedges_won": 0}
+                      "expired": 0, "hedges_fired": 0, "hedges_won": 0,
+                      "fair_queued": 0}
 
     # -- membership ---------------------------------------------------------
     def add(self, handler: Handler, *,
@@ -2690,6 +3199,45 @@ class ServiceFleet:
             self.hedge_budget = budget if budget is not None \
                 else RetryBudget()
             return self.hedge_budget
+
+    def enable_fair_queue(self, capacity: float, *,
+                          quantum: float = WFQ_QUANTUM) -> _FairGate:
+        """Turn on weighted fair queuing over the fleet's in-flight slots
+        (docs/protocol.md §10): at most ``capacity`` request units in
+        flight fleet-wide, with slots granted across backlogged tenants
+        by deficit round-robin under the gateway's per-tenant weights
+        (:meth:`ServiceGateway.set_tenant_weight`). One tenant's cohort
+        backlog can then delay another tenant by at most one cohort per
+        round instead of monopolizing every replica. → the gate (for
+        observability)."""
+        with self._lock:
+            if self._fair_gate is not None:
+                raise RuntimeError(
+                    f"fair queue already enabled for fleet {self.name!r}")
+            gate = _FairGate(capacity, weight_of=self.gw._tenant_weight,
+                             quantum=quantum)
+            self._fair_gate = gate
+            return gate
+
+    def _fair_acquire(self, cost: int,
+                      deadline: Optional[float]) -> Optional[_FairGate]:
+        """Acquire the fair gate (when enabled) for ``cost`` units under
+        the calling tenant's flow. → the gate to release, or None when
+        fair queuing is off. Sheds typed when the deadline expires while
+        parked (nothing charged)."""
+        gate = self._fair_gate
+        if gate is None:
+            return None
+        key = current_identity() or "<anon>"
+        with self._lock:
+            self.stats["fair_queued"] += cost
+        if not gate.acquire(key, cost, deadline):
+            with self._lock:
+                self.stats["expired"] += cost
+            raise DeadlineExpired(
+                f"service {self.name!r}: deadline expired while queued "
+                f"at the fair gate — shed before routing")
+        return gate
 
     def _hedge_after(self) -> Optional[float]:
         """Current hedge delay in seconds, or None when hedging is off /
@@ -2805,8 +3353,23 @@ class ServiceFleet:
         binding: the request has a single wire send either way, so
         hedging can never double-execute. Deliberately does NOT tighten
         the replica wire timeout itself: a mid-exchange ``ResponseTimeout``
-        poisons the session and would retire a healthy replica."""
+        poisons the session and would retire a healthy replica.
+
+        With :meth:`enable_fair_queue` on, routing is preceded by a
+        per-tenant DRR grant of one in-flight slot (docs/protocol.md §10)
+        keyed on the calling identity (``current_identity``), so a noisy
+        tenant's backlog parks at the gate instead of saturating every
+        replica."""
         deadline = current_deadline()
+        gate = self._fair_acquire(1, deadline)
+        try:
+            return self._dispatch_routed(payload, deadline)
+        finally:
+            if gate is not None:
+                gate.release(1)
+
+    def _dispatch_routed(self, payload: np.ndarray,
+                         deadline: Optional[float]) -> np.ndarray:
         attempts = 0
         hedged = False
         exclude: Optional[int] = None
@@ -2845,6 +3408,12 @@ class ServiceFleet:
                 finally:
                     rep.rlock.release()
                 ok = True
+                # every completed primary refills the hedge budget — even
+                # when the bucket ran dry mid-storm (RetryBudget earning is
+                # unconditional), so hedging recovers once load normalizes
+                # instead of staying disabled forever
+                if self.hedge_budget is not None:
+                    self.hedge_budget.note_primary()
                 self._observe_latency((time.perf_counter() - t0) * 1e3)
                 if hedged:
                     with self._lock:
@@ -2886,11 +3455,22 @@ class ServiceFleet:
         thread-local set by the gateway's batch execution core): a cohort
         that expires while QUEUED for its replica is shed typed before
         the wire. Cohorts never hedge — a cohort binds WHOLE to one
-        replica by design (docs/protocol.md §9)."""
+        replica by design (docs/protocol.md §9). With
+        :meth:`enable_fair_queue` on, the cohort first takes ``n`` units
+        (clamped to the gate's capacity) under its tenant's DRR flow."""
         n = len(payloads)
         deadline = current_deadline()
         with self._lock:
             self.stats["cohorts"] += 1
+        gate = self._fair_acquire(n, deadline)
+        try:
+            return self._dispatch_batch_routed(payloads, n, deadline)
+        finally:
+            if gate is not None:
+                gate.release(n)
+
+    def _dispatch_batch_routed(self, payloads, n: int,
+                               deadline: Optional[float]) -> list:
         attempts = 0
         while True:
             rep = self._route(weight=n)
@@ -2913,6 +3493,10 @@ class ServiceFleet:
                 finally:
                     rep.rlock.release()
                 ok = True
+                # cohort primaries refill the hedge budget too (earning is
+                # unconditional — see RetryBudget.note_primary)
+                if self.hedge_budget is not None:
+                    self.hedge_budget.note_primary()
             except _ReplicaGone:
                 attempts += 1
                 with self._lock:

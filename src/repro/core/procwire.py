@@ -267,6 +267,39 @@ class _ShmSegment:
 
 _DOORBELL_SPIN = 2              # bounded predicate probes before select()
 _WAIT_SLICE = 0.1               # max single select() slice (liveness re-check)
+
+# process-local ledger of live doorbell socket fds: every ProcDoorbell end
+# registers at creation and deregisters (fileno read BEFORE close — a
+# closed socket reports -1) on keep_writer/keep_reader/close. The test
+# suite's proc-hygiene fixture asserts this drains to zero, so a leaked
+# doorbell fd is caught at the owning test instead of as an eventual
+# EMFILE three suites later.
+_DOORBELL_FDS: set = set()
+_DOORBELL_FDS_LOCK = threading.Lock()
+
+
+def _track_doorbell(*socks) -> None:
+    with _DOORBELL_FDS_LOCK:
+        for s in socks:
+            fd = s.fileno()
+            if fd >= 0:
+                _DOORBELL_FDS.add(fd)
+
+
+def _untrack_doorbell(*socks) -> None:
+    with _DOORBELL_FDS_LOCK:
+        for s in socks:
+            fd = s.fileno()
+            if fd >= 0:
+                _DOORBELL_FDS.discard(fd)
+
+
+def open_doorbell_fds() -> int:
+    """Number of doorbell socketpair fds currently open in THIS process."""
+    with _DOORBELL_FDS_LOCK:
+        return len(_DOORBELL_FDS)
+
+
 _LIVENESS_SLICE = 0.25          # client waits re-consult the is_alive()
                                 # backstop at least this often: EOF is the
                                 # fast path, but a foreign fd keeping a dead
@@ -296,6 +329,7 @@ class ProcDoorbell:
     def __init__(self):
         self._rd, self._wr = socket.socketpair(
             socket.AF_UNIX, socket.SOCK_STREAM)
+        _track_doorbell(self._rd, self._wr)
         # the read end BLOCKS with a kernel-bounded slice (SO_RCVTIMEO):
         # one recv syscall is both the park and the drain, where a
         # non-blocking read end needs select + recv + recv-EAGAIN per
@@ -310,6 +344,7 @@ class ProcDoorbell:
     def keep_writer(self) -> None:
         """This process only rings; close the read end (the peer's EOF
         source is OUR death closing the write end)."""
+        _untrack_doorbell(self._rd)
         try:
             self._rd.close()
         # mpklint: disable=MPK105 reason=best-effort fd hygiene after fork
@@ -319,6 +354,7 @@ class ProcDoorbell:
     def keep_reader(self) -> None:
         """This process only waits; close the write end so the PEER's
         death (last writer gone) raises EOF here."""
+        _untrack_doorbell(self._wr)
         try:
             self._wr.close()
         # mpklint: disable=MPK105 reason=best-effort fd hygiene after fork
@@ -393,6 +429,7 @@ class ProcDoorbell:
                 return pred()
 
     def close(self) -> None:
+        _untrack_doorbell(self._rd, self._wr)
         for s in (self._rd, self._wr):
             try:
                 s.close()

@@ -154,6 +154,22 @@ class Overloaded(ServiceUnavailable):
         self.retry_after = float(retry_after)
 
 
+class RateLimited(Overloaded):
+    """Per-identity token-bucket admission shed (docs/protocol.md §10): the
+    calling CA identity exceeded its configured ``rate``/``burst`` envelope,
+    so the request was turned away BEFORE it charged any service capacity
+    (brownout in-flight weight, shard queues, replica slots — no
+    double-penalty). Carries the bucket's ``retry_after`` hint: the seconds
+    until the identity's bucket refills enough to admit one request.
+    Subclasses :class:`Overloaded` so back-off nets apply unchanged, but is
+    distinguishable — a rate-limit shed is the CALLER's doing, not the
+    service's, and no amount of failover heals it."""
+
+    def __init__(self, msg: str = "identity rate limited",
+                 retry_after: float = 0.0):
+        super().__init__(msg, retry_after=retry_after)
+
+
 class HandlerCrash(BaseException):
     """Fault-injection signal: a handler failure that KILLS the service
     thread instead of being propagated as a normal error response (a
@@ -177,6 +193,7 @@ _REMOTE_ERRORS: Dict[str, type] = {
     "ServiceCrashed": ServiceCrashed,
     "ServiceUnavailable": ServiceUnavailable,
     "Overloaded": Overloaded,
+    "RateLimited": RateLimited,
     "AccessViolation": AccessViolation,
     "FrameError": framing.FrameError,
 }
@@ -193,9 +210,11 @@ def _pack_error(exc: BaseException) -> bytes:
 def _raise_remote(blob: bytes):
     info = msgpack.unpackb(bytes(blob), raw=False)
     cls = _REMOTE_ERRORS.get(info.get("type", ""), TransportError)
-    if cls is Overloaded:
-        raise Overloaded(info.get("msg", "remote service error"),
-                         retry_after=info.get("retry_after", 0.0))
+    if issubclass(cls, Overloaded):
+        # the whole Overloaded family carries retry_after — reconstruct it
+        # so subclasses (RateLimited) keep their hint across the wire
+        raise cls(info.get("msg", "remote service error"),
+                  retry_after=info.get("retry_after", 0.0))
     raise cls(info.get("msg", "remote service error"))
 
 

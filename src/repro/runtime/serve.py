@@ -35,6 +35,9 @@ class Request:
     prompt: List[int]
     max_new: int = 16
     eos_id: Optional[int] = None
+    # lane-12 QoS class (framing.PRIO_*): urgent requests are admitted to
+    # freed decode slots ahead of older bulk work (docs/protocol.md §10)
+    priority: int = 0
     # filled by the engine
     generated: List[int] = field(default_factory=list)
     slot: int = -1
@@ -75,9 +78,17 @@ class ServingEngine:
         self.queue.append(req)
 
     def _admit(self):
+        from repro.core.gateway import priority_rank    # lazy: no cycle
         for b in range(self.B):
             if self.slots[b] is None and self.queue:
-                req = self.queue.pop(0)
+                # priority-aware admission (docs/protocol.md §10): the
+                # most urgent class boards first, FIFO within a class —
+                # the stable (rank, arrival) key means pure-FIFO behavior
+                # is unchanged when every request is PRIO_NORMAL
+                i = min(range(len(self.queue)),
+                        key=lambda k: (priority_rank(self.queue[k].priority),
+                                       k))
+                req = self.queue.pop(i)
                 req.slot = b
                 self.slots[b] = req
                 # reset slot: zero its cache rows + position
@@ -364,11 +375,17 @@ class EngineService:
         max_new, prompt = self._parse_req(req)
         if self._stop.is_set():
             raise RuntimeError("EngineService is closed")
+        # the caller's MAC-covered lane-12 class, published thread-locally
+        # by the gateway's execution core — urgent prompts board freed
+        # decode slots ahead of queued bulk work (docs/protocol.md §10)
+        from repro.core import gateway as _gw     # no import cycle: lazy
+        prio = _gw.current_priority()
         ev = threading.Event()
         with self._lock:
             rid = next(self._rid)
             self._events[rid] = ev
-            self.engine.submit(Request(rid=rid, prompt=prompt, max_new=max_new))
+            self.engine.submit(Request(rid=rid, prompt=prompt,
+                                       max_new=max_new, priority=prio))
         self._work.set()
         return self._await(rid, ev, self._deadline())
 
@@ -390,6 +407,8 @@ class EngineService:
         parsed = [self._parse_req(r) for r in reqs]
         if self._stop.is_set():
             raise RuntimeError("EngineService is closed")
+        from repro.core import gateway as _gw     # no import cycle: lazy
+        prio = _gw.current_priority()   # the cohort's most-urgent class
         waits = []
         with self._lock:
             self.cohorts.append(len(parsed))
@@ -398,7 +417,8 @@ class EngineService:
                 ev = threading.Event()
                 self._events[rid] = ev
                 self.engine.submit(
-                    Request(rid=rid, prompt=prompt, max_new=max_new))
+                    Request(rid=rid, prompt=prompt, max_new=max_new,
+                            priority=prio))
                 waits.append((rid, ev))
         self._work.set()
         deadline = self._deadline()

@@ -24,15 +24,16 @@ def key():
 
 
 @pytest.fixture(autouse=True, scope="module")
-def proc_hygiene():
+def proc_hygiene(request):
     """Per-module leak detector for the process-backed suites: after every
     test module, this process must own zero ``/dev/shm/mpk_<pid>_*``
-    segments and zero unreaped service children. procwire defers the final
+    segments, zero unreaped service children, AND zero doorbell socketpair
+    fds (procwire's per-session ledger). procwire defers the final
     segment close of a crashed child (the crash invariant pins in-flight
     slots), so the check first reaps (``active_children`` joins finished
     processes) and sweeps the deferred-close list, with a short retry loop
-    for teardowns that are still settling — then fails the module loudly
-    instead of letting a leak bill the next module's tests."""
+    for teardowns that are still settling — then fails loudly, naming the
+    owning module, instead of letting a leak bill the next module's tests."""
     yield
     import multiprocessing
 
@@ -46,10 +47,12 @@ def proc_hygiene():
         kids = multiprocessing.active_children()
         segs = ([f for f in os.listdir("/dev/shm") if f.startswith(mine)]
                 if os.path.isdir("/dev/shm") else [])
-        if not kids and not segs:
+        bells = procwire.open_doorbell_fds()
+        if not kids and not segs and not bells:
             return
         if time.monotonic() > deadline:
             pytest.fail(
-                f"proc hygiene: unreaped children={[k.pid for k in kids]} "
-                f"leaked shm segments={segs}")
+                f"proc hygiene ({request.module.__name__}): unreaped "
+                f"children={[k.pid for k in kids]} leaked shm "
+                f"segments={segs} open doorbell fds={bells}")
         time.sleep(0.05)

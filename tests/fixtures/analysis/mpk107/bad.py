@@ -1,0 +1,15 @@
+"""True positive: admission paths eating typed shed signals."""
+
+
+def dispatch(gw, payload):
+    try:
+        return gw.call("svc", payload)
+    except RateLimited:
+        return None                     # shed converted into a silent miss
+
+
+def _admit_identity(gw, cid):
+    try:
+        gw.bucket.take(1)
+    except (Overloaded, TransportError):
+        pass                            # back-pressure never reaches caller

@@ -1,0 +1,27 @@
+"""True negative: sheds re-raised, mapped, or caught off the admission
+path."""
+import logging
+
+
+def dispatch(gw, payload):
+    try:
+        return gw.call("svc", payload)
+    except RateLimited as e:
+        logging.warning("shed: retry in %.3fs", e.retry_after)
+        raise
+
+
+def submit(gw, payload):
+    try:
+        return gw.call("svc", payload)
+    except Overloaded as e:
+        return {"error": "overloaded", "retry_after": e.retry_after}
+
+
+def teardown(conns):
+    # not an admission-path name — best-effort cleanup is out of scope
+    for c in conns:
+        try:
+            c.close()
+        except TransportError:
+            pass

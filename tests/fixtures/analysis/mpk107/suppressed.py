@@ -1,0 +1,9 @@
+"""Suppressed: a probe call that is documented as fire-and-forget."""
+
+
+def call_probe(gw):
+    try:
+        gw.call("health", b"")
+    # mpklint: disable=MPK107 reason=liveness probe; shed means alive enough
+    except Overloaded:
+        pass

@@ -22,7 +22,7 @@ FIXTURES = ROOT / "tests" / "fixtures" / "analysis"
 BASELINE = ROOT / "analysis" / "baseline.json"
 
 FILE_RULES = ["MPK001", "MPK002", "MPK003", "MPK101", "MPK102", "MPK103",
-              "MPK104", "MPK105", "MPK106"]
+              "MPK104", "MPK105", "MPK106", "MPK107"]
 DIR_RULES = ["MPK201", "MPK202"]
 
 
